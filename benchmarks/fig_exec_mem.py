@@ -1,0 +1,24 @@
+"""Figures 7/8: execution-time (lognormal) and memory (Burr) distributions."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.workload import sample_apps
+
+
+def run(n_apps: int = 20000, seed: int = 1):
+    specs = sample_apps(n_apps, seed)
+    execs = np.array([s.exec_time_s for s in specs])
+    mem = np.array([s.memory_mb for s in specs])
+    rows = [
+        ("fig7_exec_median_s", float(np.median(execs)), 0.68),   # e^-0.38
+        ("fig7_frac_le_1s", float(np.mean(execs <= 1.0)), 0.50),
+        ("fig7_frac_le_60s", float(np.mean(execs <= 60.0)), 0.96),
+        ("fig7_lognormal_logmean", float(np.mean(np.log(execs))), -0.38),
+        ("fig7_lognormal_logstd", float(np.std(np.log(execs))), 2.36),
+        ("fig8_mem_median_mb", float(np.median(mem)), 170.0),
+        ("fig8_frac_le_400mb", float(np.mean(mem <= 400.0)), 0.90),
+        ("fig8_p90_over_p10", float(np.percentile(mem, 90)
+                                    / np.percentile(mem, 10)), 4.0),
+    ]
+    return rows

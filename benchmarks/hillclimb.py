@@ -1,0 +1,126 @@
+"""Perf hillclimbing driver (EXPERIMENTS.md §Perf).
+
+Runs named experiment variants against the three chosen cells and reports
+the roofline terms before/after, so every hypothesis -> change -> measure
+cycle is one command:
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --cell A --variant baseline
+  PYTHONPATH=src python -m benchmarks.hillclimb --cell A --variant bf16_comm
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# must run before jax init (module may be first to import jax)
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+from repro import configs
+from repro.configs.base import SHAPES
+from repro.launch import mesh as mesh_lib
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+CELLS = {
+    # most collective-bound + largest dense model
+    "A": ("qwen2-72b", "train_4k"),
+    # memory-bound big-vocab cell (d_model 1024, vocab 256k)
+    "D": ("seamless-m4t-medium", "train_4k"),
+    # the MoE (GShard dispatch) training cell
+    "B": ("qwen3-moe-30b-a3b", "train_4k"),
+    # the paper-representative serving cell (decode against a 32k cache)
+    "C": ("qwen2-72b", "decode_32k"),
+}
+
+# variant -> (cfg overrides, lower kwargs)
+VARIANTS = {
+    "baseline": ({}, {}),
+    "bf16_comm": ({}, {"cast_bf16": True}),                  # cell A
+    "moe_gather": ({"moe_impl": "gather"}, {}),              # cell B
+    "moe_gather_bf16": ({"moe_impl": "gather"}, {"cast_bf16": True}),
+    "moe_cap1": ({"moe_capacity_factor": 1.0}, {}),
+    "tp4_cap1": ({"moe_capacity_factor": 1.0}, {"mesh_shape": (64, 4)}),
+    "group2k": ({"moe_group_size": 2048}, {}),
+    "dist_decode": ({"use_kernels": False, "decode_shard_map": True}, {}),
+    # mesh rebalance: activation AG/AR bytes scale with (TP-1)/TP * n_coll;
+    # weight-gather bytes scale with 1/TP. At 72B the activations dominate
+    # by ~20x, so shrink TP 16 -> 4 and grow ZeRO-DP 16 -> 64.
+    "tp4": ({}, {"mesh_shape": (64, 4)}),
+    "tp8": ({}, {"mesh_shape": (32, 8)}),
+    "tp2": ({}, {"mesh_shape": (128, 2)}),
+    "tp2_bf16": ({}, {"mesh_shape": (128, 2), "cast_bf16": True}),
+    "chunked_xent": ({"chunked_xent": True}, {}),
+    "tp4_bf16": ({}, {"mesh_shape": (64, 4), "cast_bf16": True}),
+}
+
+
+def measure(arch, shape_name, overrides, lower_kwargs, multi_pod=False):
+    from repro.launch import dryrun as dr
+    lower_kwargs = dict(lower_kwargs)
+    mesh_shape = lower_kwargs.pop("mesh_shape", None)
+    if mesh_shape is not None:
+        import numpy as np
+        import jax
+        from jax.sharding import Mesh
+        n = int(np.prod(mesh_shape))
+        mesh = Mesh(np.asarray(jax.devices()[:n]).reshape(mesh_shape),
+                    ("data", "model"))
+    else:
+        mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    cfg = configs.get(arch)
+    ov = dict(overrides)
+    if ov.pop("decode_shard_map", None):
+        from repro.distributed import dist_decode
+        dist_decode.ENABLED = True
+    if ov:
+        cfg = cfg.with_(**ov)
+    shape = SHAPES[shape_name]
+    with mesh:
+        costs = dr.depth_scaled_costs(cfg, shape, mesh, **lower_kwargs)
+        compiled, model = dr._lower_one(cfg, shape, mesh, **lower_kwargs)
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    return {
+        "arch": arch, "shape": shape_name,
+        "flops": costs["flops"],
+        "bytes_accessed": costs["bytes_accessed"],
+        "collective_bytes": costs["collective_bytes"],
+        "collectives": costs["collectives"],
+        "compute_s": costs["flops"] / PEAK_FLOPS_BF16,
+        "memory_s": costs["bytes_accessed"] / HBM_BW,
+        "collective_s": costs["collective_bytes"] / ICI_BW,
+        "peak_gib": (mem.argument_size_in_bytes
+                     + mem.temp_size_in_bytes) / 2**30,
+        "upcast_gib": dr.cpu_upcast_bytes(hlo) / 2**30,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=sorted(CELLS))
+    ap.add_argument("--variant", required=True, choices=sorted(VARIANTS))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    arch, shape = CELLS[args.cell]
+    overrides, lower_kwargs = VARIANTS[args.variant]
+    r = measure(arch, shape, overrides, lower_kwargs, args.multi_pod)
+    r["cell"] = args.cell
+    r["variant"] = args.variant
+    dom = max(("compute_s", "memory_s", "collective_s"), key=lambda k: r[k])
+    print(f"{args.cell}:{arch}:{shape} variant={args.variant}")
+    print(f"  compute    {r['compute_s']:.4f}s")
+    print(f"  memory     {r['memory_s']:.4f}s")
+    print(f"  collective {r['collective_s']:.4f}s   <- dominant: {dom}")
+    print(f"  collectives: { {k: f'{v:.3e}' for k, v in r['collectives'].items()} }")
+    print(f"  peak/dev {r['peak_gib']:.1f} GiB (upcast artifact "
+          f"{r['upcast_gib']:.1f} GiB)")
+    if args.out:
+        with open(args.out, "a") as f:
+            f.write(json.dumps(r) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Kernel micro-benchmarks (CPU: the jnp oracle path gives meaningful
+relative numbers; the Pallas interpret path is correctness-only)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+
+def _bench(fn, *args, reps=10):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    r = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)
+
+    B, S, Hq, Hkv, D = 1, 1024, 8, 2, 64
+    q, k, v = r(B, Hq, S, D), r(B, Hkv, S, D), r(B, Hkv, S, D)
+    fn = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))
+    rows.append(("kernel_attention_ref_1k_us", _bench(fn, q, k, v), ""))
+
+    qd, kc, vc = r(B, Hkv, 4, D), r(B, Hkv, 8192, D), r(B, Hkv, 8192, D)
+    fn = jax.jit(lambda q, k, v: ref.decode_attention_ref(q, k, v, jnp.int32(8000)))
+    rows.append(("kernel_decode_ref_8k_us", _bench(fn, qd, kc, vc), ""))
+
+    b, l, h, p, n = 1, 1024, 8, 64, 64
+    x, dt = r(b, l, h, p), jnp.abs(r(b, l, h)) * 0.1
+    A = -jnp.abs(r(h))
+    Bm, Cm = r(b, l, n), r(b, l, n)
+    fn = jax.jit(lambda x, dt, A, Bm, Cm: ref.ssd_ref(x, dt, A, Bm, Cm, 128)[0])
+    rows.append(("kernel_ssd_ref_1k_us", _bench(fn, x, dt, A, Bm, Cm), ""))
+
+    a = jax.nn.sigmoid(r(2, 1024, 512)) * 0.98
+    bi = r(2, 1024, 512)
+    fn = jax.jit(lambda b_, a_: ref.rglru_ref(b_, a_)[0])
+    rows.append(("kernel_rglru_ref_1k_us", _bench(fn, bi, a), ""))
+    return rows

@@ -1,0 +1,128 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, three per-device time terms:
+
+  compute    = HLO_flops_per_dev / peak_flops        (197 TFLOP/s bf16)
+  memory     = HLO_bytes_per_dev / hbm_bw            (819 GB/s)
+  collective = collective_bytes_per_dev / ici_bw     (~50 GB/s/link)
+
+plus MODEL_FLOPS (6*N*D train / 2*N_active*D inference) and the useful-
+compute ratio MODEL_FLOPS / (HLO_flops * n_dev). The dominant term is the
+bottleneck the perf loop iterates on.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.configs.base import SHAPES
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
+
+
+def load_cells(paths=None) -> List[dict]:
+    paths = paths or [os.path.join(RESULTS_DIR, "dryrun_single.jsonl"),
+                      os.path.join(RESULTS_DIR, "dryrun_multi.jsonl")]
+    cells = []
+    for p in paths:
+        if not os.path.exists(p):
+            continue
+        with open(p) as f:
+            for line in f:
+                try:
+                    cells.append(json.loads(line))
+                except json.JSONDecodeError:
+                    pass
+    return cells
+
+
+def analyze(cell: dict) -> dict:
+    shape = SHAPES[cell["shape"]]
+    n_dev = cell["n_devices"]
+    compute_s = cell["flops"] / PEAK_FLOPS_BF16
+    memory_s = cell["bytes_accessed"] / HBM_BW
+    collective_s = cell["collective_bytes"] / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    # MODEL_FLOPS: 6*N*D training (N_active for MoE), 2*N_active*D inference
+    if shape.kind == "train":
+        tokens = shape.tokens
+        model_flops = 6.0 * cell["n_params_active"] * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.tokens
+        model_flops = 2.0 * cell["n_params_active"] * tokens
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        model_flops = 2.0 * cell["n_params_active"] * tokens
+    hlo_total = cell["flops"] * n_dev
+    useful = model_flops / hlo_total if hlo_total else 0.0
+
+    bound_s = max(terms.values())
+    # roofline fraction: achievable-step-time lower bound over the dominant
+    # term if it ran at peak = useful-model-time / bound-time
+    model_time = model_flops / (n_dev * PEAK_FLOPS_BF16)
+    frac = model_time / bound_s if bound_s > 0 else 0.0
+    return {
+        **{f"{k}_s": v for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_ratio": useful,
+        "roofline_fraction": frac,
+        "peak_gib_per_dev": cell["peak_bytes"] / 2**30,
+        # TPU-adjusted: subtract CPU bf16->f32 legalization artifacts, but
+        # never below the argument+output floor (the upcast estimate can
+        # over-count transients that don't coexist).
+        "peak_adj_gib_per_dev": max(
+            cell["peak_bytes"] - cell.get("cpu_upcast_bytes", 0.0),
+            cell.get("argument_size", 0.0) + cell.get("output_size", 0.0),
+        ) / 2**30,
+        "fits_16g": max(
+            cell["peak_bytes"] - cell.get("cpu_upcast_bytes", 0.0),
+            cell.get("argument_size", 0.0) + cell.get("output_size", 0.0),
+        ) < 16 * 2**30,
+    }
+
+
+def table(cells: Optional[List[dict]] = None) -> List[dict]:
+    cells = cells if cells is not None else load_cells()
+    out = []
+    for c in cells:
+        row = {"arch": c["arch"], "shape": c["shape"],
+               "mesh": c.get("mesh_name", c["mesh"]), **analyze(c)}
+        out.append(row)
+    return out
+
+
+def run():
+    """Benchmark-harness entry: emit key roofline stats per cell."""
+    rows = []
+    for r in table():
+        tag = f"{r['mesh']}:{r['arch']}:{r['shape']}"
+        rows.append((f"roofline_{tag}_dominant_term",
+                     {"compute": 0, "memory": 1, "collective": 2}[r["dominant"]],
+                     r["dominant"]))
+        rows.append((f"roofline_{tag}_fraction", r["roofline_fraction"], ""))
+    if not rows:
+        rows.append(("roofline_no_dryrun_results_found", 0.0,
+                     "run launch/dryrun.py --all first"))
+    return rows
+
+
+def markdown_table(mesh_name: str = "single-pod") -> str:
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | MODEL/HLO | roofline frac | peak GiB/dev (adj) |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in table():
+        if r["mesh"] != mesh_name:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2f} | "
+            f"{r['peak_gib_per_dev']:.1f} ({r['peak_adj_gib_per_dev']:.1f}) |")
+    return "\n".join(lines)

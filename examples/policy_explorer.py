@@ -1,0 +1,52 @@
+"""Policy design-space exploration: sweep the hybrid policy's knobs
+(histogram range, CV threshold, cutoff percentiles) and print the Pareto
+frontier — the tool you'd use to re-tune the policy for a new fleet.
+
+  PYTHONPATH=src python examples/policy_explorer.py [--apps 500]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import (FixedKeepAlivePolicy, HybridConfig, evaluate,
+                        generate_trace, pareto_frontier, simulate)
+from repro.core.histogram import HistogramConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--apps", type=int, default=500)
+    ap.add_argument("--days", type=float, default=7.0)
+    ap.add_argument("--seed", type=int, default=1)
+    args = ap.parse_args()
+
+    trace = generate_trace(args.apps, days=args.days, seed=args.seed)
+    points = []
+    for ka in (10, 30, 60, 120, 240):
+        points.append(evaluate(f"fixed-{ka}m",
+                               simulate(trace, FixedKeepAlivePolicy(ka))))
+    for rng in (60, 120, 240):
+        for cv in (0.5, 2.0, 4.0):
+            cfg = HybridConfig(
+                histogram=HistogramConfig(range_minutes=float(rng)),
+                cv_threshold=cv, use_arima=False)
+            points.append(evaluate(f"hyb-r{rng}-cv{cv:g}",
+                                   simulate(trace, cfg)))
+    for head, tail in ((0, 100), (5, 99), (10, 95)):
+        cfg = HybridConfig(histogram=HistogramConfig(
+            head_percentile=head, tail_percentile=tail), use_arima=False)
+        points.append(evaluate(f"hyb-cut[{head},{tail}]",
+                               simulate(trace, cfg)))
+
+    base = next(p for p in points if p.name == "fixed-10m").wasted_memory
+    frontier = {p.name for p in pareto_frontier(points)}
+    print(f"{'policy':>18s} {'cold% p75':>10s} {'rel.mem':>8s}  pareto")
+    for p in sorted(points, key=lambda p: p.wasted_memory):
+        star = "  *" if p.name in frontier else ""
+        print(f"{p.name:>18s} {p.cold_pct_p75:>9.1f}% "
+              f"{p.wasted_memory / base:>7.2f}x{star}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""End-to-end serverless model serving (the paper's kind of system, live).
+
+Real JAX models behind a warm pool driven by the hybrid histogram policy:
+requests arrive on a generated trace; cold starts do an actual weight
+device_put + executable-cache warmup, warm requests hit resident weights.
+Measures the realized cold/warm latency gap and the policy's hit rate, then
+compares against the fixed 10-minute keep-alive.
+
+  PYTHONPATH=src python examples/serve_serverless.py [--minutes 90] [--apps 6]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get, reduced
+from repro.core.policy import (FixedKeepAlivePolicy, HybridConfig,
+                               HybridHistogramPolicy)
+from repro.core.workload import generate_trace
+from repro.serving.engine import ServeEngine
+from repro.serving.registry import ModelEndpoint, Registry
+from repro.serving.warmpool import WarmPool
+
+MIN = 60.0
+
+
+def drive(policy_name, make_policy, trace, registry, max_events=150):
+    engine = ServeEngine(registry)
+    pool = WarmPool(registry, make_policy())
+    events = []
+    for i, spec in enumerate(trace.specs):
+        for t in trace.times[i]:
+            events.append((t * MIN, spec.app_id))
+    events.sort()
+    events = events[:max_events]
+
+    lat_cold, lat_warm = [], []
+    toks = jnp.zeros((1, 8), jnp.int32)
+    for t, app in events:
+        was_cold, _ = pool.on_request(app, t)
+        if was_cold and not engine.is_loaded(app):
+            engine.load(app)
+        if not engine.is_loaded(app):
+            engine.load(app)
+        _, wall = engine.generate(app, toks, max_new=4, max_len=16)
+        (lat_cold if was_cold else lat_warm).append(wall)
+        pool.on_request_end(app, t)
+        # mirror policy decisions onto the engine
+        st = pool.state[app]
+        if not st.loaded:
+            engine.unload(app)
+    stats = pool.finalize(events[-1][0] if events else 0.0)
+    total = stats.cold_starts + stats.warm_starts
+    print(f"[{policy_name}] requests={total} "
+          f"cold={stats.cold_starts} ({100 * stats.cold_starts / total:.1f}%) "
+          f"prewarms={stats.prewarms} "
+          f"resident GB-min={stats.resident_byte_seconds / 1e9 / 60:.2f}")
+    if lat_cold and lat_warm:
+        print(f"   measured latency: cold p50 {np.median(lat_cold) * 1e3:.1f} ms"
+              f" vs warm p50 {np.median(lat_warm) * 1e3:.1f} ms")
+    return stats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--apps", type=int, default=4)
+    ap.add_argument("--minutes", type=float, default=600.0,
+                    help="simulated minutes (virtual time is free)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    registry = Registry()
+    arch_ids = ["smollm-135m", "mamba2-2.7b", "recurrentgemma-2b",
+                "olmoe-1b-7b", "qwen2-7b", "seamless-m4t-medium"]
+    for i in range(args.apps):
+        cfg = reduced(get(arch_ids[i % len(arch_ids)]))
+        registry.register(ModelEndpoint(app_id=f"app-{i:06d}", cfg=cfg,
+                                        seed=i, weight_bytes=int(50e6)))
+    # periodic endpoints (period >> 10 min): the regime where the histogram
+    # policy's pre-warming beats any fixed keep-alive
+    import numpy as np_
+    from repro.core.workload import AppSpec, Trace
+    rng = np_.random.default_rng(args.seed)
+    specs, times = [], []
+    for i in range(args.apps):
+        period = float(rng.choice([15.0, 20.0, 30.0, 40.0]))
+        t = np_.arange(rng.uniform(0, 5), args.minutes, period)
+        specs.append(AppSpec(app_id=f"app-{i:06d}", pattern="periodic",
+                             rate_per_day=1440.0 / period,
+                             period_minutes=period, exec_time_s=0.5,
+                             memory_mb=100.0, n_functions=1,
+                             triggers=("timer",)))
+        times.append(t)
+    trace = Trace(specs=specs, times=times, duration_minutes=args.minutes)
+
+    print(f"serving {args.apps} endpoints over {args.minutes:g} simulated "
+          f"minutes (real model executions)\n")
+    hybrid = drive("hybrid", lambda: HybridHistogramPolicy(
+        HybridConfig(use_arima=False)), trace, registry)
+    fixed = drive("fixed-10m", lambda: FixedKeepAlivePolicy(10.0), trace,
+                  registry)
+    saving = 100 * (1 - hybrid.resident_byte_seconds
+                    / max(fixed.resident_byte_seconds, 1e-9))
+    print(f"\nhybrid policy memory saving vs fixed-10m: {saving:.1f}% "
+          f"(paper's OpenWhisk experiment: 15.6%)")
+
+
+if __name__ == "__main__":
+    main()

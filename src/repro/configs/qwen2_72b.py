@@ -1,0 +1,8 @@
+"""Qwen2-72B [arXiv:2407.10671] — dense GQA with QKV bias."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="qwen2-72b", family="dense",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, d_ff=29_568,
+    vocab=152_064, head_dim=128, qkv_bias=True, rope_theta=1e6,
+)

@@ -1,0 +1,19 @@
+"""Core: the paper's contribution — hybrid histogram cold-start policy."""
+from .histogram import AppHistogram, HistogramConfig, HistogramState, init_state
+from .policy import (FixedKeepAlivePolicy, HybridConfig, HybridHistogramPolicy,
+                     NoUnloadingPolicy, Policy, PolicyWindows, is_warm,
+                     loaded_idle_time)
+from .simulator import (SimResult, simulate, simulate_fixed_batch,
+                        simulate_hybrid_batch, simulate_scalar)
+from .workload import AppSpec, Trace, generate_trace, sample_apps
+from .metrics import PolicyPoint, evaluate, normalize_waste, pareto_frontier
+
+__all__ = [
+    "AppHistogram", "HistogramConfig", "HistogramState", "init_state",
+    "FixedKeepAlivePolicy", "HybridConfig", "HybridHistogramPolicy",
+    "NoUnloadingPolicy", "Policy", "PolicyWindows", "is_warm",
+    "loaded_idle_time", "SimResult", "simulate", "simulate_fixed_batch",
+    "simulate_hybrid_batch", "simulate_scalar", "AppSpec", "Trace",
+    "generate_trace", "sample_apps", "PolicyPoint", "evaluate",
+    "normalize_waste", "pareto_frontier",
+]

@@ -1,0 +1,207 @@
+"""Range-limited idle-time (IT) histograms, batched over applications.
+
+The center-piece of the paper's hybrid policy (Section 4.2): for each
+application we keep a compact histogram of observed idle times with 1-minute
+bins up to a configurable range (default 4 hours = 240 bins). ITs beyond the
+range are counted as out-of-bounds (OOB). From the in-bounds distribution the
+policy derives:
+
+  * pre-warming window  = head percentile (default 5th), *rounded down* to the
+    bin lower edge, then reduced by a margin (default 10%);
+  * keep-alive window   = tail percentile (default 99th), *rounded up* to the
+    bin upper edge, then increased by the margin. The keep-alive window is the
+    length of time the image stays loaded *after pre-warming*, i.e. it covers
+    [prewarm, tail].
+
+State is stored as JAX arrays shaped ``[n_apps, n_bins]`` so the entire fleet
+updates in one vectorized op (and, at scale, in the Pallas kernel in
+``repro.kernels.histogram``). A scalar host-side twin (`AppHistogram`) mirrors
+the semantics for the control-plane path and for differential testing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "HistogramConfig",
+    "HistogramState",
+    "init_state",
+    "record_idle_times",
+    "percentile_windows",
+    "AppHistogram",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class HistogramConfig:
+    """Configuration of the range-limited histogram policy component."""
+
+    bin_minutes: float = 1.0          # paper: 1-minute bins
+    range_minutes: float = 240.0      # paper: 4-hour default range
+    head_percentile: float = 5.0      # paper: 5th percentile -> pre-warm
+    tail_percentile: float = 99.0     # paper: 99th percentile -> keep-alive
+    margin: float = 0.10              # paper: 10% margin both sides
+
+    @property
+    def n_bins(self) -> int:
+        return int(round(self.range_minutes / self.bin_minutes))
+
+
+class HistogramState(NamedTuple):
+    """Batched per-app histogram state (all arrays have leading dim n_apps)."""
+
+    counts: jnp.ndarray        # [n_apps, n_bins] int32 in-bounds IT counts
+    oob: jnp.ndarray           # [n_apps] int32 count of out-of-bounds ITs
+    total: jnp.ndarray         # [n_apps] int32 count of in-bounds ITs
+    cv_sum: jnp.ndarray        # [n_apps] f32 Welford sum of bin counts
+    cv_sum_sq: jnp.ndarray     # [n_apps] f32 Welford sum of squared bin counts
+
+
+def init_state(n_apps: int, cfg: HistogramConfig) -> HistogramState:
+    return HistogramState(
+        counts=jnp.zeros((n_apps, cfg.n_bins), jnp.int32),
+        oob=jnp.zeros((n_apps,), jnp.int32),
+        total=jnp.zeros((n_apps,), jnp.int32),
+        cv_sum=jnp.zeros((n_apps,), jnp.float32),
+        cv_sum_sq=jnp.zeros((n_apps,), jnp.float32),
+    )
+
+
+def record_idle_times(
+    state: HistogramState,
+    it_minutes: jnp.ndarray,
+    active: jnp.ndarray,
+    cfg: HistogramConfig,
+) -> HistogramState:
+    """Record one idle time per app (vectorized).
+
+    Args:
+      state: current batched histogram state.
+      it_minutes: [n_apps] float idle times in minutes.
+      active: [n_apps] bool; apps that actually observed an IT this step.
+      cfg: histogram configuration.
+    """
+    n_bins = cfg.n_bins
+    bin_idx = jnp.floor(it_minutes / cfg.bin_minutes).astype(jnp.int32)
+    in_bounds = active & (bin_idx >= 0) & (bin_idx < n_bins)
+    oob_hit = active & (bin_idx >= n_bins)
+    safe_idx = jnp.clip(bin_idx, 0, n_bins - 1)
+
+    one_hot = jax.nn.one_hot(safe_idx, n_bins, dtype=jnp.int32)
+    one_hot = one_hot * in_bounds.astype(jnp.int32)[:, None]
+    old_count = jnp.take_along_axis(state.counts, safe_idx[:, None], axis=1)[:, 0]
+
+    inb = in_bounds.astype(jnp.float32)
+    return HistogramState(
+        counts=state.counts + one_hot,
+        oob=state.oob + oob_hit.astype(jnp.int32),
+        total=state.total + in_bounds.astype(jnp.int32),
+        cv_sum=state.cv_sum + inb,
+        cv_sum_sq=state.cv_sum_sq + inb * (2.0 * old_count.astype(jnp.float32) + 1.0),
+    )
+
+
+def _weighted_percentile_bins(
+    counts: jnp.ndarray, total: jnp.ndarray, pct: float, round_up: bool
+) -> jnp.ndarray:
+    """Smallest bin b such that cumsum(counts)[b] >= pct% of total.
+
+    Returns the bin *lower edge index* when ``round_up`` is False (paper rounds
+    the head "to the next lower value") and index+1 (upper edge) when True
+    (tail rounds "to the next higher value"). Result is in bin units.
+    """
+    cum = jnp.cumsum(counts, axis=-1)
+    threshold = jnp.ceil(total.astype(jnp.float32) * (pct / 100.0)).astype(jnp.int32)
+    threshold = jnp.maximum(threshold, 1)
+    # first index where cum >= threshold
+    hit = cum >= threshold[..., None]
+    idx = jnp.argmax(hit, axis=-1)
+    # if total == 0 there is no hit anywhere; callers mask on total > 0.
+    return idx + (1 if round_up else 0)
+
+
+def percentile_windows(
+    state: HistogramState, cfg: HistogramConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Compute (pre-warm, keep-alive) windows in minutes for every app.
+
+    pre-warm  = head_pct bin lower edge * (1 - margin)
+    keep-alive covers [prewarm, tail_pct bin upper edge * (1 + margin)], i.e.
+    the window *length* is tail*(1+margin) - prewarm (>= 0).
+    Apps with no in-bounds samples get (0, range) — callers normally override
+    via the representativeness check anyway.
+    """
+    head_bin = _weighted_percentile_bins(
+        state.counts, state.total, cfg.head_percentile, round_up=False
+    )
+    tail_bin = _weighted_percentile_bins(
+        state.counts, state.total, cfg.tail_percentile, round_up=True
+    )
+    prewarm = head_bin.astype(jnp.float32) * cfg.bin_minutes * (1.0 - cfg.margin)
+    tail = tail_bin.astype(jnp.float32) * cfg.bin_minutes * (1.0 + cfg.margin)
+    tail = jnp.minimum(tail, cfg.range_minutes * (1.0 + cfg.margin))
+    keep_alive = jnp.maximum(tail - prewarm, 0.0)
+    has_data = state.total > 0
+    prewarm = jnp.where(has_data, prewarm, 0.0)
+    keep_alive = jnp.where(has_data, keep_alive, cfg.range_minutes)
+    return prewarm, keep_alive
+
+
+# --- Scalar host-side twin ---------------------------------------------------
+
+
+class AppHistogram:
+    """Scalar per-application histogram (control-plane / reference path)."""
+
+    def __init__(self, cfg: HistogramConfig):
+        self.cfg = cfg
+        self.counts = np.zeros(cfg.n_bins, np.int64)
+        self.oob = 0
+        self.total = 0
+        self._cv_sum = 0.0
+        self._cv_sum_sq = 0.0
+
+    def record(self, it_minutes: float) -> None:
+        b = int(np.floor(it_minutes / self.cfg.bin_minutes))
+        if b < 0:
+            return
+        if b >= self.cfg.n_bins:
+            self.oob += 1
+            return
+        old = self.counts[b]
+        self.counts[b] += 1
+        self.total += 1
+        self._cv_sum += 1.0
+        self._cv_sum_sq += 2.0 * old + 1.0
+
+    @property
+    def cv(self) -> float:
+        n = self.cfg.n_bins
+        mean = self._cv_sum / n
+        if mean <= 0:
+            return 0.0
+        var = max(self._cv_sum_sq / n - mean * mean, 0.0)
+        return float(np.sqrt(var) / mean)
+
+    @property
+    def oob_fraction(self) -> float:
+        seen = self.total + self.oob
+        return self.oob / seen if seen else 0.0
+
+    def windows(self) -> Tuple[float, float]:
+        cfg = self.cfg
+        if self.total == 0:
+            return 0.0, cfg.range_minutes
+        cum = np.cumsum(self.counts)
+        head_t = max(int(np.ceil(self.total * cfg.head_percentile / 100.0)), 1)
+        tail_t = max(int(np.ceil(self.total * cfg.tail_percentile / 100.0)), 1)
+        head_bin = int(np.argmax(cum >= head_t))
+        tail_bin = int(np.argmax(cum >= tail_t)) + 1
+        prewarm = head_bin * cfg.bin_minutes * (1.0 - cfg.margin)
+        tail = min(tail_bin * cfg.bin_minutes, cfg.range_minutes) * (1.0 + cfg.margin)
+        return prewarm, max(tail - prewarm, 0.0)

@@ -1,0 +1,238 @@
+"""Cold-start management policies (Section 4 of the paper).
+
+A *policy* governs, per application, two windows measured from the end of the
+last function execution:
+
+  * ``prewarm``  — time to wait before (re)loading the application image.
+    0 means "do not unload at all after an execution".
+  * ``keep_alive`` — time the image stays loaded after it was (re)loaded
+    (or after the execution end if ``prewarm == 0``).
+
+An invocation with idle time IT is a **warm start** iff
+``prewarm <= IT <= prewarm + keep_alive`` (with the convention that
+``prewarm == 0`` covers ``IT <= keep_alive``). Loaded-but-idle time is the
+**wasted memory time** the provider pays.
+
+Policies implemented:
+
+  * :class:`FixedKeepAlivePolicy` — the provider state of practice (AWS 10 min
+    / Azure 20 min / OpenWhisk 10 min): ``prewarm = 0``,
+    ``keep_alive = const`` for every app.
+  * :class:`NoUnloadingPolicy` — infinite keep-alive (lower bound on cold
+    starts, upper bound on waste).
+  * :class:`HybridHistogramPolicy` — the paper's contribution: per-app
+    range-limited IT histogram (head/tail percentile windows), a CV-based
+    representativeness check falling back to a *standard keep-alive*
+    (``prewarm=0, keep_alive=range``), and an ARIMA forecast path for apps
+    whose ITs are mostly out of histogram bounds.
+
+All three expose the same scalar control-plane interface
+(``on_invocation(app_id, idle_time) -> windows for next gap``) used by the
+serving warm pool, plus the batched functional interface used by the
+vectorized simulator (`repro.core.simulator`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from .arima import ArimaForecaster
+from .histogram import AppHistogram, HistogramConfig
+
+__all__ = [
+    "PolicyWindows",
+    "Policy",
+    "FixedKeepAlivePolicy",
+    "NoUnloadingPolicy",
+    "HybridConfig",
+    "HybridHistogramPolicy",
+    "is_warm",
+    "loaded_idle_time",
+]
+
+INF = float("inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyWindows:
+    prewarm: float       # minutes
+    keep_alive: float    # minutes
+
+
+def is_warm(it: float, w: PolicyWindows) -> bool:
+    """Whether an invocation with idle time ``it`` (minutes) hits warm."""
+    if w.prewarm <= 0.0:
+        return it <= w.keep_alive
+    return w.prewarm <= it <= w.prewarm + w.keep_alive
+
+
+def loaded_idle_time(it: float, w: PolicyWindows) -> float:
+    """Memory-time (minutes) the image sat loaded-but-idle during a gap of
+    length ``it`` under windows ``w`` (exec time treated as 0, worst case,
+    exactly as the paper's simulator does)."""
+    if w.prewarm <= 0.0:
+        return min(it, w.keep_alive)
+    if it < w.prewarm:
+        # Invocation arrived before pre-warming: image was never loaded during
+        # the gap; the arrival itself is the (cold) load.
+        return 0.0
+    return min(it, w.prewarm + w.keep_alive) - w.prewarm
+
+
+class Policy:
+    """Scalar policy interface (one instance manages the whole fleet)."""
+
+    name = "base"
+
+    def windows(self, app_id: str) -> PolicyWindows:
+        raise NotImplementedError
+
+    def on_invocation(self, app_id: str, idle_time: Optional[float]) -> PolicyWindows:
+        """Record an invocation (``idle_time`` None for the first ever) and
+        return the windows that govern the *next* gap."""
+        raise NotImplementedError
+
+
+class FixedKeepAlivePolicy(Policy):
+    def __init__(self, keep_alive_minutes: float = 10.0):
+        self.keep_alive = float(keep_alive_minutes)
+        self.name = f"fixed-{keep_alive_minutes:g}m"
+
+    def windows(self, app_id: str) -> PolicyWindows:
+        return PolicyWindows(0.0, self.keep_alive)
+
+    def on_invocation(self, app_id: str, idle_time: Optional[float]) -> PolicyWindows:
+        return self.windows(app_id)
+
+
+class NoUnloadingPolicy(Policy):
+    name = "no-unloading"
+
+    def windows(self, app_id: str) -> PolicyWindows:
+        return PolicyWindows(0.0, INF)
+
+    def on_invocation(self, app_id: str, idle_time: Optional[float]) -> PolicyWindows:
+        return self.windows(app_id)
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    histogram: HistogramConfig = HistogramConfig()
+    cv_threshold: float = 2.0        # paper: CV=2 default (Fig. 17)
+    min_samples: int = 5             # "not enough ITs" -> standard keep-alive
+    oob_fraction_threshold: float = 0.5   # "most ITs OOB" -> ARIMA
+    arima_min_samples: int = 4       # need a few ITs before ARIMA can fit
+    arima_margin: float = 0.15       # paper: 15% margin
+    use_arima: bool = True
+
+    @property
+    def standard_keep_alive(self) -> float:
+        # Paper: fall back to prewarm=0, keep-alive = histogram range.
+        return self.histogram.range_minutes
+
+
+class HybridHistogramPolicy(Policy):
+    """The paper's hybrid histogram policy (scalar control-plane path).
+
+    Decision per app (Figure 10):
+      1. too few ITs, or CV of bin counts < threshold  -> standard keep-alive
+         (prewarm 0, keep-alive = histogram range);
+      2. most ITs out-of-bounds                        -> ARIMA forecast of the
+         next IT, prewarm = 0.85*pred, keep-alive = 0.30*pred;
+      3. otherwise                                     -> histogram head/tail
+         percentile windows with a 10% margin.
+    """
+
+    def __init__(self, cfg: HybridConfig = HybridConfig()):
+        self.cfg = cfg
+        self.name = f"hybrid-{cfg.histogram.range_minutes:g}m"
+        self._hist: Dict[str, AppHistogram] = {}
+        self._arima: Dict[str, ArimaForecaster] = {}
+        self._windows: Dict[str, PolicyWindows] = {}
+
+    # -- decision logic ------------------------------------------------------
+
+    def _standard(self) -> PolicyWindows:
+        return PolicyWindows(0.0, self.cfg.standard_keep_alive)
+
+    def _decide(self, app_id: str) -> PolicyWindows:
+        cfg = self.cfg
+        h = self._hist.get(app_id)
+        if h is None or (h.total + h.oob) < cfg.min_samples:
+            return self._standard()
+        if h.oob_fraction > cfg.oob_fraction_threshold:
+            # Histogram cannot represent this app (most ITs out of bounds):
+            # time-series path (or standard keep-alive if ARIMA is disabled
+            # or not warmed up yet — matching the batched engine).
+            if cfg.use_arima:
+                fc = self._arima.get(app_id)
+                if fc is not None and fc.n_obs >= cfg.arima_min_samples:
+                    pred = fc.forecast()
+                    if pred is not None and math.isfinite(pred) and pred > 0:
+                        m = cfg.arima_margin
+                        return PolicyWindows(prewarm=pred * (1.0 - m),
+                                             keep_alive=2.0 * m * pred)
+            return self._standard()
+        if h.cv < cfg.cv_threshold:
+            # Histogram not representative (bin counts too uniform / too new).
+            return self._standard()
+        prewarm, keep_alive = h.windows()
+        return PolicyWindows(prewarm, keep_alive)
+
+    # -- Policy interface ------------------------------------------------------
+
+    def windows(self, app_id: str) -> PolicyWindows:
+        w = self._windows.get(app_id)
+        return w if w is not None else self._standard()
+
+    def on_invocation(self, app_id: str, idle_time: Optional[float]) -> PolicyWindows:
+        cfg = self.cfg
+        if app_id not in self._hist:
+            self._hist[app_id] = AppHistogram(cfg.histogram)
+            if cfg.use_arima:
+                self._arima[app_id] = ArimaForecaster()
+        if idle_time is not None and idle_time >= 0:
+            self._hist[app_id].record(idle_time)
+            if cfg.use_arima:
+                self._arima[app_id].observe(idle_time)
+        w = self._decide(app_id)
+        self._windows[app_id] = w
+        return w
+
+    # -- checkpointing (the serving fleet persists learned windows) ----------
+
+    def state_dict(self) -> dict:
+        return {
+            "cfg": dataclasses.asdict(self.cfg),
+            "hist": {
+                k: {
+                    "counts": h.counts.tolist(),
+                    "oob": h.oob,
+                    "total": h.total,
+                    "cv_sum": h._cv_sum,
+                    "cv_sum_sq": h._cv_sum_sq,
+                }
+                for k, h in self._hist.items()
+            },
+            "arima": {k: f.state_dict() for k, f in self._arima.items()},
+            "windows": {k: (w.prewarm, w.keep_alive) for k, w in self._windows.items()},
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        for k, hs in state["hist"].items():
+            h = AppHistogram(self.cfg.histogram)
+            h.counts = np.asarray(hs["counts"], np.int64)
+            h.oob = int(hs["oob"])
+            h.total = int(hs["total"])
+            h._cv_sum = float(hs["cv_sum"])
+            h._cv_sum_sq = float(hs["cv_sum_sq"])
+            self._hist[k] = h
+        for k, fs in state.get("arima", {}).items():
+            f = ArimaForecaster()
+            f.load_state_dict(fs)
+            self._arima[k] = f
+        for k, (p, ka) in state.get("windows", {}).items():
+            self._windows[k] = PolicyWindows(p, ka)

@@ -1,0 +1,303 @@
+"""Trace-driven cold-start simulator (Section 5.1 of the paper).
+
+Two interchangeable engines:
+
+  * :func:`simulate_scalar` — event-driven reference. Walks each app's
+    invocation sequence, querying any :class:`repro.core.policy.Policy`
+    (including the full hybrid policy with its ARIMA path). This is the
+    oracle and handles arbitrary policies.
+
+  * :func:`simulate_hybrid_batch` / :func:`simulate_fixed_batch` — vectorized
+    JAX engines: all apps advance together through a ``lax.scan`` over padded
+    event indices, carrying the batched histogram state
+    (``[n_apps, n_bins]``). Apps are bucketed by event count so a handful of
+    very chatty apps do not inflate the scan length for everyone. ARIMA
+    cannot run inside a scan; apps whose out-of-bounds fraction crosses the
+    threshold are re-simulated through the scalar engine and their results
+    overridden (the paper: these are ~0.7% of invocations).
+
+Exactly as in the paper, function execution time is simulated as 0 (so idle
+time == inter-arrival time) to account wasted memory time conservatively, and
+the first invocation of every app is a cold start.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .histogram import HistogramConfig, HistogramState
+from .policy import (FixedKeepAlivePolicy, HybridConfig, HybridHistogramPolicy,
+                     Policy, PolicyWindows, is_warm, loaded_idle_time)
+from .workload import Trace
+
+__all__ = [
+    "SimResult", "simulate_scalar", "simulate_fixed_batch",
+    "simulate_hybrid_batch", "simulate", "BUCKET_EDGES",
+]
+
+BUCKET_EDGES = (64, 512, 4096, 1 << 62)
+
+
+@dataclasses.dataclass
+class SimResult:
+    cold: np.ndarray            # [n_apps] cold-start counts
+    invocations: np.ndarray     # [n_apps] invocation counts
+    wasted_minutes: np.ndarray  # [n_apps] loaded-but-idle memory time
+
+    @property
+    def cold_pct(self) -> np.ndarray:
+        return 100.0 * self.cold / np.maximum(self.invocations, 1)
+
+    def cold_pct_percentile(self, q: float = 75.0) -> float:
+        return float(np.percentile(self.cold_pct, q))
+
+    @property
+    def total_wasted(self) -> float:
+        return float(self.wasted_minutes.sum())
+
+    @property
+    def always_cold_fraction(self) -> float:
+        return float(np.mean(self.cold >= self.invocations))
+
+
+# --------------------------------------------------------------------------
+# Scalar reference engine
+# --------------------------------------------------------------------------
+
+def simulate_scalar(trace: Trace, policy: Policy,
+                    include_trailing: bool = True,
+                    app_indices: Optional[Sequence[int]] = None) -> SimResult:
+    idx = range(trace.n_apps) if app_indices is None else app_indices
+    n = trace.n_apps
+    cold = np.zeros(n, np.int64)
+    inv = np.zeros(n, np.int64)
+    waste = np.zeros(n, np.float64)
+    for i in idx:
+        t = trace.times[i]
+        app = trace.specs[i].app_id
+        inv[i] = len(t)
+        if len(t) == 0:
+            continue
+        cold[i] += 1  # first invocation is always cold
+        w = policy.on_invocation(app, None)
+        for k in range(1, len(t)):
+            it = float(t[k] - t[k - 1])  # exec time = 0 => IT == IAT
+            if not is_warm(it, w):
+                cold[i] += 1
+            waste[i] += loaded_idle_time(it, w)
+            w = policy.on_invocation(app, it)
+        if include_trailing:
+            tail_gap = trace.duration_minutes - float(t[-1])
+            waste[i] += loaded_idle_time(tail_gap, w) if tail_gap > 0 else 0.0
+    return SimResult(cold, inv, waste)
+
+
+# --------------------------------------------------------------------------
+# Vectorized JAX engines
+# --------------------------------------------------------------------------
+
+def _fixed_step(keep_alive, carry, t_now):
+    prev_t, cold, waste = carry
+    valid = jnp.isfinite(t_now)
+    it = t_now - prev_t
+    first = ~jnp.isfinite(prev_t)
+    is_cold = valid & (first | (it > keep_alive))
+    gap_waste = jnp.where(valid & ~first, jnp.minimum(it, keep_alive), 0.0)
+    new_prev = jnp.where(valid, t_now, prev_t)
+    return (new_prev, cold + is_cold, waste + gap_waste), None
+
+
+@partial(jax.jit, static_argnums=(3,))
+def _fixed_scan(times, keep_alive, duration, include_trailing: bool):
+    n = times.shape[0]
+    init = (jnp.full((n,), -jnp.inf, jnp.float32),
+            jnp.zeros((n,), jnp.int32), jnp.zeros((n,), jnp.float32))
+    (last_t, cold, waste), _ = jax.lax.scan(
+        partial(_fixed_step, keep_alive), init, times.T)
+    if include_trailing:
+        tail = jnp.maximum(duration - last_t, 0.0)
+        waste = waste + jnp.where(jnp.isfinite(last_t),
+                                  jnp.minimum(tail, keep_alive), 0.0)
+    return cold, waste
+
+
+def simulate_fixed_batch(trace: Trace, keep_alive_minutes: float,
+                         include_trailing: bool = True) -> SimResult:
+    times, counts = trace.to_padded()
+    cold_parts = np.zeros(trace.n_apps, np.int64)
+    waste_parts = np.zeros(trace.n_apps, np.float64)
+    for sel, sub in _buckets(times, counts):
+        cold, waste = _fixed_scan(jnp.asarray(sub),
+                                  jnp.float32(keep_alive_minutes),
+                                  jnp.float32(trace.duration_minutes),
+                                  include_trailing)
+        cold_parts[sel] = np.asarray(cold)
+        waste_parts[sel] = np.asarray(waste)
+    return SimResult(cold_parts, counts.astype(np.int64), waste_parts)
+
+
+def _buckets(times: np.ndarray, counts: np.ndarray):
+    """Yield (app_index_array, trimmed_times) grouped by event count."""
+    lo = 0
+    for edge in BUCKET_EDGES:
+        sel = np.where((counts > lo) & (counts <= edge))[0]
+        if len(sel):
+            width = int(counts[sel].max())
+            yield sel, times[sel][:, :width]
+        lo = edge
+
+
+# -- hybrid ------------------------------------------------------------------
+
+
+def _hybrid_windows(counts, total, oob, cv_sum, cv_sum_sq, cfg: HistogramConfig,
+                    hybrid: HybridConfig):
+    """Vectorized decision tree (ARIMA branch resolved to standard keep-alive;
+    ARIMA apps are post-processed by the scalar engine)."""
+    n_bins = cfg.n_bins
+    seen = total + oob
+    mean = cv_sum / n_bins
+    var = jnp.maximum(cv_sum_sq / n_bins - mean * mean, 0.0)
+    cv = jnp.where(mean > 0, jnp.sqrt(var) / jnp.maximum(mean, 1e-9), 0.0)
+
+    cum = jnp.cumsum(counts, axis=-1)
+    tot_f = jnp.maximum(total, 1).astype(jnp.float32)
+    head_thr = jnp.ceil(tot_f * (cfg.head_percentile / 100.0)).astype(jnp.int32)
+    tail_thr = jnp.ceil(tot_f * (cfg.tail_percentile / 100.0)).astype(jnp.int32)
+    head_bin = jnp.argmax(cum >= jnp.maximum(head_thr, 1)[:, None], axis=-1)
+    tail_bin = jnp.argmax(cum >= jnp.maximum(tail_thr, 1)[:, None], axis=-1) + 1
+
+    prewarm = head_bin.astype(jnp.float32) * cfg.bin_minutes * (1.0 - cfg.margin)
+    tail = jnp.minimum(tail_bin.astype(jnp.float32) * cfg.bin_minutes,
+                       cfg.range_minutes) * (1.0 + cfg.margin)
+    keep = jnp.maximum(tail - prewarm, 0.0)
+
+    use_hist = ((seen >= hybrid.min_samples)
+                & (cv >= hybrid.cv_threshold)
+                & (total > 0)
+                & ~(oob.astype(jnp.float32) > hybrid.oob_fraction_threshold
+                    * jnp.maximum(seen, 1).astype(jnp.float32)))
+    std_keep = jnp.float32(hybrid.standard_keep_alive)
+    prewarm = jnp.where(use_hist, prewarm, 0.0)
+    keep = jnp.where(use_hist, keep, std_keep)
+    return prewarm, keep
+
+
+def _hybrid_step(cfg: HistogramConfig, hybrid: HybridConfig, carry, t_now):
+    (prev_t, counts, total, oob, cv_sum, cv_sum_sq, prewarm, keep,
+     cold, waste) = carry
+    n_bins = cfg.n_bins
+    valid = jnp.isfinite(t_now)
+    first = ~jnp.isfinite(prev_t)
+    it = t_now - prev_t
+
+    # Warm/cold under the windows decided after the previous invocation.
+    warm = jnp.where(prewarm <= 0.0, it <= keep,
+                     (it >= prewarm) & (it <= prewarm + keep))
+    is_cold = valid & (first | ~warm)
+
+    # Wasted loaded-idle time for the gap that just closed.
+    gap_w_nopre = jnp.minimum(it, keep)
+    gap_w_pre = jnp.where(it < prewarm, 0.0,
+                          jnp.minimum(it, prewarm + keep) - prewarm)
+    gap_waste = jnp.where(valid & ~first,
+                          jnp.where(prewarm <= 0.0, gap_w_nopre, gap_w_pre), 0.0)
+
+    # Record the idle time into the histogram state.
+    rec = valid & ~first
+    bin_idx = jnp.floor(it / cfg.bin_minutes).astype(jnp.int32)
+    in_b = rec & (bin_idx >= 0) & (bin_idx < n_bins)
+    oob_hit = rec & (bin_idx >= n_bins)
+    safe = jnp.clip(bin_idx, 0, n_bins - 1)
+    napps = counts.shape[0]
+    rows = jnp.arange(napps)
+    old = counts[rows, safe]
+    counts = counts.at[rows, safe].add(in_b.astype(jnp.int32))
+    total = total + in_b.astype(jnp.int32)
+    oob = oob + oob_hit.astype(jnp.int32)
+    inb = in_b.astype(jnp.float32)
+    cv_sum = cv_sum + inb
+    cv_sum_sq = cv_sum_sq + inb * (2.0 * old.astype(jnp.float32) + 1.0)
+
+    # Decide windows for the next gap (for apps that just saw an event).
+    new_pre, new_keep = _hybrid_windows(counts, total, oob, cv_sum, cv_sum_sq,
+                                        cfg, hybrid)
+    prewarm = jnp.where(valid, new_pre, prewarm)
+    keep = jnp.where(valid, new_keep, keep)
+    prev_t = jnp.where(valid, t_now, prev_t)
+    return (prev_t, counts, total, oob, cv_sum, cv_sum_sq, prewarm, keep,
+            cold + is_cold, waste + gap_waste), None
+
+
+@partial(jax.jit, static_argnums=(2, 3, 4))
+def _hybrid_scan(times, duration, cfg: HistogramConfig, hybrid: HybridConfig,
+                 include_trailing: bool):
+    n = times.shape[0]
+    n_bins = cfg.n_bins
+    init = (
+        jnp.full((n,), -jnp.inf, jnp.float32),
+        jnp.zeros((n, n_bins), jnp.int32),
+        jnp.zeros((n,), jnp.int32),
+        jnp.zeros((n,), jnp.int32),
+        jnp.zeros((n,), jnp.float32),
+        jnp.zeros((n,), jnp.float32),
+        jnp.zeros((n,), jnp.float32),                                 # prewarm
+        jnp.full((n,), jnp.float32(hybrid.standard_keep_alive)),      # keep
+        jnp.zeros((n,), jnp.int32),
+        jnp.zeros((n,), jnp.float32),
+    )
+    carry, _ = jax.lax.scan(partial(_hybrid_step, cfg, hybrid), init, times.T)
+    (last_t, counts, total, oob, _, _, prewarm, keep, cold, waste) = carry
+    if include_trailing:
+        tail_gap = jnp.maximum(duration - last_t, 0.0)
+        t_nopre = jnp.minimum(tail_gap, keep)
+        t_pre = jnp.where(tail_gap < prewarm, 0.0,
+                          jnp.minimum(tail_gap, prewarm + keep) - prewarm)
+        waste = waste + jnp.where(jnp.isfinite(last_t),
+                                  jnp.where(prewarm <= 0.0, t_nopre, t_pre), 0.0)
+    oob_heavy = oob.astype(jnp.float32) > (
+        jnp.maximum(total + oob, 1).astype(jnp.float32)
+        * jnp.float32(hybrid.oob_fraction_threshold))
+    return cold, waste, oob_heavy
+
+
+def simulate_hybrid_batch(trace: Trace, hybrid: HybridConfig,
+                          include_trailing: bool = True) -> SimResult:
+    """Vectorized hybrid simulation + scalar post-pass for ARIMA apps."""
+    times, counts = trace.to_padded()
+    n = trace.n_apps
+    cold_parts = np.zeros(n, np.int64)
+    waste_parts = np.zeros(n, np.float64)
+    oob_flags = np.zeros(n, bool)
+    for sel, sub in _buckets(times, counts):
+        cold, waste, oobh = _hybrid_scan(
+            jnp.asarray(sub), jnp.float32(trace.duration_minutes),
+            hybrid.histogram, hybrid, include_trailing)
+        cold_parts[sel] = np.asarray(cold)
+        waste_parts[sel] = np.asarray(waste)
+        oob_flags[sel] = np.asarray(oobh)
+    result = SimResult(cold_parts, counts.astype(np.int64), waste_parts)
+    if hybrid.use_arima and oob_flags.any():
+        # Re-simulate OOB-heavy apps with the full scalar policy (ARIMA path).
+        policy = HybridHistogramPolicy(hybrid)
+        arima_idx = np.where(oob_flags)[0]
+        scalar = simulate_scalar(trace, policy, include_trailing, arima_idx)
+        result.cold[arima_idx] = scalar.cold[arima_idx]
+        result.wasted_minutes[arima_idx] = scalar.wasted_minutes[arima_idx]
+    return result
+
+
+def simulate(trace: Trace, policy, include_trailing: bool = True) -> SimResult:
+    """Dispatch: vectorized engines for the known policies, scalar otherwise."""
+    if isinstance(policy, FixedKeepAlivePolicy):
+        return simulate_fixed_batch(trace, policy.keep_alive, include_trailing)
+    if isinstance(policy, HybridHistogramPolicy):
+        return simulate_hybrid_batch(trace, policy.cfg, include_trailing)
+    if isinstance(policy, HybridConfig):
+        return simulate_hybrid_batch(trace, policy, include_trailing)
+    return simulate_scalar(trace, policy, include_trailing)

@@ -1,0 +1,92 @@
+"""Welford-style O(1) tracking of the CV of histogram bin counts.
+
+The paper (Section 4.2) decides whether a histogram is *representative* by
+computing the coefficient of variation (CV = std / mean) of its bin counts:
+a histogram with mass concentrated in few bins has a high CV and is useful;
+a flat histogram has CV ~ 0 and is not. Recomputing the CV from scratch is
+O(n_bins) per invocation; the paper cites Welford's online algorithm [37] to
+make the update O(1).
+
+Incrementing a single bin ``b`` from count ``c`` to ``c+1`` changes the sum of
+counts by 1 and the sum of squared counts by ``2c+1``, so we track
+``sum_counts`` and ``sum_sq_counts`` and derive::
+
+    mean = sum / n_bins
+    var  = sum_sq / n_bins - mean**2          (population variance)
+    cv   = sqrt(var) / mean                   (0 when mean == 0)
+
+This module provides both a scalar (host/control-plane) implementation and a
+batched JAX implementation operating on ``[n_apps]`` state vectors, which is
+what the vectorized simulator and the Pallas policy kernel use.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["CVState", "cv_init", "cv_update", "cv_value", "cv_from_counts"]
+
+
+@dataclasses.dataclass
+class CVState:
+    """Scalar O(1) CV tracker for one histogram (host-side path)."""
+
+    n_bins: int
+    sum_counts: float = 0.0
+    sum_sq_counts: float = 0.0
+
+    def update(self, old_count: float) -> None:
+        """Record that one bin went from ``old_count`` to ``old_count + 1``."""
+        self.sum_counts += 1.0
+        self.sum_sq_counts += 2.0 * old_count + 1.0
+
+    def remove(self, old_count: float) -> None:
+        """Record that one bin went from ``old_count`` to ``old_count - 1``."""
+        self.sum_counts -= 1.0
+        self.sum_sq_counts -= 2.0 * old_count - 1.0
+
+    @property
+    def cv(self) -> float:
+        mean = self.sum_counts / self.n_bins
+        if mean <= 0.0:
+            return 0.0
+        var = max(self.sum_sq_counts / self.n_bins - mean * mean, 0.0)
+        return float(np.sqrt(var) / mean)
+
+
+# --- Batched JAX path (state = dict of [n_apps] vectors) -------------------
+
+
+def cv_init(n_apps: int, dtype=jnp.float32) -> dict:
+    return {
+        "sum": jnp.zeros((n_apps,), dtype),
+        "sum_sq": jnp.zeros((n_apps,), dtype),
+    }
+
+
+def cv_update(state: dict, old_count: jnp.ndarray, active: jnp.ndarray) -> dict:
+    """Batched O(1) update: per app, one bin went old_count -> old_count+1.
+
+    ``active`` masks apps that actually recorded an in-bounds IT this step.
+    """
+    act = active.astype(state["sum"].dtype)
+    return {
+        "sum": state["sum"] + act,
+        "sum_sq": state["sum_sq"] + act * (2.0 * old_count.astype(state["sum"].dtype) + 1.0),
+    }
+
+
+def cv_value(state: dict, n_bins: int) -> jnp.ndarray:
+    mean = state["sum"] / n_bins
+    var = jnp.maximum(state["sum_sq"] / n_bins - mean * mean, 0.0)
+    return jnp.where(mean > 0.0, jnp.sqrt(var) / jnp.maximum(mean, 1e-9), 0.0)
+
+
+def cv_from_counts(counts: jnp.ndarray) -> jnp.ndarray:
+    """Direct CV of bin counts along the last axis (reference for tests)."""
+    counts = counts.astype(jnp.float32)
+    mean = counts.mean(axis=-1)
+    var = jnp.maximum((counts * counts).mean(axis=-1) - mean * mean, 0.0)
+    return jnp.where(mean > 0.0, jnp.sqrt(var) / jnp.maximum(mean, 1e-9), 0.0)

@@ -1,0 +1,1 @@
+"""Distributed: sharding rules, activation hints."""

@@ -1,0 +1,82 @@
+"""Gradient compression with error feedback (int8 quantized all-reduce).
+
+For cross-pod (DCN) gradient reduction the wire cost dominates; a standard
+distributed-optimization trick is to quantize gradients to int8 with a
+per-block scale before the reduction and carry the quantization error into
+the next step (error feedback keeps the *accumulated* update unbiased, so
+convergence is preserved — Seide et al., Karimireddy et al.).
+
+`compress/decompress` are pure functions usable inside any jit; the
+`ErrorFeedback` wrapper threads the residual through the train step
+(state lives next to the optimizer moments). 4x wire reduction vs f32,
+2x vs bf16.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+class Compressed(NamedTuple):
+    q: jnp.ndarray        # int8 payload
+    scale: jnp.ndarray    # f32 per-block scales
+
+
+def compress(x: jnp.ndarray, block: int = BLOCK) -> Compressed:
+    """Symmetric per-block int8 quantization (shape-preserving)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return Compressed(q=q, scale=scale[:, 0])
+
+
+def decompress(c: Compressed, shape, dtype=jnp.float32) -> jnp.ndarray:
+    blocks = c.q.astype(jnp.float32) * c.scale[:, None]
+    flat = blocks.reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def roundtrip_error(x: jnp.ndarray) -> jnp.ndarray:
+    c = compress(x)
+    return x - decompress(c, x.shape, x.dtype)
+
+
+class ErrorFeedback:
+    """Stateless helpers for error-feedback compression of a grad pytree."""
+
+    @staticmethod
+    def init(params) -> Dict:
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    @staticmethod
+    def apply(grads, residual) -> Tuple[Dict, Dict]:
+        """Returns (compressed-then-decompressed grads, new residual).
+
+        In a real deployment the Compressed payload is what crosses the DCN;
+        here the quantize->reduce->dequantize round trip is modeled locally
+        and the residual carries the quantization error to the next step.
+        """
+        def one(g, r):
+            g_fb = g.astype(jnp.float32) + r
+            c = compress(g_fb)
+            g_hat = decompress(c, g.shape, jnp.float32)
+            return g_hat, g_fb - g_hat
+
+        out = jax.tree.map(one, grads, residual)
+        g_hat = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_r = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return g_hat, new_r

@@ -1,0 +1,67 @@
+"""Activation-sharding hint context.
+
+Model code is mesh-agnostic; the launcher/dry-run installs the active mesh
+here and layers call :func:`hint` with symbolic axis roles ("data", "model",
+None). Outside a mesh context the hints are no-ops, so smoke tests and
+single-host examples run unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE: dict = {"mesh": None, "data": None, "model": None}
+
+Role = Union[str, None, Tuple[str, ...]]
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    if mesh is None:
+        _ACTIVE.update(mesh=None, data=None, model=None)
+        return
+    data = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    _ACTIVE.update(
+        mesh=mesh,
+        data=(data if len(data) > 1 else (data[0] if data else None)),
+        model="model" if "model" in mesh.axis_names else None,
+    )
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    prev = dict(_ACTIVE)
+    set_mesh(mesh)
+    try:
+        yield
+    finally:
+        _ACTIVE.update(prev)
+
+
+def axis_size(role: str) -> int:
+    mesh = _ACTIVE["mesh"]
+    ax = _ACTIVE.get(role)
+    if mesh is None or ax is None:
+        return 1
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    import numpy as np
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def hint(x, *roles: Role):
+    """with_sharding_constraint by role; silently drops non-divisible axes."""
+    mesh = _ACTIVE["mesh"]
+    if mesh is None:
+        return x
+    spec = []
+    for dim, role in zip(x.shape, roles):
+        ax = _ACTIVE.get(role) if isinstance(role, str) else None
+        if ax is None:
+            spec.append(None)
+            continue
+        size = axis_size(role)
+        spec.append(ax if (size > 1 and dim % size == 0) else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,118 @@
+"""Distributed flash-decode: shard_map attention over a sequence-sharded
+KV cache (beyond-paper optimization, EXPERIMENTS.md §Perf cell C).
+
+The baseline decode shards the KV cache on head_dim because a sequence-
+sharded cache makes XLA's SPMD partitioner fall into "involuntary full
+rematerialization" on the dynamic-update-slice at ``pos`` (it replicates the
+cache slice every step). Here we take manual control:
+
+  * the cache is sharded over the model axis along SEQUENCE — each shard
+    owns a contiguous ``Skv / m`` block;
+  * the new token's K/V is written ONLY by the owning shard (a local
+    dynamic-update-slice behind a mask — no resharding, no copies);
+  * each shard computes a partial flash-attention (running max m, denominator
+    l, accumulator acc) over its block — exactly the online-softmax state of
+    `kernels/decode_attention.py`;
+  * partials merge with one tiny ``pmax`` + two ``psum``s of
+    [B, Hq, hd]-sized tensors (the log-sum-exp merge), instead of moving the
+    cache.
+
+Per-step collective volume drops from O(cache slice copies) to
+O(B * Hq * hd) — a few MB — and the f32 cache copies disappear.
+
+Enable with ``repro.distributed.dist_decode.ENABLED = True`` (the hillclimb
+driver flips it); `sharding.cache_specs_tree` then emits sequence-sharded
+cache specs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import ctx
+
+# Flipped by the hillclimb driver / launcher; read by sharding rules too.
+ENABLED = False
+
+
+def applicable(Skv: int, Sq: int) -> bool:
+    mesh = ctx._ACTIVE["mesh"]
+    if not ENABLED or mesh is None or Sq != 1:
+        return False
+    m = ctx.axis_size("model")
+    return m > 1 and Skv % m == 0
+
+
+def decode_attention(q, k_new, v_new, cache_k, cache_v, pos
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """q: [B,1,Hq,hd]; k_new/v_new: [B,1,Hkv,hd] (rope'd); cache_k/v:
+    [B,Skv,Hkv,hd] sequence-sharded over 'model'. pos: scalar int32.
+
+    Returns (out [B,1,Hq,hd], new_cache_k, new_cache_v).
+    """
+    mesh = ctx._ACTIVE["mesh"]
+    model_ax = "model"
+    da = ctx._ACTIVE["data"]
+    B, Skv, Hkv, hd = cache_k.shape
+    Hq = q.shape[2]
+    m_size = mesh.shape[model_ax]
+    s_local = Skv // m_size
+    group = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+
+    def body(q, k_new, v_new, ck, cv, pos):
+        idx = jax.lax.axis_index(model_ax)
+        # --- local cache write (only the owning shard's DUS is kept) -------
+        off = pos - idx * s_local
+        safe_off = jnp.clip(off, 0, s_local - 1)
+        ck_upd = jax.lax.dynamic_update_slice_in_dim(
+            ck, k_new.astype(ck.dtype), safe_off, axis=1)
+        cv_upd = jax.lax.dynamic_update_slice_in_dim(
+            cv, v_new.astype(cv.dtype), safe_off, axis=1)
+        mine = (off >= 0) & (off < s_local)
+        ck = jnp.where(mine, ck_upd, ck)
+        cv = jnp.where(mine, cv_upd, cv)
+
+        # --- local partial flash attention --------------------------------
+        qf = q[:, 0].reshape(B_loc(q), Hkv, group, hd).astype(jnp.float32)
+        qf = qf * scale
+        kf = ck.astype(jnp.float32)
+        s = jnp.einsum("bhgd,bshd->bhgs", qf, kf)          # [B,Hkv,g,s_local]
+        jpos = idx * s_local + jnp.arange(s_local)
+        valid = jpos[None, None, None, :] <= pos
+        s = jnp.where(valid, s, -1e30)
+        m_loc = jnp.max(s, axis=-1)                        # [B,Hkv,g]
+        p = jnp.exp(s - m_loc[..., None])
+        p = jnp.where(valid, p, 0.0)
+        l_loc = p.sum(-1)
+        acc = jnp.einsum("bhgs,bshd->bhgd", p, cv.astype(jnp.float32))
+
+        # --- log-sum-exp merge across sequence shards ----------------------
+        m_glob = jax.lax.pmax(m_loc, model_ax)
+        alpha = jnp.exp(m_loc - m_glob)
+        l_glob = jax.lax.psum(l_loc * alpha, model_ax)
+        acc_glob = jax.lax.psum(acc * alpha[..., None], model_ax)
+        out = acc_glob / jnp.maximum(l_glob, 1e-30)[..., None]
+        out = out.reshape(q.shape[0], 1, Hq, hd).astype(q.dtype)
+        return out, ck, cv
+
+    def B_loc(qq):
+        return qq.shape[0]
+
+    dp = da
+    in_specs = (P(dp, None, None, None),     # q
+                P(dp, None, None, None),     # k_new
+                P(dp, None, None, None),     # v_new
+                P(dp, model_ax, None, None),  # cache k
+                P(dp, model_ax, None, None),  # cache v
+                P())                          # pos
+    out_specs = (P(dp, None, None, None),
+                 P(dp, model_ax, None, None),
+                 P(dp, model_ax, None, None))
+    fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+    return fn(q, k_new, v_new, cache_k, cache_v, pos)

@@ -1,0 +1,242 @@
+"""Sharding rules: parameter, optimizer-state, and input PartitionSpecs.
+
+Parallelism map (DESIGN.md §5):
+  * DP  — batch over ("pod", "data")
+  * TP  — attention heads / FFN / vocab over "model"
+  * EP  — MoE experts over "model"
+  * SP  — KV-cache sequence over "model" when KV heads don't divide the axis
+  * ZeRO — optimizer state (and fp32 master params) additionally sharded
+    over the data axes (first divisible dim), turning the gradient
+    all-reduce into reduce-scatter + update + all-gather.
+
+Rules are path-regex driven so every architecture family resolves through
+one table; any dim not divisible by the mesh axis size falls back to
+replication (never a compile error).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..launch.mesh import data_axes, model_axis
+
+MP = "model"
+
+# (path regex, spec for the *unstacked* leaf). `mp` marks the TP dim.
+_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    (r"embed/table$",              (MP, None)),
+    (r"(attn|xattn)/w[qkv]/w$",    (None, MP)),
+    (r"(attn|xattn)/w[qkv]/b$",    (MP,)),
+    (r"(attn|xattn)/wo/w$",        (MP, None)),
+    (r"(mlp|ffn)/(wi|wg)/w$",      (None, MP)),
+    (r"(mlp|ffn)/wo/w$",           (MP, None)),
+    (r"head/w$",                   (None, MP)),
+    # MoE: experts over the model axis (EP)
+    (r"moe/router/w$",             (None, None)),
+    (r"moe/(wi|wg|wo)$",           (MP, None, None)),
+    # Mamba-2
+    (r"in_proj/w$",                (None, MP)),
+    (r"out_proj/w$",               (MP, None)),
+    (r"conv_w$",                   (None, MP)),
+    (r"(A_log|dt_bias|D)$",        (MP,)),
+    # RG-LRU
+    (r"(wx|wy|wa|wi)/w$",          (None, MP)),
+    (r"(wx|wy|wa|wi)/b$",          (MP,)),
+    (r"out/w$",                    (MP, None)),
+    (r"lam$",                      (MP,)),
+)
+
+_STACKED = re.compile(r"(^|/)(layers|blocks)/")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _fit(spec: Tuple[Optional[str], ...], shape, mesh: Mesh) -> P:
+    """Drop axes whose dim isn't divisible by the mesh axis size."""
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+        else:
+            size = int(np.prod([mesh.shape[a] for a in
+                                ((ax,) if isinstance(ax, str) else ax)]))
+            out.append(ax if dim % size == 0 else None)
+    return P(*out)
+
+
+def param_spec(path_str: str, shape, mesh: Mesh,
+               cfg: Optional[ModelConfig] = None) -> P:
+    stacked = bool(_STACKED.search(path_str))
+    # GQA: if the KV heads don't divide the model axis, shard-slicing wk/wv
+    # would cut across head boundaries — replicate them instead (K/V
+    # projections are small; this is the Megatron KV-replication scheme).
+    if cfg is not None and re.search(r"(attn|xattn)/w[kv]/(w|b)$", path_str):
+        if cfg.n_kv_heads % mesh.shape[MP] != 0:
+            return P()
+    for pat, spec in _RULES:
+        if re.search(pat, path_str):
+            if stacked:
+                spec = (None,) + tuple(spec)
+            spec = spec[: len(shape)]
+            spec = tuple(spec) + (None,) * (len(shape) - len(spec))
+            return _fit(spec, shape, mesh)
+    return P()  # replicate (norms, biases, scalars)
+
+
+def param_specs(params_or_specs, mesh: Mesh, cfg: Optional[ModelConfig] = None):
+    """Pytree of PartitionSpec for a parameter pytree (arrays or SDS)."""
+    def fn(path, leaf):
+        return param_spec(_path_str(path), leaf.shape, mesh, cfg)
+    return jax.tree_util.tree_map_with_path(fn, params_or_specs)
+
+
+ZERO_SKIP_STACKED_DIM = True
+
+
+def zero_spec(spec: P, shape, mesh: Mesh, stacked: bool = False) -> P:
+    """Add data-axis sharding (ZeRO) to the first divisible unsharded dim.
+
+    For layer-stacked leaves the leading (layer) dim is skipped by default:
+    sharding it puts each layer's optimizer state wholly on one data shard,
+    which forces the per-layer gradient reduction inside the backward scan
+    to be a full all-reduce (2x the bytes of a reduce-scatter, in f32).
+    Sharding an inner dim lets SPMD emit reduce-scatters instead.
+    """
+    daxes = data_axes(mesh)
+    if not daxes:
+        return spec
+    dsize = int(np.prod([mesh.shape[a] for a in daxes]))
+    out = list(spec) + [None] * (len(shape) - len(spec))
+    start = 1 if (stacked and ZERO_SKIP_STACKED_DIM and len(shape) > 1) else 0
+    for i in range(start, len(shape)):
+        dim, ax = shape[i], out[i]
+        if ax is None and dim % dsize == 0 and dim >= dsize:
+            out[i] = daxes if len(daxes) > 1 else daxes[0]
+            return P(*out)
+    if start == 1 and shape[0] % dsize == 0 and out[0] is None:
+        out[0] = daxes if len(daxes) > 1 else daxes[0]  # fallback: layer dim
+        return P(*out)
+    return spec
+
+
+def opt_specs(params_or_specs, mesh: Mesh, cfg: Optional[ModelConfig] = None):
+    """ZeRO-sharded specs for optimizer state / fp32 master params."""
+    def fn(path, leaf):
+        ps = _path_str(path)
+        base = param_spec(ps, leaf.shape, mesh, cfg)
+        return zero_spec(base, leaf.shape, mesh,
+                         stacked=bool(_STACKED.search(ps)))
+    return jax.tree_util.tree_map_with_path(fn, params_or_specs)
+
+
+# ---------------------------------------------------------------------------
+# Input / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, specs: Dict[str, Any], mesh: Mesh):
+    """PartitionSpecs for input_specs() structures (divisibility-guarded:
+    a batch of 1 — long_500k — simply drops the data axis)."""
+    da = data_axes(mesh)
+    dp = da if len(da) > 1 else (da[0] if da else None)
+    out: Dict[str, Any] = {}
+    for name, leaf in specs.items():
+        if name == "cache":
+            out[name] = cache_specs_tree(cfg, leaf, mesh)
+        elif name == "token":
+            out[name] = _fit((dp,), leaf.shape, mesh)
+        elif name in ("tokens", "labels", "mask"):
+            out[name] = _fit((dp, None), leaf.shape, mesh)
+        elif name == "embeds":
+            out[name] = _fit((dp, None, None), leaf.shape, mesh)
+        else:
+            out[name] = P()
+    return out
+
+
+def cache_specs_tree(cfg: ModelConfig, cache_tree, mesh: Mesh):
+    """Decode-cache shardings.
+
+    KV caches: batch over data; heads over model when divisible, else the
+    sequence dim (SP). SSM states: heads over model. Ring buffers follow the
+    KV rule. Scalars replicated.
+    """
+    da = data_axes(mesh)
+    dp = da if len(da) > 1 else (da[0] if da else None)
+    msize = mesh.shape[MP]
+
+    def fn(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        if ps.endswith("pos"):
+            return P()
+        if ps.endswith("enc"):
+            return P(dp, None, None)
+        if re.search(r"(^|/)(k|v|ring_k|ring_v)$", ps):
+            # [L, B, S, Hkv, hd]. Preference order:
+            #  0. distributed flash-decode enabled -> sequence-sharded (the
+            #     shard_map path owns the update + lse-merge);
+            #  1. KV heads over model (clean TP);
+            #  2. head_dim over model — keeps the decode cache update
+            #     (dynamic_update_slice at `pos`) fully local, avoiding the
+            #     involuntary resharding a sequence-sharded cache causes;
+            #  3. sequence (SP) as a last resort.
+            from . import dist_decode
+            heads, hd = shape[3], shape[4]
+            if (dist_decode.ENABLED and "ring" not in ps
+                    and shape[2] % msize == 0):
+                return P(None, dp, MP, None, None)
+            if heads % msize == 0:
+                return P(None, dp, None, MP, None)
+            if hd % msize == 0:
+                return P(None, dp, None, None, MP)
+            if shape[2] % msize == 0:
+                return P(None, dp, MP, None, None)
+            return P(None, dp, None, None, None)
+        if ps.endswith("ssm"):        # [L, B, H, N, Pdim]
+            return P(None, dp, MP if shape[2] % msize == 0 else None, None, None)
+        if re.search(r"conv\d?$", ps):  # [L, B, W-1, C]
+            return P(None, dp, None, MP if shape[3] % msize == 0 else None)
+        if re.search(r"(^|/)h\d?$", ps):
+            return P(dp, MP if shape[-1] % msize == 0 else None)
+        return P()
+
+    def fn_wrap(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        # hybrid cache leaves live under blocks/: [n_super, B, ...]
+        if re.search(r"(^|/)(h1|h2)$", ps):
+            spec = P(None, dp, MP if shape[2] % msize == 0 else None)
+        elif re.search(r"(^|/)(conv1|conv2)$", ps):
+            spec = P(None, dp, None, MP if shape[3] % msize == 0 else None)
+        elif re.search(r"(^|/)tail\d+/h$", ps):
+            spec = P(dp, MP if shape[1] % msize == 0 else None)
+        elif re.search(r"(^|/)tail\d+/conv$", ps):
+            spec = P(dp, None, MP if shape[2] % msize == 0 else None)
+        elif re.search(r"(^|/)conv$", ps):  # ssm conv: [L, B, W-1, C]
+            spec = P(None, dp, None, MP if shape[3] % msize == 0 else None)
+        else:
+            spec = fn(path, leaf)
+        return _fit(tuple(spec) + (None,) * (len(shape) - len(spec)),
+                    shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(fn_wrap, cache_tree)
+
+
+def named(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

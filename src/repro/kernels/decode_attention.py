@@ -1,0 +1,101 @@
+"""GQA flash-decode Pallas TPU kernel.
+
+One query token per sequence against a long KV cache. The q heads that share
+a KV head are processed together as a ``[group, D]`` tile (so the matmul has
+an MXU-utilizable M dimension even though there is a single token), and the
+KV cache is streamed through VMEM in ``bk``-sized blocks with the online
+softmax carried in scratch. Positions at or beyond ``kv_len`` are masked, so
+the same compiled kernel serves every cache fill level.
+
+Grid: (B, Hkv, nk) with nk sequential. Per-step VMEM: k/v blocks
+(2*bk*D) + acc (group*D) + logits (group*bk) in fp32 — ~1.1 MB at bk=512,
+D=128, group=8.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, bk: int, scale: float, nk: int, group: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = kvlen_ref[0]
+    k_start = ki * bk
+
+    @pl.when(k_start < kv_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale           # [group, D]
+        k = k_ref[0, 0].astype(jnp.float32)                   # [bk, D]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [g,bk]
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (group, bk), 1)
+        s = jnp.where(kpos < kv_len, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_decode(q, k, v, kv_len, *, bk: int = 512, interpret: bool = True):
+    """q: [B,Hkv,group,D]; k,v: [B,Hkv,Skv,D]; kv_len: scalar int32.
+
+    Returns [B, Hkv, group, D].
+    """
+    B, Hkv, group, D = q.shape
+    Skv = k.shape[2]
+    bk = min(bk, Skv)
+    nk = Skv // bk
+    scale = 1.0 / math.sqrt(D)
+    kv_len_arr = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (1,))
+
+    kernel = functools.partial(_decode_kernel, bk=bk, scale=scale, nk=nk,
+                               group=group)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, D), lambda b, h, j, kvl: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, j, kvl: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, j, kvl: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, D), lambda b, h, j, kvl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, group, D), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(kv_len_arr, q, k, v)

@@ -1,0 +1,154 @@
+"""Fleet-scale hybrid-histogram policy update — Pallas TPU kernel.
+
+This is the paper's own hot loop, adapted TPU-natively (DESIGN.md §2). The
+paper's challenges #4/#5 demand O(µs) policy updates per invocation; at
+provider scale (millions of app endpoints) the control plane batches the
+idle-time observations of one scheduling tick and updates *all* app
+histograms plus their policy windows in a single vectorized pass:
+
+  for each app a in tile:                      (one VMEM tile = TA apps)
+    counts[a, bin(it_a)] += 1                  (or OOB counter)
+    cv[a]     <- Welford O(1) update
+    head/tail <- weighted 5th/99th percentile over bins (one cumsum sweep)
+    prewarm/keepalive <- margins + representativeness fallback
+
+Everything is rank-2 [TA, n_bins] arithmetic — ideal VPU work; the bin
+update is a one-hot add (compare-against-iota), the percentile extraction a
+cumsum + masked min over the bin iota.
+
+Grid: (n_apps / TA,) — fully parallel over app tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BIG = 10 ** 9
+
+
+def _policy_kernel(counts_ref, oob_ref, total_ref, cvs_ref, cvss_ref,
+                   bins_ref, active_ref,
+                   ncounts_ref, noob_ref, ntotal_ref, ncvs_ref, ncvss_ref,
+                   prewarm_ref, keep_ref, use_hist_ref, *,
+                   n_bins: int, head_pct: float, tail_pct: float,
+                   margin: float, bin_minutes: float, range_minutes: float,
+                   cv_threshold: float, min_samples: int, oob_threshold: float):
+    counts = counts_ref[...]                       # [TA, n_bins] i32
+    bins = bins_ref[...]                           # [TA] i32 (bin idx; >=n_bins -> OOB)
+    active = active_ref[...] != 0                  # [TA]
+    TA = counts.shape[0]
+
+    in_b = active & (bins >= 0) & (bins < n_bins)
+    oob_hit = active & (bins >= n_bins)
+    safe = jnp.clip(bins, 0, n_bins - 1)
+
+    iota = jax.lax.broadcasted_iota(jnp.int32, (TA, n_bins), 1)
+    onehot = (iota == safe[:, None]) & in_b[:, None]
+    old = jnp.sum(jnp.where(onehot, counts, 0), axis=1)          # [TA]
+    new_counts = counts + onehot.astype(jnp.int32)
+
+    total = total_ref[...] + in_b.astype(jnp.int32)
+    oob = oob_ref[...] + oob_hit.astype(jnp.int32)
+    inb_f = in_b.astype(jnp.float32)
+    cvs = cvs_ref[...] + inb_f                                    # Welford sums
+    cvss = cvss_ref[...] + inb_f * (2.0 * old.astype(jnp.float32) + 1.0)
+
+    # CV of bin counts (representativeness check)
+    mean = cvs / n_bins
+    var = jnp.maximum(cvss / n_bins - mean * mean, 0.0)
+    cv = jnp.where(mean > 0, jnp.sqrt(var) / jnp.maximum(mean, 1e-9), 0.0)
+
+    # weighted percentiles: one cumsum over bins, masked min over iota
+    cum = jnp.cumsum(new_counts, axis=1)                          # [TA, n_bins]
+    tot_f = jnp.maximum(total, 1).astype(jnp.float32)
+    head_thr = jnp.maximum(jnp.ceil(tot_f * (head_pct / 100.0)), 1.0)
+    tail_thr = jnp.maximum(jnp.ceil(tot_f * (tail_pct / 100.0)), 1.0)
+    cum_f = cum.astype(jnp.float32)
+    head_bin = jnp.min(jnp.where(cum_f >= head_thr[:, None], iota, BIG), axis=1)
+    tail_bin = jnp.min(jnp.where(cum_f >= tail_thr[:, None], iota, BIG), axis=1) + 1
+    head_bin = jnp.where(head_bin == BIG, 0, head_bin)
+    tail_bin = jnp.where(tail_bin == BIG + 1, n_bins, tail_bin)
+
+    prewarm = head_bin.astype(jnp.float32) * bin_minutes * (1.0 - margin)
+    tail = jnp.minimum(tail_bin.astype(jnp.float32) * bin_minutes,
+                       range_minutes) * (1.0 + margin)
+    keep = jnp.maximum(tail - prewarm, 0.0)
+
+    seen = total + oob
+    use_hist = ((seen >= min_samples) & (cv >= cv_threshold) & (total > 0)
+                & ~(oob.astype(jnp.float32) > oob_threshold
+                    * jnp.maximum(seen, 1).astype(jnp.float32)))
+    prewarm = jnp.where(use_hist, prewarm, 0.0)
+    keep = jnp.where(use_hist, keep, range_minutes)
+
+    ncounts_ref[...] = new_counts
+    noob_ref[...] = oob
+    ntotal_ref[...] = total
+    ncvs_ref[...] = cvs
+    ncvss_ref[...] = cvss
+    prewarm_ref[...] = prewarm
+    keep_ref[...] = keep
+    use_hist_ref[...] = use_hist.astype(jnp.int32)
+
+
+def policy_update_pallas(counts, oob, total, cv_sum, cv_sum_sq, bins, active,
+                         *, head_pct=5.0, tail_pct=99.0, margin=0.10,
+                         bin_minutes=1.0, range_minutes=240.0,
+                         cv_threshold=2.0, min_samples=5, oob_threshold=0.5,
+                         tile_apps: int = 512, interpret: bool = True):
+    """Batched histogram+policy update for the whole fleet.
+
+    counts: [n_apps, n_bins] i32; oob/total: [n_apps] i32;
+    cv_sum/cv_sum_sq: [n_apps] f32; bins: [n_apps] i32 (this tick's IT bin,
+    >= n_bins means OOB); active: [n_apps] i32 (0/1).
+    Returns (new_counts, new_oob, new_total, new_cv_sum, new_cv_sum_sq,
+             prewarm, keep_alive, use_hist).
+    """
+    n_apps, n_bins = counts.shape
+    TA = min(tile_apps, n_apps)
+    pad = (-n_apps) % TA
+    if pad:
+        # pad with inactive rows so the app tiling covers every app
+        pv = lambda x, fill=0: jnp.concatenate(
+            [x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)])
+        counts, oob, total = pv(counts), pv(oob), pv(total)
+        cv_sum, cv_sum_sq = pv(cv_sum), pv(cv_sum_sq)
+        bins, active = pv(bins), pv(active)
+        n_apps += pad
+    grid = (n_apps // TA,)
+    kernel = functools.partial(
+        _policy_kernel, n_bins=n_bins, head_pct=head_pct, tail_pct=tail_pct,
+        margin=margin, bin_minutes=bin_minutes, range_minutes=range_minutes,
+        cv_threshold=cv_threshold, min_samples=min_samples,
+        oob_threshold=oob_threshold)
+
+    vec = lambda dt: pl.BlockSpec((TA,), lambda i: (i,))
+    mat = pl.BlockSpec((TA, n_bins), lambda i: (i, 0))
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[mat, vec(None), vec(None), vec(None), vec(None), vec(None),
+                  vec(None)],
+        out_specs=[mat, vec(None), vec(None), vec(None), vec(None), vec(None),
+                   vec(None), vec(None)],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_apps, n_bins), jnp.int32),
+            jax.ShapeDtypeStruct((n_apps,), jnp.int32),
+            jax.ShapeDtypeStruct((n_apps,), jnp.int32),
+            jax.ShapeDtypeStruct((n_apps,), jnp.float32),
+            jax.ShapeDtypeStruct((n_apps,), jnp.float32),
+            jax.ShapeDtypeStruct((n_apps,), jnp.float32),
+            jax.ShapeDtypeStruct((n_apps,), jnp.float32),
+            jax.ShapeDtypeStruct((n_apps,), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(counts, oob, total, cv_sum, cv_sum_sq, bins, active)
+    if pad:
+        outs = tuple(o[:-pad] for o in outs)
+    return outs

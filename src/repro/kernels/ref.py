@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..core.histogram import HistogramConfig
+from ..models.layers import _sdpa
+from ..models.mamba2 import ssd_reference
+from ..models.rglru import rglru_scan_ref
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """q: [B,Hq,S,D] (BHSD layout, like the kernel); k,v: [B,Hkv,S,D]."""
+    qs = jnp.moveaxis(q, 1, 2)     # -> [B,S,H,D]
+    ks = jnp.moveaxis(k, 1, 2)
+    vs = jnp.moveaxis(v, 1, 2)
+    out = _sdpa(qs, ks, vs, causal=causal, window=window, q_offset=0)
+    return jnp.moveaxis(out, 2, 1)
+
+
+def decode_attention_ref(q, k, v, kv_len):
+    """q: [B,Hkv,group,D]; k,v: [B,Hkv,Skv,D]."""
+    B, Hkv, group, D = q.shape
+    Skv = k.shape[2]
+    qf = q.astype(jnp.float32) / math.sqrt(D)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qf, k.astype(jnp.float32))
+    mask = jnp.arange(Skv)[None, None, None, :] < kv_len
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgk,bhkd->bhgd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, B, C, chunk):
+    return ssd_reference(x.astype(jnp.float32), dt.astype(jnp.float32), A,
+                         B.astype(jnp.float32), C.astype(jnp.float32), chunk)
+
+
+def rglru_ref(b_in, a):
+    return rglru_scan_ref(b_in, a)
+
+
+def policy_update_ref(counts, oob, total, cv_sum, cv_sum_sq, bins, active,
+                      *, head_pct=5.0, tail_pct=99.0, margin=0.10,
+                      bin_minutes=1.0, range_minutes=240.0, cv_threshold=2.0,
+                      min_samples=5, oob_threshold=0.5):
+    """Vectorized jnp oracle mirroring repro.core semantics exactly."""
+    n_apps, n_bins = counts.shape
+    active = active != 0
+    in_b = active & (bins >= 0) & (bins < n_bins)
+    oob_hit = active & (bins >= n_bins)
+    safe = jnp.clip(bins, 0, n_bins - 1)
+    onehot = jax.nn.one_hot(safe, n_bins, dtype=jnp.int32) * in_b[:, None]
+    old = jnp.take_along_axis(counts, safe[:, None], axis=1)[:, 0]
+    new_counts = counts + onehot
+    total = total + in_b.astype(jnp.int32)
+    oob = oob + oob_hit.astype(jnp.int32)
+    inb_f = in_b.astype(jnp.float32)
+    cv_sum = cv_sum + inb_f
+    cv_sum_sq = cv_sum_sq + inb_f * (2.0 * old.astype(jnp.float32) + 1.0)
+
+    mean = cv_sum / n_bins
+    var = jnp.maximum(cv_sum_sq / n_bins - mean * mean, 0.0)
+    cv = jnp.where(mean > 0, jnp.sqrt(var) / jnp.maximum(mean, 1e-9), 0.0)
+
+    cum = jnp.cumsum(new_counts, axis=1)
+    tot_f = jnp.maximum(total, 1).astype(jnp.float32)
+    head_thr = jnp.maximum(jnp.ceil(tot_f * head_pct / 100.0), 1.0)
+    tail_thr = jnp.maximum(jnp.ceil(tot_f * tail_pct / 100.0), 1.0)
+    head_bin = jnp.argmax(cum.astype(jnp.float32) >= head_thr[:, None], axis=1)
+    tail_bin = jnp.argmax(cum.astype(jnp.float32) >= tail_thr[:, None], axis=1) + 1
+
+    prewarm = head_bin.astype(jnp.float32) * bin_minutes * (1.0 - margin)
+    tail = jnp.minimum(tail_bin.astype(jnp.float32) * bin_minutes,
+                       range_minutes) * (1.0 + margin)
+    keep = jnp.maximum(tail - prewarm, 0.0)
+    seen = total + oob
+    use_hist = ((seen >= min_samples) & (cv >= cv_threshold) & (total > 0)
+                & ~(oob.astype(jnp.float32) > oob_threshold
+                    * jnp.maximum(seen, 1).astype(jnp.float32)))
+    prewarm = jnp.where(use_hist, prewarm, 0.0)
+    keep = jnp.where(use_hist, keep, range_minutes)
+    return (new_counts, oob, total, cv_sum, cv_sum_sq, prewarm, keep,
+            use_hist.astype(jnp.int32))

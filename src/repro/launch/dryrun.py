@@ -1,0 +1,346 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, with no device allocation (ShapeDtypeStruct inputs).
+
+For each cell it records:
+  * memory_analysis()  — proves the sharded program fits per-device HBM;
+  * cost_analysis()    — HLO flops/bytes for the roofline;
+  * collective bytes   — parsed from the optimized HLO text (all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute operand
+    sizes), since cost_analysis does not expose them.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results.json
+"""
+# The VERY FIRST action: force 512 host platform devices BEFORE any other
+# import can initialize jax (jax locks the device count on first init).
+import os  # noqa: E402
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import configs
+from ..configs.base import SHAPES, ShapeConfig
+from ..distributed import sharding as shd
+from ..launch import mesh as mesh_lib
+from ..launch.steps import make_prefill_step, make_serve_step, make_train_step
+from ..models import build
+from ..training import optimizer as opt
+
+HLO_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum output-shape bytes of every collective op in optimized HLO."""
+    totals = {c: 0.0 for c in _COLLECTIVES}
+    totals["count"] = 0
+    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+(\S+)", s)
+        if not m:
+            continue
+        op = m.group(2).split("(")[0]
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start") or op.startswith(c + "."):
+                base = c
+                break
+        if base is None:
+            continue
+        nbytes = 0.0
+        for dt, dims in shape_re.findall(m.group(1)):
+            if dt not in HLO_DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * HLO_DTYPE_BYTES[dt]
+        totals[base] += nbytes
+        totals["count"] += 1
+    totals["total"] = sum(totals[c] for c in _COLLECTIVES)
+    return totals
+
+
+def cpu_upcast_bytes(hlo_text: str, min_bytes: int = 1 << 26) -> float:
+    """Estimate CPU-backend bf16->f32 legalization artifacts.
+
+    XLA:CPU upcasts bf16 dots / dynamic-update-slices to f32, materializing
+    f32 copies of weights and KV caches that would NOT exist on TPU (bf16 is
+    native there). We sum large f32 `convert` outputs so per-device memory
+    can be reported both raw and TPU-adjusted (see EXPERIMENTS.md §Dry-run).
+    """
+    total = 0.0
+    for m in re.finditer(r"=\s*f32\[([\d,]+)\][^=]*?\bconvert\(", hlo_text):
+        n = 1
+        for d in m.group(1).split(","):
+            if d:
+                n *= int(d)
+        if n * 4 >= min_bytes:
+            total += n * 4
+    return total
+
+
+def _eval_param_sds(model):
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def _as_bf16(tree):
+    def f(x):
+        dt = jnp.bfloat16 if jnp.issubdtype(x.dtype, jnp.floating) else x.dtype
+        return jax.ShapeDtypeStruct(x.shape, dt)
+    return jax.tree.map(f, tree)
+
+
+def _lower_one(cfg, shape, mesh, donate=True, cast_bf16=False):
+    """Lower + compile a step for an explicit ModelConfig. Returns
+    (compiled, model). cast_bf16: bf16 param-gather/grad-RS (hillclimb)."""
+    from ..distributed import ctx
+    ctx.set_mesh(mesh)
+    model = build(cfg)
+    da = mesh_lib.data_axes(mesh)
+    dp = da if len(da) > 1 else da[0]
+    param_sds = _eval_param_sds(model)
+    pspecs = shd.param_specs(param_sds, mesh, cfg)
+    input_sds = model.input_specs(shape)
+    bspecs = shd.batch_specs(cfg, input_sds, mesh)
+    if shape.kind == "train":
+        opt_cfg = opt.OptConfig()
+        state_sds = jax.eval_shape(opt.init_state, param_sds)
+        ospecs = shd.opt_specs(param_sds, mesh, cfg)
+        step_fn = make_train_step(model, opt_cfg,
+                                  grad_shardings=shd.named(ospecs, mesh),
+                                  cast_bf16=cast_bf16)
+        state_specs = opt.TrainState(step=P(), params=ospecs, m=ospecs,
+                                     v=ospecs)
+        in_sh = (shd.named(state_specs, mesh), shd.named(bspecs, mesh))
+        out_sh = (shd.named(state_specs, mesh),
+                  {"loss": NamedSharding(mesh, P()),
+                   "grad_norm": NamedSharding(mesh, P()),
+                   "lr": NamedSharding(mesh, P())})
+        jfn = jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh,
+                      donate_argnums=(0,) if donate else ())
+        lowered = jfn.lower(state_sds, input_sds)
+    elif shape.kind == "prefill":
+        step_fn = make_prefill_step(model, max_len=shape.seq_len)
+        psds_bf16 = _as_bf16(param_sds)
+        in_sh = (shd.named(pspecs, mesh), shd.named(bspecs, mesh))
+        # Explicit output shardings: the produced KV cache must come out in
+        # the serving layout (otherwise XLA replicates it).
+        out_sds = jax.eval_shape(step_fn, psds_bf16, input_sds)
+        tok_spec = shd._fit((dp, None), out_sds[0].shape, mesh)
+        cache_out_specs = shd.cache_specs_tree(cfg, out_sds[1], mesh)
+        out_sh = (NamedSharding(mesh, tok_spec),
+                  shd.named(cache_out_specs, mesh))
+        jfn = jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jfn.lower(psds_bf16, input_sds)
+    else:
+        step_fn = make_serve_step(model)
+        psds_bf16 = _as_bf16(param_sds)
+        cache_sds = input_sds["cache"]
+        cspecs = bspecs["cache"]
+        tok_sh = NamedSharding(mesh, bspecs["token"])
+        in_sh = (shd.named(pspecs, mesh), tok_sh, shd.named(cspecs, mesh))
+        out_sh = (tok_sh, shd.named(cspecs, mesh))
+        jfn = jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh,
+                      donate_argnums=(2,) if donate else ())
+        lowered = jfn.lower(psds_bf16, input_sds["token"], cache_sds)
+    return lowered.compile(), model
+
+
+def _cell_costs(compiled) -> Dict[str, float]:
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": coll["total"],
+        "collectives": {k: v for k, v in coll.items()
+                        if k in _COLLECTIVES or k == "count"},
+    }
+
+
+def _depth_variants(cfg):
+    """(reduced_cfg_1, reduced_cfg_2, multiplier) for depth extrapolation.
+
+    cost_analysis does not multiply scan (while-loop) bodies by their trip
+    count, so per-layer costs are measured as the delta between a 2-deep and
+    a 1-deep lowering and extrapolated: total = base + (L-1)*delta.
+    """
+    # The variants are lowered UNROLLED (scan_layers=False): a lax.scan of
+    # length 1 and length 2 produce the same while-body HLO, so the delta
+    # would be ~0; unrolled shallow stacks are cheap to compile and give the
+    # true per-layer cost.
+    if cfg.family == "hybrid":
+        pat = len(cfg.block_pattern) or 3
+        n_super = cfg.n_layers // pat
+        n_tail = cfg.n_layers - n_super * pat
+        c1 = cfg.with_(n_layers=pat + n_tail, scan_layers=False)
+        c2 = cfg.with_(n_layers=2 * pat + n_tail, scan_layers=False)
+        return c1, c2, n_super - 1
+    if cfg.family == "encdec":
+        c1 = cfg.with_(n_layers=1, n_encoder_layers=1, scan_layers=False)
+        c2 = cfg.with_(n_layers=2, n_encoder_layers=2, scan_layers=False)
+        # one combined delta applied to both stacks (enc and dec depths are
+        # equal for seamless-m4t); multiplier = L-1
+        return c1, c2, cfg.n_layers - 1
+    c1 = cfg.with_(n_layers=1, scan_layers=False)
+    c2 = cfg.with_(n_layers=2, scan_layers=False)
+    return c1, c2, cfg.n_layers - 1
+
+
+def depth_scaled_costs(cfg, shape, mesh, cast_bf16=False) -> Dict[str, float]:
+    """HLO flop/byte/collective totals with scan bodies correctly scaled."""
+    c1, c2, mult = _depth_variants(cfg)
+    comp1, _ = _lower_one(c1, shape, mesh, cast_bf16=cast_bf16)
+    comp2, _ = _lower_one(c2, shape, mesh, cast_bf16=cast_bf16)
+    k1, k2 = _cell_costs(comp1), _cell_costs(comp2)
+    out = {}
+    for key in ("flops", "bytes_accessed", "collective_bytes"):
+        delta = max(k2[key] - k1[key], 0.0)
+        out[key] = k1[key] + mult * delta
+    out["collectives"] = {
+        k: k1["collectives"].get(k, 0.0)
+        + mult * max(k2["collectives"].get(k, 0.0)
+                     - k1["collectives"].get(k, 0.0), 0.0)
+        for k in set(k1["collectives"]) | set(k2["collectives"])
+    }
+    return out
+
+
+def lower_cell(arch_id: str, shape_name: str, mesh, *,
+               donate: bool = True, depth_scale: bool = True) -> Dict[str, Any]:
+    """Lower + compile one (arch, shape) cell on the given mesh.
+
+    The full-depth compile proves the sharded program builds and yields the
+    per-device memory picture; flop/byte/collective totals come from the
+    depth-delta extrapolation (scan bodies are counted once by
+    cost_analysis, so per-layer costs are measured at depths 1 and 2 and
+    scaled -- see depth_scaled_costs).
+    """
+    cfg = configs.get(arch_id)
+    shape = SHAPES[shape_name]
+    t0 = time.time()
+    compiled, model = _lower_one(cfg, shape, mesh, donate=donate)
+    t_compile = time.time() - t0
+
+    # NOTE: under SPMD partitioning both cost_analysis() and
+    # memory_analysis() report PER-DEVICE numbers (validated against an
+    # analytically known sharded matmul -- see EXPERIMENTS.md section Dry-run).
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    if depth_scale:
+        costs = depth_scaled_costs(cfg, shape, mesh)
+    else:
+        costs = _cell_costs(compiled)
+
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    result = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        "n_devices": n_dev,
+        "kind": shape.kind,
+        "flops": costs["flops"],
+        "bytes_accessed": costs["bytes_accessed"],
+        "collective_bytes": costs["collective_bytes"],
+        "collectives": costs["collectives"],
+        "argument_size": float(getattr(mem, "argument_size_in_bytes", 0)),
+        "output_size": float(getattr(mem, "output_size_in_bytes", 0)),
+        "temp_size": float(getattr(mem, "temp_size_in_bytes", 0)),
+        "peak_bytes": float(getattr(mem, "argument_size_in_bytes", 0)
+                            + getattr(mem, "temp_size_in_bytes", 0)),
+        "cpu_upcast_bytes": cpu_upcast_bytes(hlo),
+        "compile_s": round(t_compile, 2),
+        "n_params": model.n_params(),
+        "n_params_active": model.n_params(active_only=True),
+    }
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the 2x16x16 (512-chip) mesh")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL results here")
+    ap.add_argument("--optimized", action="store_true",
+                    help="enable the EXPERIMENTS.md §Perf optimizations: "
+                         "chunked cross-entropy for train cells and "
+                         "distributed flash-decode for decode cells")
+    args = ap.parse_args(argv)
+    if args.optimized:
+        from ..distributed import dist_decode
+        dist_decode.ENABLED = True
+        configs.ARCHS.update({k: v.with_(chunked_xent=True)
+                              for k, v in configs.ARCHS.items()})
+
+    cells = (list(configs.cells()) if args.all
+             else [(args.arch, args.shape)])
+    meshes = []
+    if not args.multi_pod or args.single_pod_only:
+        meshes.append(("single-pod", mesh_lib.make_production_mesh()))
+    if args.multi_pod:
+        meshes.append(("multi-pod", mesh_lib.make_production_mesh(multi_pod=True)))
+
+    done = set()
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r.get("mesh_name"), r["arch"], r["shape"]))
+                except Exception:
+                    pass
+
+    failures = 0
+    for mesh_name, mesh in meshes:
+        for arch_id, shape_name in cells:
+            tag = f"{mesh_name}:{arch_id}:{shape_name}"
+            if (mesh_name, arch_id, shape_name) in done:
+                print(f"SKIP {tag:55s} (already in {args.out})", flush=True)
+                continue
+            try:
+                with mesh:
+                    res = lower_cell(arch_id, shape_name, mesh)
+                res["mesh_name"] = mesh_name
+                per_dev_gb = res["peak_bytes"] / 2**30   # already per-device
+                print(f"OK   {tag:55s} flops/dev={res['flops']:.3e} "
+                      f"coll/dev={res['collective_bytes']:.3e}B "
+                      f"peak/dev={per_dev_gb:.2f}GiB "
+                      f"compile={res['compile_s']}s", flush=True)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(res) + "\n")
+            except Exception as e:  # noqa: BLE001 — report and continue
+                failures += 1
+                print(f"FAIL {tag:55s} {type(e).__name__}: {e}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

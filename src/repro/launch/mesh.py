@@ -1,0 +1,52 @@
+"""Production meshes (defined as FUNCTIONS so importing this module never
+touches jax device state).
+
+Targets (per chip): TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI. Single pod = 16x16 = 256 chips; multi-pod = 2 pods = 512 chips with the
+leading "pod" axis mapped across the DCN/ICI pod interconnect.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+# Hardware constants used by the roofline analysis (benchmarks/roofline.py).
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape: Tuple[int, ...] = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices but only {len(devices)} present; "
+            "the dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before any jax import")
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(dev, axes)
+
+
+def make_host_mesh(model_parallel: int = 1) -> Mesh:
+    """Tiny mesh over the real host devices (tests / examples)."""
+    devices = jax.devices()
+    mp = min(model_parallel, len(devices))
+    dp = len(devices) // mp
+    dev = np.asarray(devices[: dp * mp]).reshape(dp, mp)
+    return Mesh(dev, ("data", "model"))
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes that carry the batch (pod included when present)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def model_axis(mesh: Mesh) -> str:
+    return "model"

@@ -1,0 +1,77 @@
+"""Step builders: train_step / prefill_step / serve_step for any arch.
+
+These are the functions the launcher jits with explicit in/out shardings and
+the dry-run lowers against ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import Model
+from ..training import optimizer as opt
+
+
+def make_train_step(model: Model, opt_cfg: opt.OptConfig,
+                    grad_shardings=None, cast_bf16: bool = False) -> Callable:
+    """Build the train step.
+
+    grad_shardings: optional pytree of NamedSharding matching the params —
+    constraining the gradients to the ZeRO layout makes XLA reduce-scatter
+    them during the backward pass instead of materializing TP-only
+    (replicated-over-data) gradients before the optimizer update.
+
+    cast_bf16: cast the fp32 master params to bf16 *before* they leave their
+    ZeRO shards, so the per-layer all-gathers (and the matching gradient
+    reduce-scatters) move half the bytes. The optimizer math stays fp32.
+    """
+    def train_step(state: opt.TrainState, batch: Dict):
+        if cast_bf16:
+            # Cast to bf16 while STILL in the ZeRO layout (the sharding
+            # constraint pins the converted copy to the sharded spec), and
+            # differentiate w.r.t. the bf16 copy: the per-layer all-gathers
+            # AND the backward reduce-scatters then carry bf16, halving the
+            # ZeRO collective bytes. Optimizer math stays fp32.
+            p_half = jax.tree.map(
+                lambda p: (p.astype(jnp.bfloat16)
+                           if p.dtype == jnp.float32 else p), state.params)
+            if grad_shardings is not None:
+                p_half = jax.tree.map(jax.lax.with_sharding_constraint,
+                                      p_half, grad_shardings)
+            loss, grads = jax.value_and_grad(
+                lambda ph: model.loss(ph, batch))(p_half)
+            if grad_shardings is not None:
+                grads = jax.tree.map(jax.lax.with_sharding_constraint, grads,
+                                     grad_shardings)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            loss, grads = jax.value_and_grad(
+                lambda p: model.loss(p, batch))(state.params)
+            if grad_shardings is not None:
+                grads = jax.tree.map(jax.lax.with_sharding_constraint, grads,
+                                     grad_shardings)
+        new_state, metrics = opt.apply_updates(state, grads, opt_cfg)
+        metrics = dict(metrics, loss=loss)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model, max_len: int) -> Callable:
+    def prefill_step(params, batch: Dict):
+        logits, cache = model.prefill(params, batch.get("tokens"), max_len,
+                                      embeds=batch.get("embeds"))
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return prefill_step
+
+
+def make_serve_step(model: Model) -> Callable:
+    def serve_step(params, token, cache):
+        logits, new_cache = model.decode_step(params, token, cache)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_cache
+
+    return serve_step

@@ -1,0 +1,60 @@
+"""Training launcher.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --steps 50 \
+      --reduced --batch 8 --seq 256 --checkpoint-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from .. import configs
+from ..configs.base import SHAPES
+from ..training import optimizer as opt
+from ..training import train_loop
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-test-sized config (CPU friendly)")
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--fault-at-step", type=int, default=None,
+                    help="inject a crash (tests restart)")
+    args = ap.parse_args(argv)
+
+    cfg = configs.get(args.arch)
+    if args.reduced:
+        cfg = configs.reduced(cfg)
+    shape = SHAPES[args.shape]
+    if args.seq:
+        shape = dataclasses.replace(shape, seq_len=args.seq)
+    loop = train_loop.LoopConfig(
+        steps=args.steps, checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every)
+    opt_cfg = opt.OptConfig(lr=args.lr, total_steps=args.steps)
+    if args.fault_at_step:
+        from ..runtime.fault_tolerance import run_with_restarts
+        report = run_with_restarts(cfg, shape, loop, opt_cfg,
+                                   batch_override=args.batch,
+                                   fault_at_step=args.fault_at_step)
+        res = report.result
+        print(f"[done after {report.attempts} attempts] "
+              f"loss {res['first_loss']:.4f} -> {res['final_loss']:.4f}")
+    else:
+        res = train_loop.train(cfg, shape, loop, opt_cfg,
+                               batch_override=args.batch)
+        print(f"[done] loss {res['first_loss']:.4f} -> {res['final_loss']:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,4 @@
+"""Model zoo: dense / MoE / SSM / hybrid / enc-dec families."""
+from .model import Model, build
+
+__all__ = ["Model", "build"]

@@ -1,0 +1,30 @@
+"""Modality frontend STUBS (DESIGN.md §2, §4).
+
+The assigned [vlm]/[audio] entries specify the transformer BACKBONE only —
+per instructions the modality frontend is a stub whose job is to provide
+precomputed patch/frame embeddings with the right shapes. These helpers
+generate them for examples and smoke tests; `input_specs()` provides the
+ShapeDtypeStruct versions for the dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+
+def vision_patches(cfg: ModelConfig, batch: int, key=None) -> jnp.ndarray:
+    """Anyres tiling stand-in: `frontend_tokens` patch embeddings per image
+    (llava-next: 672x672 anyres -> 2880 patch tokens after projection)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return 0.02 * jax.random.normal(
+        key, (batch, cfg.frontend_tokens, cfg.d_model), jnp.float32)
+
+
+def audio_frames(cfg: ModelConfig, batch: int, key=None) -> jnp.ndarray:
+    """w2v-BERT feature-extractor stand-in: `frontend_tokens` frame
+    embeddings per utterance (seamless-m4t medium: 1024 frames)."""
+    key = key if key is not None else jax.random.PRNGKey(1)
+    return 0.02 * jax.random.normal(
+        key, (batch, cfg.frontend_tokens, cfg.d_model), jnp.float32)

@@ -1,0 +1,376 @@
+"""Shared neural-net layers (pure JAX, param pytrees, no framework).
+
+Conventions:
+  * params are nested dicts of jnp arrays; init functions take a PRNG key;
+  * activations flow in ``cfg.dtype`` (bf16 on TPU), params are stored fp32
+    and cast at use (master-weight training);
+  * attention is GQA with RoPE; ``window > 0`` masks to a local band;
+  * KV caches are dicts ``{"k": [B, L, Hkv, hd], "v": ..., "pos": i32}``.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+Params = Dict
+
+
+def compute_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def scan_blocks(body, carry, xs, use_scan: bool = True):
+    """lax.scan over stacked layer params, or an unrolled Python loop.
+
+    The unrolled form exists for cost accounting: XLA's cost_analysis counts
+    a while-loop body once (not x trip count), so the dry-run lowers shallow
+    unrolled variants to measure true per-layer flops/bytes/collectives.
+    """
+    if use_scan:
+        return jax.lax.scan(body, carry, xs)
+    L = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(L):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        stacked = None
+    return carry, stacked
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return scale * jax.random.normal(key, shape, dtype)
+
+
+def linear_init(key, d_in: int, d_out: int, bias: bool = False) -> Params:
+    p = {"w": _init(key, (d_in, d_out))}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def linear(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def rmsnorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: [B, S, H, hd]; positions: [B, S] (int)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq       # [B,S,half]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1.astype(x.dtype), y2.astype(x.dtype)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional local window, optional cross-attention)
+# ---------------------------------------------------------------------------
+
+def attention_init(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    hd = cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": linear_init(ks[0], cfg.d_model, cfg.n_heads * hd, cfg.qkv_bias),
+        "wk": linear_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd, cfg.qkv_bias),
+        "wv": linear_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd, cfg.qkv_bias),
+        "wo": linear_init(ks[3], cfg.n_heads * hd, cfg.d_model),
+    }
+
+
+# Above this many query rows the reference attention switches to the
+# q-blocked (flash-style) path so the S x S score matrix never materializes.
+CHUNKED_Q_THRESHOLD = 8192
+
+
+def _sdpa_chunked(q, k, v, *, causal: bool, window: int, q_offset,
+                  kv_len=None, q_block: int = 1024) -> jnp.ndarray:
+    """Query-blocked attention: lax.scan over q blocks; each block computes
+    complete softmax rows against the full K/V, so no online rescaling is
+    needed and the transient is O(bq * Skv) instead of O(Sq * Skv)."""
+    from ..distributed import ctx
+    B, Sq, Hq, hd = q.shape
+    Skv = k.shape[1]
+    nq = Sq // q_block
+    qb = jnp.moveaxis(q.reshape(B, nq, q_block, Hq, hd), 1, 0)
+
+    k_pos = jnp.arange(Skv)[None, None, :]
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def body(_, xs):
+        qblk, qi = xs                                   # [B,bq,H,d], scalar
+        qf = qblk.astype(jnp.float32) / math.sqrt(hd)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+        msize = ctx.axis_size("model")
+        if Hq % max(msize, 1) == 0:
+            logits = ctx.hint(logits, "data", "model", None, None)
+        else:
+            logits = ctx.hint(logits, "data", None, "model", None)
+        q_pos = (qi * q_block + jnp.arange(q_block)[:, None]
+                 + jnp.asarray(q_offset).reshape(-1, 1, 1))
+        mask = jnp.ones((1, q_block, Skv), bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window and window > 0:
+            mask &= k_pos > q_pos - window
+        if kv_len is not None:
+            mask &= k_pos < jnp.asarray(kv_len).reshape(-1, 1, 1)
+        logits = jnp.where(mask[:, None, :, :], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(body, None, (qb, jnp.arange(nq)))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, Hq, hd)
+
+
+def _sdpa(q, k, v, *, causal: bool, window: int, q_offset,
+          kv_len: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Reference scaled-dot-product attention with GQA.
+
+    q: [B, Sq, Hq, hd], k/v: [B, Skv, Hkv, hd]. ``q_offset`` is the absolute
+    position of q[0] (scalar or per-batch [B]) so causal masks are correct for
+    decode. ``kv_len`` optionally masks out cache positions >= kv_len.
+
+    Sharding: KV heads are broadcast up to the q heads (Megatron-style GQA
+    replication — cheap, K/V are small), so the attention matrix shards over
+    (batch=data, heads=model); when heads don't divide the model axis the
+    query-sequence dim takes it instead (sequence parallelism). The `ctx.hint`
+    calls are no-ops outside a mesh.
+    """
+    from ..distributed import ctx
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    if group > 1:
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+    if Sq >= CHUNKED_Q_THRESHOLD and Sq % 1024 == 0:
+        return _sdpa_chunked(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset, kv_len=kv_len)
+    qf = q.astype(jnp.float32) / math.sqrt(hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", qf, k.astype(jnp.float32))
+    msize = ctx.axis_size("model")
+    if Hq % max(msize, 1) == 0:
+        logits = ctx.hint(logits, "data", "model", None, None)
+    else:
+        logits = ctx.hint(logits, "data", None, "model", None)
+
+    q_pos = jnp.arange(Sq)[:, None] + jnp.asarray(q_offset).reshape(-1, 1, 1)
+    k_pos = jnp.arange(Skv)[None, None, :]
+    mask = jnp.ones((1, Sq, Skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window and window > 0:
+        mask &= k_pos > q_pos - window
+    if kv_len is not None:
+        mask &= k_pos < jnp.asarray(kv_len).reshape(-1, 1, 1)
+    logits = jnp.where(mask[:, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_apply(
+    p: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    cache: Optional[Params] = None,
+    kv_source: Optional[jnp.ndarray] = None,
+    use_rope: bool = True,
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """Self- or cross-attention.
+
+    cache: if given, decode mode — append this step's K/V at ``cache['pos']``
+    and attend over the whole cache. kv_source: cross-attention memory
+    (encoder states); K/V come from it and no cache/causality applies.
+    """
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = linear(p["wq"], x).reshape(B, S, cfg.n_heads, hd)
+    kv_in = kv_source if kv_source is not None else x
+    k = linear(p["wk"], kv_in).reshape(B, kv_in.shape[1], cfg.n_kv_heads, hd)
+    v = linear(p["wv"], kv_in).reshape(B, kv_in.shape[1], cfg.n_kv_heads, hd)
+
+    if kv_source is None and use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        pos = cache["pos"]
+        from ..distributed import dist_decode
+        if dist_decode.applicable(cache["k"].shape[1], S):
+            # distributed flash-decode: sequence-sharded cache, local write,
+            # log-sum-exp merge (see distributed/dist_decode.py)
+            out, ck, cv = dist_decode.decode_attention(
+                q, k, v, cache["k"], cache["v"], pos)
+            new_cache = {"k": ck, "v": cv, "pos": pos + S}
+        else:
+            # decode: scatter K/V of this step into the cache at `pos`
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+            new_cache = {"k": ck, "v": cv, "pos": pos + S}
+            out = _sdpa(q, ck, cv, causal=causal, window=window,
+                        q_offset=pos, kv_len=pos + S)
+    elif kv_source is not None:
+        out = _sdpa(q, k, v, causal=False, window=0, q_offset=0)
+    else:
+        if cfg.use_kernels and S % 128 == 0 and hd % 8 == 0 and causal and kv_source is None:
+            from ..kernels import ops as kops
+            out = kops.flash_attention(q, k, v, causal=True, window=window)
+        else:
+            out = _sdpa(q, k, v, causal=causal, window=window, q_offset=0)
+    y = linear(p["wo"], out.reshape(B, S, cfg.n_heads * hd))
+    return y, new_cache
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int,
+               dtype) -> Params:
+    """Stacked (scan-compatible) KV cache for n_layers attention layers."""
+    hd = cfg.hd
+    return {
+        "k": jnp.zeros((n_layers, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((n_layers, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": linear_init(ks[0], d_model, d_ff),
+        "wg": linear_init(ks[1], d_model, d_ff),
+        "wo": linear_init(ks[2], d_ff, d_model),
+    }
+
+
+def mlp_apply(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return linear(p["wo"], jax.nn.silu(linear(p["wg"], x)) * linear(p["wi"], x))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab: int, d_model: int) -> Params:
+    # GPT-style 0.02 scale: keeps tied-unembedding logits O(1) at init.
+    return {"table": _init(key, (vocab, d_model), scale=0.02)}
+
+
+def embed(p: Params, tokens: jnp.ndarray, dtype) -> jnp.ndarray:
+    return p["table"].astype(dtype)[tokens]
+
+
+def unembed(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ p["table"].astype(x.dtype).T
+
+
+def softmax_xent_chunked(x: jnp.ndarray, table: jnp.ndarray,
+                         labels: jnp.ndarray,
+                         mask: Optional[jnp.ndarray] = None,
+                         transpose_table: bool = False,
+                         chunk: int = 512) -> jnp.ndarray:
+    """Cross-entropy WITHOUT materializing the [B, S, V] logits.
+
+    Scans over sequence chunks: each step computes a [B, chunk, V] logit
+    block, reduces it to per-token (logz, label-logit) scalars, and discards
+    it. For big-vocab models (256k) this removes the dominant memory-traffic
+    term of the training step (see EXPERIMENTS.md §Perf cell D).
+
+    x: final hidden [B, S, D]; table: unembedding [V, D] (tied) or head
+    weight [D, V] (transpose_table=True).
+    """
+    from ..distributed import ctx
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk -= 1
+    nc = S // chunk
+    xs = jnp.moveaxis(x.reshape(B, nc, chunk, D), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0)
+
+    def body(_, inp):
+        xc, lc = inp
+        w = table.astype(xc.dtype)
+        logits = (xc @ w.T if not transpose_table else xc @ w)
+        logits = ctx.hint(logits, "data", None, "model").astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        onehot = (jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+                  == lc[..., None])
+        ll = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+        return None, logz - ll
+
+    body = jax.checkpoint(body)
+    _, losses = jax.lax.scan(body, None, (xs, ls))
+    loss = jnp.moveaxis(losses, 0, 1).reshape(B, S)
+    if mask is not None:
+        loss = loss * mask
+        return loss.sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss.mean()
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean token cross-entropy in fp32.
+
+    The label logit is extracted with an iota-compare masked reduction (not
+    take_along_axis): a gather across the vocab dim would force an all-gather
+    of the vocab-sharded logits, whereas the masked reduce partitions cleanly
+    (partial sums + a tiny cross-shard reduce).
+    """
+    from ..distributed import ctx
+    logits = ctx.hint(logits, "data", None, "model").astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    V = logits.shape[-1]
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+              == labels[..., None])
+    ll = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    loss = logz - ll
+    if mask is not None:
+        loss = loss * mask
+        return loss.sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss.mean()

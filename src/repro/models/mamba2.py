@@ -1,0 +1,268 @@
+"""Mamba-2 (SSD — state-space duality) language model [arXiv:2405.21060].
+
+TPU adaptation: the CUDA selective-scan is replaced by the *chunked SSD
+block decomposition* — within a chunk everything is dense matmuls (MXU
+friendly); across chunks a tiny [H, N, P] state recurrence is carried with a
+``lax.scan``. The same decomposition is what `repro.kernels.ssd_scan`
+implements as a Pallas kernel (sequential grid over chunks).
+
+Decode is O(1)/token: state update ``S <- a*S + dt * B ⊗ x`` plus a rolling
+causal-conv buffer.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from ..distributed import ctx
+
+Params = Dict
+
+
+# ---------------------------------------------------------------------------
+# SSD core (reference; kernels/ssd_scan.py mirrors this math)
+# ---------------------------------------------------------------------------
+
+def _effective_chunk(l: int, chunk: int) -> int:
+    c = min(chunk, l)
+    while l % c:
+        c -= 1
+    return max(c, 1)
+
+
+def ssd_reference(x, dt, A, B, C, chunk: int, initial_state=None):
+    """Chunked SSD scan.
+
+    x:  [b, l, h, p]  (inputs, already dt-scaled outside? NO: raw)
+    dt: [b, l, h]     (positive step sizes)
+    A:  [h]           (negative decay rates)
+    B:  [b, l, n]     (input projection, shared across heads)
+    C:  [b, l, n]     (output projection, shared across heads)
+    Returns (y [b,l,h,p], final_state [b,h,n,p]).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    chunk = _effective_chunk(l, chunk)
+    nc = l // chunk
+    xb = x.reshape(b, nc, chunk, h, p)
+    dtb = dt.reshape(b, nc, chunk, h)
+    Bb = B.reshape(b, nc, chunk, n)
+    Cb = C.reshape(b, nc, chunk, n)
+
+    dA = dtb * A[None, None, None, :]             # [b,nc,q,h] (negative)
+    cum = jnp.cumsum(dA, axis=2)                  # running log-decay in chunk
+    # intra-chunk: M[i,j] = C_i . B_j * exp(cum_i - cum_j) * dt_j  (j <= i)
+    CB = jnp.einsum("bcin,bcjn->bcij", Cb, Bb)    # [b,nc,q,q]
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [b,nc,i,j,h]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    M = CB[..., None] * decay                     # [b,nc,i,j,h]
+    xdt = xb * dtb[..., None]                     # dt-scaled inputs
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xdt)
+
+    # chunk-local states: S_c = sum_j exp(cum_last - cum_j) B_j (dt_j x_j)
+    last = cum[:, :, -1:, :]                      # [b,nc,1,h]
+    w = jnp.exp(last - cum)                       # [b,nc,q,h]
+    S_loc = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bb, w * dtb, xb)
+
+    # inter-chunk recurrence (tiny state [b,h,n,p])
+    chunk_decay = jnp.exp(last[:, :, 0, :])       # [b,nc,h]
+    init = (jnp.zeros((b, h, n, p), x.dtype) if initial_state is None
+            else initial_state)
+
+    def step(S, inputs):
+        dec, S_c = inputs                         # [b,h], [b,h,n,p]
+        S_new = S * dec[..., None, None] + S_c
+        return S_new, S                           # emit state *entering* chunk
+
+    Ss = jnp.moveaxis(S_loc, 1, 0)                # [nc,b,h,n,p]
+    decs = jnp.moveaxis(chunk_decay, 1, 0)        # [nc,b,h]
+    final, S_in = jax.lax.scan(step, init, (decs, Ss))
+
+    # inter-chunk output: y_i += C_i . (exp(cum_i) * S_entering)
+    S_in = jnp.moveaxis(S_in, 0, 1)               # [b,nc,h,n,p]
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp", Cb, jnp.exp(cum), S_in)
+    y = (y_intra + y_inter).reshape(b, l, h, p)
+    return y, final
+
+
+def ssd_decode_step(S, x, dt, A, B, C):
+    """One-token SSD update. S: [b,h,n,p]; x: [b,h,p]; dt: [b,h]; B,C: [b,n]."""
+    a = jnp.exp(dt * A[None, :])                                   # [b,h]
+    S = S * a[..., None, None] + jnp.einsum("bn,bh,bhp->bhnp", B, dt, x)
+    y = jnp.einsum("bn,bhnp->bhp", C, S)
+    return y, S
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ModelConfig) -> Params:
+    D, DI, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    conv_dim = DI + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": L.rmsnorm_init(D),
+        # in_proj -> [z (DI), xBC (DI + 2N), dt (H)]
+        "in_proj": L.linear_init(ks[0], D, 2 * DI + 2 * N + H),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (cfg.conv_width, conv_dim), jnp.float32),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": L.rmsnorm_init(DI),
+        "out_proj": L.linear_init(ks[2], DI, D),
+    }
+
+
+def _causal_conv(x, w, b):
+    """x: [B, L, C]; w: [W, C] depthwise causal conv."""
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + pad[:, i: i + x.shape[1], :] * w[i].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+def _split_proj(cfg, proj):
+    DI, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    z = proj[..., :DI]
+    xBC = proj[..., DI: 2 * DI + 2 * N]
+    dt = proj[..., 2 * DI + 2 * N:]
+    return z, xBC, dt
+
+
+def block_apply(cfg: ModelConfig, p: Params, x, state=None, use_kernel=False):
+    """state: None (full seq) or dict(ssm [B,H,N,P], conv [B,W-1,convdim])."""
+    B_, Lq, D = x.shape
+    DI, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    h = L.rmsnorm(p["ln"], x, cfg.norm_eps)
+    proj = L.linear(p["in_proj"], h)
+    z, xBC, dt = _split_proj(cfg, proj)
+    A = -jnp.exp(p["A_log"])
+
+    new_state = None
+    if state is None:
+        xBC_raw = xBC
+        xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+        xs = xBC[..., :DI].reshape(B_, Lq, H, P)
+        Bm = xBC[..., DI: DI + N]
+        Cm = xBC[..., DI + N:]
+        dts = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+        if use_kernel and cfg.use_kernels and Lq % cfg.ssm_chunk == 0:
+            from ..kernels import ops as kops
+            y, S_fin = kops.ssd_scan(xs, dts, A, Bm, Cm, chunk=cfg.ssm_chunk)
+        else:
+            y, S_fin = ssd_reference(xs.astype(jnp.float32), dts, A,
+                                     Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                                     cfg.ssm_chunk)
+        y = y.astype(x.dtype)
+        W = cfg.conv_width
+        new_state = {"ssm": S_fin.astype(jnp.float32),
+                     "conv": xBC_raw[:, Lq - (W - 1):, :]}
+    else:
+        # decode: roll the conv buffer, single-step SSD
+        conv_buf = jnp.concatenate([state["conv"], xBC], axis=1)  # [B, W, C]
+        xBC1 = jnp.einsum("bwc,wc->bc", conv_buf,
+                          p["conv_w"].astype(x.dtype)) + p["conv_b"].astype(x.dtype)
+        xBC1 = jax.nn.silu(xBC1)
+        xs = xBC1[..., :DI].reshape(B_, H, P)
+        Bm = xBC1[..., DI: DI + N].astype(jnp.float32)
+        Cm = xBC1[..., DI + N:].astype(jnp.float32)
+        dts = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+        y1, S = ssd_decode_step(state["ssm"], xs.astype(jnp.float32), dts, A, Bm, Cm)
+        y = y1[:, None].astype(x.dtype)
+        xs = xs[:, None]
+        new_state = {"ssm": S, "conv": conv_buf[:, 1:]}
+
+    y = y + xs.reshape(B_, Lq, H, P) * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(B_, Lq, DI)
+    y = L.rmsnorm(p["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    return x + L.linear(p["out_proj"], y), new_state
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+def init(cfg: ModelConfig, key) -> Params:
+    keys = jax.random.split(key, cfg.n_layers + 1)
+    stacked = jax.vmap(lambda k: block_init(k, cfg))(keys[: cfg.n_layers])
+    return {
+        "embed": L.embedding_init(keys[-1], cfg.vocab, cfg.d_model),
+        "layers": stacked,
+        "ln_f": L.rmsnorm_init(cfg.d_model),
+    }
+
+
+def forward(cfg: ModelConfig, params: Params, tokens):
+    dtype = L.compute_dtype(cfg)
+    x = L.embed(params["embed"], tokens, dtype)
+
+    def body(x, lp):
+        x, _ = block_apply(cfg, lp, x, use_kernel=True)
+        return ctx.hint(x, "data", "model", None), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = L.scan_blocks(body, x, params["layers"], cfg.scan_layers)
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return L.unembed(params["embed"], x)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict):
+    logits = forward(cfg, params, batch["tokens"])
+    return L.softmax_xent(logits, batch["labels"], batch.get("mask"))
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype) -> Params:
+    N, H, P = cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    conv_dim = cfg.d_inner + 2 * N
+    return {
+        "ssm": jnp.zeros((cfg.n_layers, batch, H, N, P), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.conv_width - 1, conv_dim), dtype),
+    }
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens, max_len: int, embeds=None):
+    """Process the prompt; return (last logits, recurrent state).
+
+    The state is O(1) in sequence length — this is what makes long_500k
+    viable for this family.
+    """
+    dtype = L.compute_dtype(cfg)
+    x = L.embed(params["embed"], tokens, dtype)
+
+    def body(x, lp):
+        x, ns = block_apply(cfg, lp, x, use_kernel=True)
+        return ctx.hint(x, "data", "model", None), (ns["ssm"], ns["conv"])
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, (ssms, convs) = L.scan_blocks(body, x, params["layers"], cfg.scan_layers)
+    x = L.rmsnorm(params["ln_f"], x[:, -1:], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)
+    return logits, {"ssm": ssms, "conv": convs,
+                    "pos": jnp.asarray(tokens.shape[1], jnp.int32)}
+
+
+def decode_step(cfg: ModelConfig, params: Params, token, cache):
+    dtype = L.compute_dtype(cfg)
+    x = L.embed(params["embed"], token[:, None], dtype)
+
+    def body(x, xs):
+        lp, ssm, conv = xs
+        x, ns = block_apply(cfg, lp, x, state={"ssm": ssm, "conv": conv})
+        return x, (ns["ssm"], ns["conv"])
+
+    x, (ssms, convs) = L.scan_blocks(body, x, (params["layers"], cache["ssm"],
+                                               cache["conv"]), cfg.scan_layers)
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)[:, 0]
+    return logits, {"ssm": ssms, "conv": convs, "pos": cache["pos"] + 1}

@@ -1,0 +1,204 @@
+"""Unified model interface over all architecture families.
+
+``Model(cfg)`` exposes:
+  * ``init(key)``                              — parameter pytree
+  * ``loss(params, batch)``                    — scalar LM loss (train)
+  * ``forward(params, ...)``                   — full-seq logits
+  * ``prefill(params, tokens, max_len, ...)``  — (logits, cache/state)
+  * ``decode_step(params, token, cache)``      — (logits, cache/state)
+  * ``input_specs(shape)``                     — ShapeDtypeStruct stand-ins
+    for every input of the step the shape exercises (used by the dry-run:
+    weak-type-correct, shardable, no device allocation)
+  * ``make_serve_state(shape)``                — cache specs for decode cells
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import layers as L
+from . import mamba2, moe, rglru, transformer
+
+Params = Dict
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        fam = cfg.family
+        if fam == "dense":
+            self._m = transformer
+        elif fam == "moe":
+            self._m = moe
+        elif fam == "ssm":
+            self._m = mamba2
+        elif fam == "hybrid":
+            self._m = rglru
+        elif fam == "encdec":
+            self._m = transformer  # enc-dec entry points below
+        else:
+            raise ValueError(f"unknown family {fam}")
+
+    # -- parameters -----------------------------------------------------------
+
+    def init(self, key) -> Params:
+        if self.cfg.family == "encdec":
+            return transformer.encdec_init(self.cfg, key)
+        return self._m.init(self.cfg, key)
+
+    def param_count(self, params: Params) -> int:
+        return int(sum(np.prod(p.shape) for p in jax.tree.leaves(params)))
+
+    # -- steps ----------------------------------------------------------------
+
+    def loss(self, params: Params, batch: Dict) -> jnp.ndarray:
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return transformer.encdec_loss(cfg, params, batch)
+        return self._m.loss_fn(cfg, params, batch)
+
+    def forward(self, params: Params, tokens=None, embeds=None):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return transformer.encdec_forward(cfg, params, tokens, embeds)
+        if cfg.family == "dense":
+            return transformer.forward(cfg, params, tokens, embeds)
+        return self._m.forward(cfg, params, tokens)
+
+    def prefill(self, params: Params, tokens, max_len: int, embeds=None):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return transformer.encdec_prefill(cfg, params, tokens, max_len,
+                                              embeds=embeds)
+        return self._m.prefill(cfg, params, tokens, max_len, embeds=embeds)
+
+    def decode_step(self, params: Params, token, cache):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return transformer.encdec_decode_step(cfg, params, token, cache)
+        return self._m.decode_step(cfg, params, token, cache)
+
+    # -- dry-run stand-ins ----------------------------------------------------
+
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for the step this shape lowers.
+
+        train/prefill: the full batch. decode: one new token per sequence.
+        Modality frontends are STUBS — ``embeds`` are precomputed frame/patch
+        embeddings with the model's d_model.
+        """
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        f32 = jnp.float32
+        i32 = jnp.int32
+        sds = jax.ShapeDtypeStruct
+        specs: Dict[str, Any] = {}
+        if shape.kind == "train":
+            if cfg.frontend == "vision":
+                s_text = S - cfg.frontend_tokens
+                specs["tokens"] = sds((B, s_text), i32)
+                specs["embeds"] = sds((B, cfg.frontend_tokens, cfg.d_model), f32)
+                specs["labels"] = sds((B, s_text), i32)
+            elif cfg.family == "encdec":
+                specs["tokens"] = sds((B, S), i32)
+                specs["embeds"] = sds((B, cfg.frontend_tokens, cfg.d_model), f32)
+                specs["labels"] = sds((B, S), i32)
+            else:
+                specs["tokens"] = sds((B, S), i32)
+                specs["labels"] = sds((B, S), i32)
+        elif shape.kind == "prefill":
+            if cfg.frontend == "vision":
+                specs["tokens"] = sds((B, S - cfg.frontend_tokens), i32)
+                specs["embeds"] = sds((B, cfg.frontend_tokens, cfg.d_model), f32)
+            elif cfg.family == "encdec":
+                specs["tokens"] = sds((B, S), i32)
+                specs["embeds"] = sds((B, cfg.frontend_tokens, cfg.d_model), f32)
+            else:
+                specs["tokens"] = sds((B, S), i32)
+        else:  # decode: one new token against a cache of length S
+            specs["token"] = sds((B,), i32)
+            specs["cache"] = self.cache_specs(B, S)
+        return specs
+
+    def cache_specs(self, batch: int, kv_len: int):
+        """ShapeDtypeStructs for the decode cache at a given KV length."""
+        cfg = self.cfg
+        dtype = L.compute_dtype(cfg)
+        sds = jax.ShapeDtypeStruct
+        as_spec = lambda t: jax.tree.map(
+            lambda x: sds(x.shape, x.dtype), t)
+        if cfg.family == "ssm":
+            st = mamba2.init_state(cfg, batch, dtype)
+            return {**as_spec(st), "pos": sds((), jnp.int32)}
+        if cfg.family == "hybrid":
+            return as_spec(rglru.init_cache(cfg, batch, dtype))
+        hd = cfg.hd
+        cache = {
+            "k": sds((cfg.n_layers, batch, kv_len, cfg.n_kv_heads, hd), dtype),
+            "v": sds((cfg.n_layers, batch, kv_len, cfg.n_kv_heads, hd), dtype),
+            "pos": sds((), jnp.int32),
+        }
+        if cfg.family == "encdec":
+            cache["enc"] = sds((batch, cfg.frontend_tokens, cfg.d_model), dtype)
+        return cache
+
+    def make_inputs(self, shape: ShapeConfig, key=None, concrete_batch=None):
+        """Concrete random inputs matching input_specs (smoke tests)."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        specs = self.input_specs(shape if concrete_batch is None else
+                                 dataclasses.replace(shape, global_batch=concrete_batch))
+        out = {}
+        for name, spec in specs.items():
+            if name == "cache":
+                out[name] = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+            elif spec.dtype == jnp.int32:
+                key, k = jax.random.split(key)
+                out[name] = jax.random.randint(k, spec.shape, 0, self.cfg.vocab, jnp.int32)
+            else:
+                key, k = jax.random.split(key)
+                out[name] = 0.02 * jax.random.normal(k, spec.shape, spec.dtype)
+        return out
+
+    # -- analytic model flops (roofline §: MODEL_FLOPS) -----------------------
+
+    def n_params(self, active_only: bool = False) -> int:
+        """Analytic parameter count (active = top_k experts only for MoE)."""
+        cfg = self.cfg
+        D, V = cfg.d_model, cfg.vocab
+        hd = cfg.hd
+        attn = D * hd * (cfg.n_heads + 2 * cfg.n_kv_heads) + cfg.n_heads * hd * D
+        if cfg.family == "dense":
+            per_layer = attn + 3 * D * cfg.d_ff
+            total = cfg.n_layers * per_layer + V * D * (1 if cfg.tie_embeddings else 2)
+        elif cfg.family == "moe":
+            e = cfg.top_k if active_only else cfg.n_experts
+            per_layer = attn + e * 3 * D * cfg.d_expert + D * cfg.n_experts
+            total = cfg.n_layers * per_layer + 2 * V * D
+        elif cfg.family == "ssm":
+            DI, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+            per_layer = D * (2 * DI + 2 * N + H) + DI * D
+            total = cfg.n_layers * per_layer + V * D
+        elif cfg.family == "hybrid":
+            DR = cfg.rglru_d_rnn or D
+            rec = 2 * D * DR + 2 * DR * DR + DR * D
+            mlp = 3 * D * cfg.d_ff
+            n_super, n_tail = rglru._structure(cfg)
+            total = (n_super * (2 * rec + attn + 3 * mlp) +
+                     n_tail * (rec + mlp) + V * D)
+        elif cfg.family == "encdec":
+            per_enc = attn + 3 * D * cfg.d_ff
+            per_dec = 2 * attn + 3 * D * cfg.d_ff
+            total = (cfg.n_encoder_layers * per_enc + cfg.n_layers * per_dec
+                     + 2 * V * D)
+        else:
+            raise ValueError(cfg.family)
+        return int(total)
+
+
+def build(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,236 @@
+"""Mixture-of-Experts transformer (Qwen3-MoE / OLMoE family).
+
+The FFN of every block is a top-k routed MoE. Dispatch follows the GShard
+capacity-based algorithm (groups of ``moe_group_size`` tokens, capacity
+``ceil(top_k * T * cf / E)`` slots per expert per group, overflow dropped):
+
+  * ``moe_impl="einsum"`` — the classical dense dispatch/combine einsum
+    ([G,T,E,C] one-hot). Paper-standard baseline; flops-heavy but maps
+    directly onto the MXU.
+  * ``moe_impl="gather"`` — index-based dispatch (take/segment-sum) with the
+    same routing semantics and far fewer flops; the beyond-paper optimized
+    path (see EXPERIMENTS.md §Perf).
+
+Expert weights are stacked ``[E, d_model, d_expert]`` and shard naturally
+over the ``model`` mesh axis (expert parallelism).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from ..distributed import ctx
+from .transformer import _logits, block_init
+
+Params = Dict
+
+MOE_IMPL = "einsum"  # module default; overridden via cfg-like plumbing
+
+
+def moe_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_expert
+    s_in = 1.0 / jnp.sqrt(D)
+    s_out = 1.0 / jnp.sqrt(F)
+    return {
+        "router": {"w": s_in * jax.random.normal(ks[0], (D, E), jnp.float32)},
+        "wi": s_in * jax.random.normal(ks[1], (E, D, F), jnp.float32),
+        "wg": s_in * jax.random.normal(ks[2], (E, D, F), jnp.float32),
+        "wo": s_out * jax.random.normal(ks[3], (E, F, D), jnp.float32),
+    }
+
+
+def _route(cfg: ModelConfig, p: Params, xg: jnp.ndarray):
+    """Router + slot assignment. xg: [G, T, D] -> gating structures."""
+    G, T, D = xg.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = max(int(cfg.moe_capacity_factor * k * T / E), 1)
+
+    logits = (xg.astype(jnp.float32) @ p["router"]["w"]).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)                       # [G,T,E]
+    topv, topi = jax.lax.top_k(gates, k)                          # [G,T,k]
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # Slot positions: iterate the k choices in priority order, tracking how
+    # many tokens each expert has admitted so far in the group.
+    counts = jnp.zeros((G, E), jnp.int32)
+    pos_list, keep_list = [], []
+    for j in range(k):
+        e_j = topi[..., j]                                        # [G,T]
+        onehot = jax.nn.one_hot(e_j, E, dtype=jnp.int32)          # [G,T,E]
+        prior = jnp.cumsum(onehot, axis=1) - onehot               # tokens ahead
+        pos = (prior + counts[:, None, :] )                       # [G,T,E]
+        pos_j = jnp.take_along_axis(pos, e_j[..., None], axis=-1)[..., 0]
+        keep_j = pos_j < C
+        counts = counts + onehot.sum(axis=1)
+        pos_list.append(pos_j)
+        keep_list.append(keep_j)
+    positions = jnp.stack(pos_list, -1)                           # [G,T,k]
+    keep = jnp.stack(keep_list, -1)                               # [G,T,k]
+
+    # Load-balancing auxiliary loss (Switch): E * mean(frac_tokens * frac_prob)
+    me = gates.mean(axis=(0, 1))                                  # [E]
+    ce = jax.nn.one_hot(topi[..., 0], E).mean(axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+    return topi, topv, positions, keep, C, aux
+
+
+def _moe_einsum(cfg, p, xg, topi, topv, positions, keep, C):
+    """Dense GShard dispatch/combine (baseline)."""
+    G, T, D = xg.shape
+    E, k = cfg.n_experts, cfg.top_k
+    dt = xg.dtype
+    # dispatch one-hot [G,T,E,C]
+    e_oh = jax.nn.one_hot(topi, E, dtype=dt)                       # [G,T,k,E]
+    c_oh = jax.nn.one_hot(positions, C, dtype=dt)                  # [G,T,k,C]
+    kd = e_oh * keep[..., None].astype(dt)
+    dispatch = jnp.einsum("gtke,gtkc->gtec", kd, c_oh)             # [G,T,E,C]
+    dispatch = ctx.hint(dispatch, "data", None, "model", None)
+    combine = jnp.einsum("gtke,gtkc,gtk->gtec", kd, c_oh, topv.astype(dt))
+    combine = ctx.hint(combine, "data", None, "model", None)
+    xe = jnp.einsum("gtd,gtec->gecd", xg, dispatch)                # [G,E,C,D]
+    xe = ctx.hint(xe, "data", "model", None, None)   # EP: experts over model
+    h = jnp.einsum("gecd,edf->gecf", xe, p["wg"].astype(dt))
+    h = jax.nn.silu(h) * jnp.einsum("gecd,edf->gecf", xe, p["wi"].astype(dt))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(dt))       # [G,E,C,D]
+    return jnp.einsum("gecd,gtec->gtd", ye, combine)
+
+
+def _moe_gather(cfg, p, xg, topi, topv, positions, keep, C):
+    """Index-based dispatch: same semantics, no [G,T,E,C] one-hot einsums."""
+    G, T, D = xg.shape
+    E, k = cfg.n_experts, cfg.top_k
+    dt = xg.dtype
+    # flat slot id for each (token, choice): e * C + pos (or dropped -> E*C)
+    slot = jnp.where(keep, topi * C + positions, E * C)            # [G,T,k]
+    # scatter tokens into slots: xe [G, E*C+1, D]
+    xe = jnp.zeros((G, E * C + 1, D), dt)
+    gi = jnp.arange(G)[:, None, None]
+    xe = xe.at[gi, slot].add(xg[:, :, None, :] * keep[..., None].astype(dt))
+    xe = xe[:, : E * C].reshape(G, E, C, D)
+    xe = ctx.hint(xe, "data", "model", None, None)   # EP: experts over model
+    h = jnp.einsum("gecd,edf->gecf", xe, p["wg"].astype(dt))
+    h = jax.nn.silu(h) * jnp.einsum("gecd,edf->gecf", xe, p["wi"].astype(dt))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(dt))
+    ye = ye.reshape(G, E * C, D)
+    ye = jnp.concatenate([ye, jnp.zeros((G, 1, D), dt)], axis=1)
+    out = jnp.take_along_axis(ye, slot.reshape(G, T * k)[..., None], axis=1)
+    out = out.reshape(G, T, k, D) * topv[..., None].astype(dt)
+    return out.sum(axis=2)
+
+
+def moe_apply(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+              impl: str = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, D] -> (y, aux_loss)."""
+    impl = impl or cfg.moe_impl or MOE_IMPL
+    B, S, D = x.shape
+    T = min(cfg.moe_group_size, B * S)
+    G = (B * S) // T
+    xg = x.reshape(G, T, D)
+    topi, topv, positions, keep, C, aux = _route(cfg, p, xg)
+    fn = _moe_einsum if impl == "einsum" else _moe_gather
+    y = fn(cfg, p, xg, topi, topv, positions, keep, C)
+    return y.reshape(B, S, D), aux
+
+
+# ---------------------------------------------------------------------------
+# MoE transformer model
+# ---------------------------------------------------------------------------
+
+def moe_block_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model),
+        "attn": L.attention_init(ks[0], cfg),
+        "ln2": L.rmsnorm_init(cfg.d_model),
+        "moe": moe_init(ks[1], cfg),
+    }
+
+
+def moe_block_apply(cfg, p, x, positions, cache=None, impl=None):
+    h, new_cache = L.attention_apply(
+        p["attn"], cfg, L.rmsnorm(p["ln1"], x, cfg.norm_eps), positions,
+        cache=cache)
+    x = x + h
+    h, aux = moe_apply(cfg, p["moe"], L.rmsnorm(p["ln2"], x, cfg.norm_eps),
+                       impl=impl)
+    return x + h, new_cache, aux
+
+
+def init(cfg: ModelConfig, key) -> Params:
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    stacked = jax.vmap(lambda k: moe_block_init(k, cfg))(keys[: cfg.n_layers])
+    return {
+        "embed": L.embedding_init(keys[-2], cfg.vocab, cfg.d_model),
+        "layers": stacked,
+        "ln_f": L.rmsnorm_init(cfg.d_model),
+        "head": L.linear_init(keys[-1], cfg.d_model, cfg.vocab),
+    }
+
+
+def forward(cfg: ModelConfig, params: Params, tokens, impl=None):
+    dtype = L.compute_dtype(cfg)
+    x = L.embed(params["embed"], tokens, dtype)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(carry, lp):
+        x, aux = carry
+        x, _, a = moe_block_apply(cfg, lp, x, positions, impl=impl)
+        return (ctx.hint(x, "data", "model", None), aux + a), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = L.scan_blocks(body, (x, jnp.zeros((), jnp.float32)),
+                                params["layers"], cfg.scan_layers)
+    return _logits(cfg, params, x), aux / cfg.n_layers
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict, impl=None):
+    logits, aux = forward(cfg, params, batch["tokens"], impl=impl)
+    return (L.softmax_xent(logits, batch["labels"], batch.get("mask"))
+            + cfg.router_aux_weight * aux)
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens, max_len: int,
+            embeds=None, impl=None):
+    dtype = L.compute_dtype(cfg)
+    x = L.embed(params["embed"], tokens, dtype)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    cache = L.make_cache(cfg, B, max_len, cfg.n_layers, dtype)
+
+    def body(x, xs):
+        lp, ck, cv = xs
+        lcache = {"k": ck, "v": cv, "pos": jnp.zeros((), jnp.int32)}
+        x, nc, _ = moe_block_apply(cfg, lp, x, positions, cache=lcache, impl=impl)
+        return ctx.hint(x, "data", "model", None), (nc["k"], nc["v"])
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, (ks, vs) = L.scan_blocks(body, x, (params["layers"], cache["k"], cache["v"]),
+                                cfg.scan_layers)
+    return _logits(cfg, params, x[:, -1:]), {"k": ks, "v": vs,
+                                             "pos": jnp.asarray(S, jnp.int32)}
+
+
+def decode_step(cfg: ModelConfig, params: Params, token, cache, impl=None):
+    dtype = L.compute_dtype(cfg)
+    x = L.embed(params["embed"], token[:, None], dtype)
+    B = x.shape[0]
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+
+    def body(x, xs):
+        lp, ck, cv = xs
+        lcache = {"k": ck, "v": cv, "pos": pos}
+        x, nc, _ = moe_block_apply(cfg, lp, x, positions, cache=lcache, impl=impl)
+        return x, (nc["k"], nc["v"])
+
+    x, (ks, vs) = L.scan_blocks(body, x, (params["layers"], cache["k"], cache["v"]),
+                                cfg.scan_layers)
+    return _logits(cfg, params, x)[:, 0], {"k": ks, "v": vs, "pos": pos + 1}

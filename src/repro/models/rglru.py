@@ -1,0 +1,379 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local attention
+[arXiv:2402.19427].
+
+Layer pattern ``(rec, rec, attn)`` repeating (1 local-attention layer per 2
+recurrent layers). Every temporal block is followed by a SwiGLU MLP block.
+
+TPU adaptation notes:
+  * the RG-LRU linear recurrence ``h_t = a_t*h_{t-1} + b_t`` is evaluated
+    with ``jax.lax.associative_scan`` (log-depth) over the sequence —
+    the Pallas kernel (`repro.kernels.rglru_scan`) does the same within
+    VMEM-resident blocks and carries the state across blocks sequentially;
+  * local attention uses *blocked banded* attention for full sequences
+    (each query block attends to its own + previous key block) and a
+    **ring-buffer KV cache** of size ``window`` for decode, so the
+    long_500k cell needs O(window), not O(seq), memory.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from ..distributed import ctx
+
+Params = Dict
+_C = 8.0  # RG-LRU "c" constant
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU core
+# ---------------------------------------------------------------------------
+
+def rglru_scan_ref(x_gated, a, h0=None):
+    """h_t = a_t * h_{t-1} + b_t with b = sqrt(1-a^2) * x_gated.
+
+    x_gated, a: [B, L, D]. Returns (h [B,L,D], h_last [B,D]).
+    """
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 0.0)) * x_gated
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def rglru_decode(h, x_gated, a):
+    """One-step recurrence. h, x_gated, a: [B, D]."""
+    return a * h + jnp.sqrt(jnp.maximum(1.0 - a * a, 0.0)) * x_gated
+
+
+def rec_init(key, cfg: ModelConfig) -> Params:
+    D = cfg.d_model
+    DR = cfg.rglru_d_rnn or cfg.d_model
+    ks = jax.random.split(key, 7)
+    return {
+        "ln": L.rmsnorm_init(D),
+        "wx": L.linear_init(ks[0], D, DR),
+        "wy": L.linear_init(ks[1], D, DR),
+        "conv_w": 0.1 * jax.random.normal(ks[2], (cfg.conv_width, DR), jnp.float32),
+        "conv_b": jnp.zeros((DR,), jnp.float32),
+        "wa": L.linear_init(ks[3], DR, DR),          # recurrence gate
+        "wi": L.linear_init(ks[4], DR, DR),          # input gate
+        "lam": 0.5 * jax.random.normal(ks[5], (DR,), jnp.float32) - 4.0,
+        "out": L.linear_init(ks[6], DR, D),
+    }
+
+
+def _conv1d(x, w, b):
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + pad[:, i: i + x.shape[1], :] * w[i].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+def _rglru_gates(p, u):
+    """u: [..., DR] conv output -> (a, gated_input) in fp32."""
+    r = jax.nn.sigmoid(L.linear(p["wa"], u).astype(jnp.float32))
+    i = jax.nn.sigmoid(L.linear(p["wi"], u).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    return a, i * u.astype(jnp.float32)
+
+
+def rec_apply(cfg: ModelConfig, p: Params, x, state: Optional[Params] = None,
+              use_kernel: bool = False):
+    """Recurrent temporal block. state: dict(h [B,DR], conv [B,W-1,DR])."""
+    h_in = L.rmsnorm(p["ln"], x, cfg.norm_eps)
+    gate = jax.nn.gelu(L.linear(p["wy"], h_in))
+    u = L.linear(p["wx"], h_in)
+    new_state = None
+    if state is None:
+        u_raw = u
+        u = _conv1d(u, p["conv_w"], p["conv_b"])
+        a, b_in = _rglru_gates(p, u)
+        if use_kernel and cfg.use_kernels and x.shape[1] % 128 == 0:
+            from ..kernels import ops as kops
+            h, h_last = kops.rglru_scan(b_in, a)
+        else:
+            h, h_last = rglru_scan_ref(b_in, a)
+        W = cfg.conv_width
+        new_state = {"h": h_last, "conv": u_raw[:, u.shape[1] - (W - 1):, :]}
+    else:
+        conv_buf = jnp.concatenate([state["conv"], u], axis=1)
+        u1 = jnp.einsum("bwc,wc->bc", conv_buf, p["conv_w"].astype(x.dtype))
+        u1 = u1 + p["conv_b"].astype(x.dtype)
+        a, b_in = _rglru_gates(p, u1[:, None])
+        h1 = rglru_decode(state["h"], b_in[:, 0], a[:, 0])
+        h = h1[:, None]
+        new_state = {"h": h1, "conv": conv_buf[:, 1:]}
+    y = h.astype(x.dtype) * gate
+    return x + L.linear(p["out"], y), new_state
+
+
+# ---------------------------------------------------------------------------
+# Local attention with ring-buffer cache
+# ---------------------------------------------------------------------------
+
+def attn_apply_local(cfg: ModelConfig, p: Params, x, positions, window,
+                     ring: Optional[Params] = None):
+    """Full-seq: banded attention via window mask (flash kernel skips
+    out-of-window blocks). Decode: ring-buffer cache of size ``window``."""
+    if ring is None:
+        return L.attention_apply(p, cfg, x, positions, causal=True,
+                                 window=window)
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = L.linear(p["wq"], x).reshape(B, S, cfg.n_heads, hd)
+    k = L.linear(p["wk"], x).reshape(B, S, cfg.n_kv_heads, hd)
+    v = L.linear(p["wv"], x).reshape(B, S, cfg.n_kv_heads, hd)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+
+    pos = ring["pos"]                       # absolute position of this token
+    slot = jnp.mod(pos, window)
+    ck = jax.lax.dynamic_update_slice_in_dim(ring["k"], k.astype(ring["k"].dtype), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(ring["v"], v.astype(ring["v"].dtype), slot, axis=1)
+    # absolute position held by each slot j after the write
+    j = jnp.arange(window)
+    abs_pos = pos - jnp.mod(slot - j, window)
+    valid = abs_pos >= 0
+    import math
+    qf = q.astype(jnp.float32) / math.sqrt(hd)
+    group = cfg.n_heads // cfg.n_kv_heads
+    qf = qf.reshape(B, S, cfg.n_kv_heads, group, hd)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf, ck.astype(jnp.float32))
+    logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, cv.astype(jnp.float32))
+    out = out.reshape(B, S, cfg.n_heads, hd).astype(x.dtype)
+    y = L.linear(p["wo"], out.reshape(B, S, cfg.n_heads * hd))
+    return y, {"k": ck, "v": cv, "pos": pos + 1}
+
+
+def make_ring(cfg: ModelConfig, batch: int, window: int, n_attn: int, dtype):
+    hd = cfg.hd
+    return {
+        "k": jnp.zeros((n_attn, batch, window, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((n_attn, batch, window, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Super-block = (rec + mlp, rec + mlp, attn + mlp)
+# ---------------------------------------------------------------------------
+
+def sblock_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 7)
+    return {
+        "rec1": rec_init(ks[0], cfg),
+        "mlp1": {"ln": L.rmsnorm_init(cfg.d_model),
+                 "ffn": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff)},
+        "rec2": rec_init(ks[2], cfg),
+        "mlp2": {"ln": L.rmsnorm_init(cfg.d_model),
+                 "ffn": L.mlp_init(ks[3], cfg.d_model, cfg.d_ff)},
+        "attn_ln": L.rmsnorm_init(cfg.d_model),
+        "attn": L.attention_init(ks[4], cfg),
+        "mlp3": {"ln": L.rmsnorm_init(cfg.d_model),
+                 "ffn": L.mlp_init(ks[5], cfg.d_model, cfg.d_ff)},
+    }
+
+
+def _mlp_res(cfg, p, x):
+    return x + L.mlp_apply(p["ffn"], L.rmsnorm(p["ln"], x, cfg.norm_eps))
+
+
+def sblock_apply(cfg: ModelConfig, p: Params, x, positions, state=None,
+                 use_kernel=False):
+    """state: None or dict(h1, conv1, h2, conv2, ring_k, ring_v)."""
+    st = state or {}
+    x, s1 = rec_apply(cfg, p["rec1"], x,
+                      state=None if state is None else
+                      {"h": st["h1"], "conv": st["conv1"]},
+                      use_kernel=use_kernel)
+    x = _mlp_res(cfg, p["mlp1"], x)
+    x, s2 = rec_apply(cfg, p["rec2"], x,
+                      state=None if state is None else
+                      {"h": st["h2"], "conv": st["conv2"]},
+                      use_kernel=use_kernel)
+    x = _mlp_res(cfg, p["mlp2"], x)
+    xa = L.rmsnorm(p["attn_ln"], x, cfg.norm_eps)
+    if state is None:
+        h, _ = attn_apply_local(cfg, p["attn"], xa, positions, cfg.attn_window)
+        # Fill the ring buffer with the last `window` keys/values so decode
+        # continues seamlessly after a full-sequence prefill.
+        B, S, _ = xa.shape
+        win = cfg.attn_window
+        hd = cfg.hd
+        tail_len = min(S, win)
+        xt = xa[:, S - tail_len:]
+        pt = positions[:, S - tail_len:]
+        kt = L.rope(L.linear(p["attn"]["wk"], xt).reshape(B, tail_len, cfg.n_kv_heads, hd),
+                    pt, cfg.rope_theta)
+        vt = L.linear(p["attn"]["wv"], xt).reshape(B, tail_len, cfg.n_kv_heads, hd)
+        slots = (jnp.arange(S - tail_len, S)) % win
+        rk = jnp.zeros((B, win, cfg.n_kv_heads, hd), x.dtype).at[:, slots].set(kt)
+        rv = jnp.zeros((B, win, cfg.n_kv_heads, hd), x.dtype).at[:, slots].set(vt)
+        new_state = {"h1": s1["h"], "conv1": s1["conv"],
+                     "h2": s2["h"], "conv2": s2["conv"],
+                     "ring_k": rk, "ring_v": rv}
+    else:
+        ring = {"k": st["ring_k"], "v": st["ring_v"], "pos": st["pos"]}
+        h, nring = attn_apply_local(cfg, p["attn"], xa, positions,
+                                    cfg.attn_window, ring=ring)
+        new_state = {"h1": s1["h"], "conv1": s1["conv"],
+                     "h2": s2["h"], "conv2": s2["conv"],
+                     "ring_k": nring["k"], "ring_v": nring["v"]}
+    x = x + h
+    x = _mlp_res(cfg, p["mlp3"], x)
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# Model: n_super superblocks + trailing recurrent layers
+# ---------------------------------------------------------------------------
+
+def _structure(cfg: ModelConfig) -> Tuple[int, int]:
+    pat = len(cfg.block_pattern) or 3
+    n_super = cfg.n_layers // pat
+    n_tail = cfg.n_layers - n_super * pat   # trailing rec layers
+    return n_super, n_tail
+
+
+def init(cfg: ModelConfig, key) -> Params:
+    n_super, n_tail = _structure(cfg)
+    keys = jax.random.split(key, n_super + n_tail + 2)
+    p = {
+        "embed": L.embedding_init(keys[-2], cfg.vocab, cfg.d_model),
+        "blocks": jax.vmap(lambda k: sblock_init(k, cfg))(keys[:n_super]),
+        "ln_f": L.rmsnorm_init(cfg.d_model),
+    }
+    for i in range(n_tail):
+        ks = jax.random.split(keys[n_super + i], 2)
+        p[f"tail_rec{i}"] = rec_init(ks[0], cfg)
+        p[f"tail_mlp{i}"] = {"ln": L.rmsnorm_init(cfg.d_model),
+                             "ffn": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff)}
+    return p
+
+
+def forward(cfg: ModelConfig, params: Params, tokens):
+    dtype = L.compute_dtype(cfg)
+    x = L.embed(params["embed"], tokens, dtype)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    n_super, n_tail = _structure(cfg)
+
+    def body(x, bp):
+        x, _ = sblock_apply(cfg, bp, x, positions, use_kernel=True)
+        return ctx.hint(x, "data", "model", None), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = L.scan_blocks(body, x, params["blocks"], cfg.scan_layers)
+    for i in range(n_tail):
+        x, _ = rec_apply(cfg, params[f"tail_rec{i}"], x, use_kernel=True)
+        x = _mlp_res(cfg, params[f"tail_mlp{i}"], x)
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return L.unembed(params["embed"], x)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict):
+    logits = forward(cfg, params, batch["tokens"])
+    return L.softmax_xent(logits, batch["labels"], batch.get("mask"))
+
+
+def init_cache(cfg: ModelConfig, batch: int, dtype):
+    n_super, n_tail = _structure(cfg)
+    DR = cfg.rglru_d_rnn or cfg.d_model
+    W = cfg.conv_width
+    win = cfg.attn_window
+    hd = cfg.hd
+    blocks = {
+        "h1": jnp.zeros((n_super, batch, DR), jnp.float32),
+        "conv1": jnp.zeros((n_super, batch, W - 1, DR), dtype),
+        "h2": jnp.zeros((n_super, batch, DR), jnp.float32),
+        "conv2": jnp.zeros((n_super, batch, W - 1, DR), dtype),
+        "ring_k": jnp.zeros((n_super, batch, win, cfg.n_kv_heads, hd), dtype),
+        "ring_v": jnp.zeros((n_super, batch, win, cfg.n_kv_heads, hd), dtype),
+    }
+    tail = {
+        f"tail{i}": {"h": jnp.zeros((batch, DR), jnp.float32),
+                     "conv": jnp.zeros((batch, W - 1, DR), dtype)}
+        for i in range(n_tail)
+    }
+    return {"blocks": blocks, "tail": tail, "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens, max_len: int, embeds=None):
+    """Prompt pass; returns last-token logits + recurrent/ring state.
+
+    For simplicity the ring buffer after prefill holds the last ``window``
+    keys laid out by absolute-position mod window (recomputed cheaply here).
+    """
+    dtype = L.compute_dtype(cfg)
+    x = L.embed(params["embed"], tokens, dtype)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    n_super, n_tail = _structure(cfg)
+    cache = init_cache(cfg, B, dtype)
+
+    def body(x, xs):
+        bp, st = xs
+        x, ns = sblock_apply(cfg, bp, x, positions, use_kernel=True)
+        # full-seq pass produces rec states; ring stays zero-filled (only the
+        # next `window` decode steps need it, and the mask handles validity)
+        merged = dict(st)
+        merged.update({k: v for k, v in ns.items() if k in st})
+        return ctx.hint(x, "data", "model", None), merged
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, bstates = L.scan_blocks(body, x, (params["blocks"], cache["blocks"]),
+                               cfg.scan_layers)
+    tail_state = {}
+    for i in range(n_tail):
+        x, s = rec_apply(cfg, params[f"tail_rec{i}"], x, use_kernel=True)
+        x = _mlp_res(cfg, params[f"tail_mlp{i}"], x)
+        tail_state[f"tail{i}"] = s
+    x = L.rmsnorm(params["ln_f"], x[:, -1:], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)
+    return logits, {"blocks": bstates, "tail": tail_state,
+                    "pos": jnp.asarray(S, jnp.int32)}
+
+
+def decode_step(cfg: ModelConfig, params: Params, token, cache):
+    dtype = L.compute_dtype(cfg)
+    x = L.embed(params["embed"], token[:, None], dtype)
+    B = x.shape[0]
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    n_super, n_tail = _structure(cfg)
+
+    def body(x, xs):
+        bp, st = xs
+        st = dict(st, pos=pos)
+        x, ns = sblock_apply(cfg, bp, x, positions, state=st)
+        return x, ns
+
+    x, bstates = L.scan_blocks(body, x, (params["blocks"], cache["blocks"]),
+                               cfg.scan_layers)
+    tail_state = {}
+    for i in range(n_tail):
+        x, s = rec_apply(cfg, params[f"tail_rec{i}"], x,
+                         state=cache["tail"][f"tail{i}"])
+        x = _mlp_res(cfg, params[f"tail_mlp{i}"], x)
+        tail_state[f"tail{i}"] = s
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)[:, 0]
+    return logits, {"blocks": bstates, "tail": tail_state, "pos": pos + 1}

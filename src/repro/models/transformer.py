@@ -1,0 +1,306 @@
+"""Dense decoder-only transformer (llama/qwen family) + encoder-decoder.
+
+Layers are stacked along a leading axis and executed with ``jax.lax.scan``
+(+ optional remat) so the HLO stays compact for 80–95-layer models; this is
+what keeps the multi-pod dry-run compile times sane and is also the idiomatic
+TPU structure (one compiled block, XLA pipelines the weights).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from ..distributed import ctx
+
+Params = Dict
+
+
+# ---------------------------------------------------------------------------
+# Decoder block
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": L.rmsnorm_init(cfg.d_model),
+        "attn": L.attention_init(ks[0], cfg),
+        "ln2": L.rmsnorm_init(cfg.d_model),
+        "mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff),
+    }
+    if cross:
+        p["ln_x"] = L.rmsnorm_init(cfg.d_model)
+        p["xattn"] = L.attention_init(ks[2], cfg, cross=True)
+    return p
+
+
+def block_apply(cfg: ModelConfig, p: Params, x, positions, *, causal=True,
+                window=0, cache=None, enc=None, xcache=None):
+    h, new_cache = L.attention_apply(
+        p["attn"], cfg, L.rmsnorm(p["ln1"], x, cfg.norm_eps), positions,
+        causal=causal, window=window, cache=cache)
+    x = x + h
+    if enc is not None:
+        h, _ = L.attention_apply(
+            p["xattn"], cfg, L.rmsnorm(p["ln_x"], x, cfg.norm_eps), positions,
+            causal=False, kv_source=enc, use_rope=False)
+        x = x + h
+    x = x + L.mlp_apply(p["mlp"], L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Dense decoder-only LM (also the VLM backbone: ``embeds`` are prepended)
+# ---------------------------------------------------------------------------
+
+def init(cfg: ModelConfig, key) -> Params:
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    stacked = jax.vmap(lambda k: block_init(k, cfg))(keys[: cfg.n_layers])
+    p = {
+        "embed": L.embedding_init(keys[-2], cfg.vocab, cfg.d_model),
+        "layers": stacked,
+        "ln_f": L.rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = L.linear_init(keys[-1], cfg.d_model, cfg.vocab)
+    return p
+
+
+def _logits(cfg: ModelConfig, params: Params, x) -> jnp.ndarray:
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return L.unembed(params["embed"], x)
+    return L.linear(params["head"], x)
+
+
+def _embed_inputs(cfg, params, tokens, embeds, dtype):
+    """Token embeddings, with frontend embeddings (VLM patches) prepended."""
+    parts = []
+    if embeds is not None:
+        parts.append(embeds.astype(dtype))
+    if tokens is not None:
+        parts.append(L.embed(params["embed"], tokens, dtype))
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    return x
+
+
+def forward(cfg: ModelConfig, params: Params, tokens=None, embeds=None,
+            window: int = 0, return_hidden: bool = False) -> jnp.ndarray:
+    """Full-sequence causal forward -> logits [B, S, V] (or final hidden)."""
+    dtype = L.compute_dtype(cfg)
+    x = _embed_inputs(cfg, params, tokens, embeds, dtype)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    if cfg.pipeline_stages > 1:
+        from ..distributed.pipeline import pipeline_scan
+
+        def block_fn(lp, h):
+            h, _ = block_apply(cfg, lp, h, positions[: h.shape[0]],
+                               window=window)
+            return ctx.hint(h, "data", "model", None)
+
+        if cfg.remat:
+            block_fn = jax.checkpoint(block_fn)
+        x = pipeline_scan(block_fn, params["layers"], x,
+                          n_stages=cfg.pipeline_stages,
+                          n_microbatches=cfg.pipeline_microbatches)
+        return _logits(cfg, params, x)
+
+    def body(x, lp):
+        x, _ = block_apply(cfg, lp, x, positions, window=window)
+        # sequence-shard the residual stream between blocks (Megatron-SP):
+        # this is what the remat stash stores, so it must not be replicated
+        return ctx.hint(x, "data", "model", None), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = L.scan_blocks(body, x, params["layers"], cfg.scan_layers)
+    if return_hidden:
+        return L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return _logits(cfg, params, x)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict) -> jnp.ndarray:
+    labels = batch["labels"]
+    if cfg.chunked_xent:
+        h = forward(cfg, params, batch.get("tokens"), batch.get("embeds"),
+                    return_hidden=True)
+        if h.shape[1] != labels.shape[1]:
+            h = h[:, -labels.shape[1]:]
+        if cfg.tie_embeddings:
+            return L.softmax_xent_chunked(h, params["embed"]["table"],
+                                          labels, batch.get("mask"))
+        return L.softmax_xent_chunked(h, params["head"]["w"], labels,
+                                      batch.get("mask"),
+                                      transpose_table=True)
+    logits = forward(cfg, params, batch.get("tokens"), batch.get("embeds"))
+    if logits.shape[1] != labels.shape[1]:   # frontend tokens carry no labels
+        logits = logits[:, -labels.shape[1]:]
+    return L.softmax_xent(logits, labels, batch.get("mask"))
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens, max_len: int,
+            embeds=None) -> Tuple[jnp.ndarray, Params]:
+    """Run the prompt, build a KV cache of capacity ``max_len``."""
+    dtype = L.compute_dtype(cfg)
+    x = _embed_inputs(cfg, params, tokens, embeds, dtype)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    cache = L.make_cache(cfg, B, max_len, cfg.n_layers, dtype)
+    cache0 = {"k": cache["k"][0] * 0, "v": cache["v"][0] * 0}  # template
+
+    def body(carry, xs):
+        x = carry
+        lp, ck, cv = xs
+        lcache = {"k": ck, "v": cv, "pos": jnp.zeros((), jnp.int32)}
+        x, nc = block_apply(cfg, lp, x, positions, cache=lcache)
+        return ctx.hint(x, "data", "model", None), (nc["k"], nc["v"])
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, (ks, vs) = L.scan_blocks(body, x, (params["layers"], cache["k"], cache["v"]),
+                                cfg.scan_layers)
+    new_cache = {"k": ks, "v": vs, "pos": jnp.asarray(S, jnp.int32)}
+    return _logits(cfg, params, x[:, -1:]), new_cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, token, cache,
+                window: int = 0) -> Tuple[jnp.ndarray, Params]:
+    """One token through the stack against the KV cache.
+
+    token: [B] int32; cache as returned by prefill (pos = current length).
+    """
+    dtype = L.compute_dtype(cfg)
+    x = L.embed(params["embed"], token[:, None], dtype)    # [B, 1, D]
+    B = x.shape[0]
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+
+    def body(x, xs):
+        lp, ck, cv = xs
+        lcache = {"k": ck, "v": cv, "pos": pos}
+        x, nc = block_apply(cfg, lp, x, positions, cache=lcache, window=window)
+        return x, (nc["k"], nc["v"])
+
+    x, (ks, vs) = L.scan_blocks(body, x, (params["layers"], cache["k"], cache["v"]),
+                                cfg.scan_layers)
+    new_cache = {"k": ks, "v": vs, "pos": pos + 1}
+    return _logits(cfg, params, x)[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder (seamless-m4t backbone): encoder over frame embeddings,
+# decoder with self- + cross-attention.
+# ---------------------------------------------------------------------------
+
+def encdec_init(cfg: ModelConfig, key) -> Params:
+    keys = jax.random.split(key, 4)
+    enc_keys = jax.random.split(keys[0], cfg.n_encoder_layers)
+    dec_keys = jax.random.split(keys[1], cfg.n_layers)
+    return {
+        "embed": L.embedding_init(keys[2], cfg.vocab, cfg.d_model),
+        "enc_layers": jax.vmap(lambda k: block_init(k, cfg))(enc_keys),
+        "enc_ln": L.rmsnorm_init(cfg.d_model),
+        "layers": jax.vmap(lambda k: block_init(k, cfg, cross=True))(dec_keys),
+        "ln_f": L.rmsnorm_init(cfg.d_model),
+        "head": L.linear_init(keys[3], cfg.d_model, cfg.vocab),
+    }
+
+
+def encode(cfg: ModelConfig, params: Params, frames) -> jnp.ndarray:
+    """frames: precomputed frontend embeddings [B, S_enc, D] (audio stub)."""
+    dtype = L.compute_dtype(cfg)
+    x = frames.astype(dtype)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(x, lp):
+        x, _ = block_apply(cfg, lp, x, positions, causal=False)
+        return ctx.hint(x, "data", "model", None), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = L.scan_blocks(body, x, params["enc_layers"], cfg.scan_layers)
+    return L.rmsnorm(params["enc_ln"], x, cfg.norm_eps)
+
+
+def encdec_forward(cfg: ModelConfig, params: Params, tokens, frames,
+                   return_hidden: bool = False):
+    enc = encode(cfg, params, frames)
+    dtype = L.compute_dtype(cfg)
+    x = L.embed(params["embed"], tokens, dtype)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(x, lp):
+        x, _ = block_apply(cfg, lp, x, positions, enc=enc)
+        return ctx.hint(x, "data", "model", None), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = L.scan_blocks(body, x, params["layers"], cfg.scan_layers)
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if return_hidden:
+        return x
+    return L.linear(params["head"], x)
+
+
+def encdec_loss(cfg: ModelConfig, params: Params, batch: Dict) -> jnp.ndarray:
+    if cfg.chunked_xent:
+        h = encdec_forward(cfg, params, batch["tokens"], batch["embeds"],
+                           return_hidden=True)
+        return L.softmax_xent_chunked(h, params["head"]["w"],
+                                      batch["labels"], batch.get("mask"),
+                                      transpose_table=True)
+    logits = encdec_forward(cfg, params, batch["tokens"], batch["embeds"])
+    return L.softmax_xent(logits, batch["labels"], batch.get("mask"))
+
+
+def encdec_prefill(cfg: ModelConfig, params: Params, tokens, max_len: int,
+                   embeds=None) -> Tuple[jnp.ndarray, Params]:
+    enc = encode(cfg, params, embeds)
+    dtype = L.compute_dtype(cfg)
+    x = L.embed(params["embed"], tokens, dtype)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    cache = L.make_cache(cfg, B, max_len, cfg.n_layers, dtype)
+
+    def body(x, xs):
+        lp, ck, cv = xs
+        lcache = {"k": ck, "v": cv, "pos": jnp.zeros((), jnp.int32)}
+        x, nc = block_apply(cfg, lp, x, positions, cache=lcache, enc=enc)
+        return ctx.hint(x, "data", "model", None), (nc["k"], nc["v"])
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, (ks, vs) = L.scan_blocks(body, x, (params["layers"], cache["k"], cache["v"]),
+                                cfg.scan_layers)
+    x = L.rmsnorm(params["ln_f"], x[:, -1:], cfg.norm_eps)
+    logits = L.linear(params["head"], x)
+    return logits, {"k": ks, "v": vs, "pos": jnp.asarray(S, jnp.int32), "enc": enc}
+
+
+def encdec_decode_step(cfg: ModelConfig, params: Params, token, cache):
+    dtype = L.compute_dtype(cfg)
+    x = L.embed(params["embed"], token[:, None], dtype)
+    B = x.shape[0]
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    enc = cache["enc"]
+
+    def body(x, xs):
+        lp, ck, cv = xs
+        lcache = {"k": ck, "v": cv, "pos": pos}
+        x, nc = block_apply(cfg, lp, x, positions, cache=lcache, enc=enc)
+        return x, (nc["k"], nc["v"])
+
+    x, (ks, vs) = L.scan_blocks(body, x, (params["layers"], cache["k"], cache["v"]),
+                                cfg.scan_layers)
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = L.linear(params["head"], x)[:, 0]
+    return logits, {"k": ks, "v": vs, "pos": pos + 1, "enc": enc}

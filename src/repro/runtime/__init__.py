@@ -1,0 +1,1 @@
+"""Runtime: fault tolerance, elastic scaling, straggler mitigation."""

@@ -1,0 +1,35 @@
+"""Straggler mitigation: hedged requests.
+
+At scale some workers run slow (background compaction, thermal throttling,
+failing HBM). The standard mitigation is to hedge: if a request hasn't
+completed by the p-th latency percentile, fire a backup on another worker
+and take whichever finishes first. This module models that policy for the
+cluster simulator and quantifies the tail-latency improvement.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class HedgePolicy:
+    straggler_prob: float = 0.03     # fraction of executions that straggle
+    straggler_factor: float = 8.0    # slowdown multiplier when straggling
+    hedge_after_factor: float = 2.0  # hedge when t > factor * expected
+    enabled: bool = True
+
+    def effective_latency(self, exec_s: float, rng: np.random.Generator
+                          ) -> float:
+        straggled = rng.uniform() < self.straggler_prob
+        primary = exec_s * (self.straggler_factor if straggled else 1.0)
+        if not self.enabled or not straggled:
+            return primary
+        # Backup fires once the request exceeds the hedge threshold; the
+        # backup itself may straggle (independently).
+        hedge_at = exec_s * self.hedge_after_factor
+        backup_straggle = rng.uniform() < self.straggler_prob
+        backup = hedge_at + exec_s * (self.straggler_factor
+                                      if backup_straggle else 1.0)
+        return min(primary, backup)

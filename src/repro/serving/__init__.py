@@ -1,0 +1,1 @@
+"""Serving: serverless model platform (paper technique as warm-pool policy)."""

@@ -1,0 +1,190 @@
+"""Warm pool: the paper's hybrid histogram policy managing HBM residency.
+
+This is the OpenWhisk-Invoker analog (DESIGN.md §2): instead of Docker
+containers it manages *model images* (weights + compiled step) in device
+memory. The policy decides, per endpoint:
+
+  * when to UNLOAD after a request finishes (pre-warming window > 0 means
+    unload immediately and reload later);
+  * when to PRE-WARM (load ahead of the predicted next request);
+  * how long to KEEP ALIVE after the (re)load.
+
+All in virtual time (the cluster simulator drives `now`); the same object
+drives the real engine in examples/serve_serverless.py. Memory-budget
+pressure evicts the app whose keep-alive expires soonest (the policy's own
+estimate of "least likely to be needed").
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Tuple
+
+from ..core.policy import Policy, PolicyWindows
+from .registry import ModelEndpoint, Registry
+
+MINUTE = 60.0
+
+
+@dataclasses.dataclass
+class AppState:
+    loaded: bool = False
+    compile_cached: bool = False
+    last_end: float = -1.0          # end of last request (s)
+    unload_at: float = float("inf")  # keep-alive expiry (s)
+    prewarm_at: float = float("inf")  # scheduled pre-warm (s)
+    windows: Optional[PolicyWindows] = None
+    cold_starts: int = 0
+    requests: int = 0
+    loaded_since: float = 0.0
+    resident_seconds: float = 0.0   # accumulated memory time
+    bytes_loaded: int = 0
+
+
+@dataclasses.dataclass
+class PoolStats:
+    cold_starts: int = 0
+    warm_starts: int = 0
+    prewarms: int = 0
+    unloads: int = 0
+    evictions: int = 0
+    bytes_moved: float = 0.0
+    resident_byte_seconds: float = 0.0
+
+
+class WarmPool:
+    def __init__(self, registry: Registry, policy: Policy,
+                 budget_bytes: float = float("inf")):
+        self.registry = registry
+        self.policy = policy
+        self.budget = budget_bytes
+        self.state: Dict[str, AppState] = {}
+        self.stats = PoolStats()
+        self._used = 0.0
+
+    # -- residency bookkeeping ------------------------------------------------
+
+    def _st(self, app_id: str) -> AppState:
+        if app_id not in self.state:
+            self.state[app_id] = AppState()
+        return self.state[app_id]
+
+    def _load(self, app_id: str, now: float) -> float:
+        """Load an image; returns the latency paid (0 if already loaded)."""
+        st = self._st(app_id)
+        if st.loaded:
+            return 0.0
+        ep = self.registry.get(app_id)
+        self._ensure_budget(ep.weight_bytes, now, exclude=app_id)
+        lat = ep.cold_start_seconds(st.compile_cached)
+        st.loaded = True
+        st.compile_cached = True
+        st.loaded_since = now
+        st.bytes_loaded = ep.weight_bytes
+        self._used += ep.weight_bytes
+        self.stats.bytes_moved += ep.weight_bytes
+        return lat
+
+    def _unload(self, app_id: str, now: float) -> None:
+        st = self._st(app_id)
+        if not st.loaded:
+            return
+        st.loaded = False
+        dt = max(now - st.loaded_since, 0.0)
+        st.resident_seconds += dt
+        self.stats.resident_byte_seconds += dt * st.bytes_loaded
+        self._used -= st.bytes_loaded
+        st.unload_at = float("inf")
+        self.stats.unloads += 1
+
+    def _ensure_budget(self, need: float, now: float, exclude: str) -> None:
+        if self._used + need <= self.budget:
+            return
+        # Evict loaded apps in order of soonest keep-alive expiry.
+        candidates = [(st.unload_at, app) for app, st in self.state.items()
+                      if st.loaded and app != exclude]
+        heapq.heapify(candidates)
+        while candidates and self._used + need > self.budget:
+            _, app = heapq.heappop(candidates)
+            self._unload(app, now)
+            self.stats.evictions += 1
+
+    # -- the policy surface ---------------------------------------------------
+
+    def tick(self, now: float) -> None:
+        """Advance virtual time: expire keep-alives, fire pre-warms."""
+        for app_id, st in self.state.items():
+            if st.loaded and now >= st.unload_at:
+                self._unload(app_id, now)
+            if not st.loaded and now >= st.prewarm_at:
+                self._load(app_id, now)
+                st.prewarm_at = float("inf")
+                w = st.windows or self.policy.windows(app_id)
+                st.unload_at = now + w.keep_alive * MINUTE
+                self.stats.prewarms += 1
+
+    def on_request(self, app_id: str, now: float) -> Tuple[bool, float]:
+        """A request arrives. Returns (was_cold, startup_latency_s)."""
+        self.tick(now)
+        st = self._st(app_id)
+        st.requests += 1
+        cold = not st.loaded
+        lat = self._load(app_id, now) if cold else 0.0
+        if cold:
+            st.cold_starts += 1
+            self.stats.cold_starts += 1
+        else:
+            self.stats.warm_starts += 1
+        st.prewarm_at = float("inf")    # a real request supersedes pre-warm
+        st.unload_at = float("inf")     # pinned while executing
+        return cold, lat
+
+    def on_request_end(self, app_id: str, now: float) -> None:
+        """Request finished: record IT, get fresh windows, schedule actions."""
+        st = self._st(app_id)
+        idle_min = ((now - st.last_end) / MINUTE) if st.last_end >= 0 else None
+        st.last_end = now
+        w = self.policy.on_invocation(app_id, idle_min)
+        st.windows = w
+        if w.prewarm <= 0.0:
+            st.unload_at = now + w.keep_alive * MINUTE
+            st.prewarm_at = float("inf")
+        else:
+            # unload immediately; reload right before the predicted arrival
+            self._unload(app_id, now)
+            st.prewarm_at = now + w.prewarm * MINUTE
+            st.unload_at = float("inf")
+
+    # -- reporting ------------------------------------------------------------
+
+    def finalize(self, now: float) -> PoolStats:
+        for app_id, st in list(self.state.items()):
+            if st.loaded:
+                self._unload(app_id, now)
+        return self.stats
+
+    # -- controller fault tolerance ------------------------------------------
+
+    def state_dict(self) -> dict:
+        policy_state = (self.policy.state_dict()
+                        if hasattr(self.policy, "state_dict") else {})
+        return {
+            "policy": policy_state,
+            "apps": {a: dataclasses.asdict(st) for a, st in self.state.items()},
+            "used": self._used,
+            "stats": dataclasses.asdict(self.stats),
+        }
+
+    def load_state_dict(self, sd: dict) -> None:
+        if sd.get("policy") and hasattr(self.policy, "load_state_dict"):
+            self.policy.load_state_dict(sd["policy"])
+        self.state = {}
+        for a, d in sd["apps"].items():
+            w = d.pop("windows", None)
+            st = AppState(**{k: v for k, v in d.items() if k != "windows"})
+            if w:
+                st.windows = (PolicyWindows(**w) if isinstance(w, dict)
+                              else PolicyWindows(*w))
+            self.state[a] = st
+        self._used = sd["used"]
+        self.stats = PoolStats(**sd["stats"])

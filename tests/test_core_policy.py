@@ -1,0 +1,176 @@
+"""Unit tests for the paper's core: histogram, windows, policies, ARIMA."""
+import numpy as np
+import pytest
+
+from repro.core.arima import ArimaForecaster, auto_arima, fit_arima
+from repro.core.histogram import AppHistogram, HistogramConfig
+from repro.core.policy import (FixedKeepAlivePolicy, HybridConfig,
+                               HybridHistogramPolicy, NoUnloadingPolicy,
+                               PolicyWindows, is_warm, loaded_idle_time)
+from repro.core.welford import CVState
+
+
+def test_histogram_windows_concentrated():
+    """All ITs in one bin -> prewarm just below it, keep-alive tight."""
+    cfg = HistogramConfig()
+    h = AppHistogram(cfg)
+    for _ in range(100):
+        h.record(30.5)   # bin 30
+    pw, ka = h.windows()
+    assert pw == pytest.approx(30 * 0.9)          # head bin 30, -10%
+    assert pw + ka == pytest.approx(31 * 1.1)     # tail bin 31 (upper), +10%
+
+
+def test_histogram_percentile_rounding():
+    """Head rounds down to the bin lower edge, tail up to the upper edge."""
+    cfg = HistogramConfig(margin=0.0)
+    h = AppHistogram(cfg)
+    for v in [5.2] * 50 + [90.7] * 50:
+        h.record(v)
+    pw, ka = h.windows()
+    assert pw == 5.0          # 5th pct in bin 5 -> lower edge
+    assert pw + ka == 91.0    # 99th pct in bin 90 -> upper edge 91
+
+
+def test_histogram_oob():
+    cfg = HistogramConfig(range_minutes=60.0)
+    h = AppHistogram(cfg)
+    for v in [10.0, 30.0, 100.0, 500.0, 70.0]:
+        h.record(v)
+    assert h.total == 2
+    assert h.oob == 3
+    assert h.oob_fraction == pytest.approx(0.6)
+
+
+def test_welford_cv_matches_direct():
+    cfg = HistogramConfig(range_minutes=50.0)
+    h = AppHistogram(cfg)
+    rng = np.random.default_rng(0)
+    for v in rng.uniform(0, 50, 200):
+        h.record(float(v))
+    direct = np.std(h.counts) / np.mean(h.counts)
+    assert h.cv == pytest.approx(float(direct), rel=1e-9)
+
+
+def test_cvstate_incremental():
+    s = CVState(n_bins=10)
+    counts = np.zeros(10)
+    rng = np.random.default_rng(1)
+    for _ in range(100):
+        b = rng.integers(0, 10)
+        s.update(counts[b])
+        counts[b] += 1
+    assert s.cv == pytest.approx(float(np.std(counts) / np.mean(counts)),
+                                 rel=1e-9)
+
+
+def test_is_warm_semantics():
+    w = PolicyWindows(prewarm=10.0, keep_alive=20.0)
+    assert not is_warm(5.0, w)       # arrived before pre-warm: cold
+    assert is_warm(10.0, w)
+    assert is_warm(30.0, w)
+    assert not is_warm(31.0, w)      # after keep-alive expiry: cold
+    w0 = PolicyWindows(prewarm=0.0, keep_alive=20.0)
+    assert is_warm(0.5, w0)
+    assert not is_warm(21.0, w0)
+
+
+def test_loaded_idle_time():
+    w = PolicyWindows(prewarm=10.0, keep_alive=20.0)
+    assert loaded_idle_time(5.0, w) == 0.0         # never loaded
+    assert loaded_idle_time(15.0, w) == 5.0        # loaded at 10, hit at 15
+    assert loaded_idle_time(100.0, w) == 20.0      # full keep-alive wasted
+    w0 = PolicyWindows(prewarm=0.0, keep_alive=20.0)
+    assert loaded_idle_time(5.0, w0) == 5.0
+    assert loaded_idle_time(100.0, w0) == 20.0
+
+
+def test_fixed_policy_constant():
+    p = FixedKeepAlivePolicy(10.0)
+    w = p.on_invocation("a", None)
+    assert w == PolicyWindows(0.0, 10.0)
+    assert p.on_invocation("a", 55.0) == w
+
+
+def test_no_unloading():
+    p = NoUnloadingPolicy()
+    w = p.windows("x")
+    assert w.prewarm == 0.0 and w.keep_alive == float("inf")
+
+
+def test_hybrid_cold_start_then_learn():
+    """Few samples -> standard keep-alive; concentrated ITs -> histogram."""
+    cfg = HybridConfig(use_arima=False)
+    p = HybridHistogramPolicy(cfg)
+    w = p.on_invocation("a", None)
+    assert w.prewarm == 0.0
+    assert w.keep_alive == cfg.histogram.range_minutes
+    for _ in range(50):
+        w = p.on_invocation("a", 30.0)
+    assert w.prewarm == pytest.approx(30 * 0.9)
+    assert w.prewarm > 0.0
+
+
+def test_hybrid_flat_histogram_falls_back():
+    """Uniformly spread ITs -> low CV -> standard keep-alive."""
+    cfg = HybridConfig(use_arima=False)
+    p = HybridHistogramPolicy(cfg)
+    p.on_invocation("a", None)
+    for it in np.linspace(1, 239, 120):
+        w = p.on_invocation("a", float(it))
+    assert w.prewarm == 0.0
+    assert w.keep_alive == cfg.histogram.range_minutes
+
+
+def test_hybrid_state_roundtrip():
+    cfg = HybridConfig()
+    p = HybridHistogramPolicy(cfg)
+    p.on_invocation("a", None)
+    for it in [5, 5, 6, 5, 7, 5]:
+        p.on_invocation("a", float(it))
+    sd = p.state_dict()
+    q = HybridHistogramPolicy(cfg)
+    q.load_state_dict(sd)
+    assert q.windows("a") == p.windows("a")
+    assert q.on_invocation("a", 5.0) == p.on_invocation("a", 5.0)
+
+
+# --- ARIMA ------------------------------------------------------------------
+
+def test_arima_fits_ar1():
+    rng = np.random.default_rng(0)
+    y = [0.0]
+    for _ in range(60):
+        y.append(0.8 * y[-1] + rng.normal(0, 0.1))
+    m = fit_arima(np.asarray(y) + 10.0, (1, 0, 0))
+    assert m is not None
+    assert m.ar[0] == pytest.approx(0.8, abs=0.15)
+
+
+def test_arima_forecast_trend():
+    y = np.arange(20, dtype=float) * 2.0 + 5.0   # linear trend
+    m = auto_arima(y)
+    assert m is not None
+    pred = m.forecast(y)
+    assert pred == pytest.approx(45.0, abs=3.0)
+
+
+def test_arima_forecaster_periodic():
+    f = ArimaForecaster()
+    for _ in range(12):
+        f.observe(300.0)   # constant 5-hour ITs
+    pred = f.forecast()
+    assert pred is not None
+    assert pred == pytest.approx(300.0, rel=0.1)
+
+
+def test_hybrid_uses_arima_for_oob_apps():
+    """App with 6-hour ITs (beyond 4h range) gets ARIMA windows."""
+    cfg = HybridConfig(use_arima=True)
+    p = HybridHistogramPolicy(cfg)
+    p.on_invocation("a", None)
+    for _ in range(10):
+        w = p.on_invocation("a", 360.0)
+    # ARIMA path: prewarm ~ 0.85 * 360, keep-alive ~ 0.3 * 360
+    assert 250 < w.prewarm < 360
+    assert 50 < w.keep_alive < 160

@@ -1,0 +1,132 @@
+"""Per-architecture smoke tests (reduced same-family configs, one forward /
+train step on CPU, shape + finiteness assertions) plus decode consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get, reduced
+from repro.models import build
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _train_shape(cfg, seq=32, batch=2):
+    shape = dataclasses.replace(SHAPES["train_4k"], seq_len=seq,
+                                global_batch=batch)
+    if cfg.frontend == "vision":
+        shape = dataclasses.replace(shape, seq_len=seq + cfg.frontend_tokens)
+    return shape
+
+
+@pytest.mark.parametrize("arch_id", list(ARCHS))
+def test_smoke_forward_and_loss(arch_id):
+    cfg = reduced(get(arch_id))
+    model = build(cfg)
+    params = model.init(KEY)
+    shape = _train_shape(cfg)
+    batch = model.make_inputs(shape)
+    loss = model.loss(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+    # loss should be near ln(vocab) at init
+    assert 0.5 * np.log(cfg.vocab) < float(loss) < 2.5 * np.log(cfg.vocab)
+
+
+@pytest.mark.parametrize("arch_id", list(ARCHS))
+def test_smoke_prefill_decode(arch_id):
+    cfg = reduced(get(arch_id))
+    model = build(cfg)
+    params = model.init(KEY)
+    shape = dataclasses.replace(_train_shape(cfg), kind="prefill")
+    pin = model.make_inputs(shape)
+    logits, cache = model.prefill(params, pin.get("tokens"), max_len=64,
+                                  embeds=pin.get("embeds"))
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    tok = jnp.zeros((2,), jnp.int32)
+    for _ in range(3):
+        lg, cache = model.decode_step(params, tok, cache)
+        assert lg.shape == (2, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(lg)))
+        tok = jnp.argmax(lg, -1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch_id", ["smollm-135m", "mamba2-2.7b",
+                                     "recurrentgemma-2b"])
+def test_decode_matches_forward(arch_id):
+    """Greedy decode logits == full-forward logits at the same positions."""
+    cfg = reduced(get(arch_id)).with_(scan_layers=True, remat=False)
+    model = build(cfg)
+    params = model.init(KEY)
+    B, S = 2, 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    full = model.forward(params, toks)
+
+    prompt = toks[:, :16]
+    logits, cache = model.prefill(params, prompt, max_len=S + 8)
+    np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                               np.asarray(full[:, 15]), rtol=2e-2, atol=2e-2)
+    # feed the true continuation; decode logits must match teacher forcing
+    for t in range(16, 20):
+        lg, cache = model.decode_step(params, toks[:, t], cache)
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, t]),
+                                   rtol=2e-2, atol=2e-2)
+
+
+def test_train_step_reduces_loss():
+    from repro.training import optimizer as opt
+    from repro.launch.steps import make_train_step
+    from repro.training import data as data_lib
+
+    cfg = reduced(get("smollm-135m"))
+    model = build(cfg)
+    params = model.init(KEY)
+    state = opt.init_state(params)
+    shape = _train_shape(cfg, seq=64, batch=4)
+    step_fn = jax.jit(make_train_step(model, opt.OptConfig(lr=5e-3,
+                                                           warmup_steps=5)))
+    losses = []
+    for step in range(40):
+        batch = {k: jnp.asarray(v) for k, v in
+                 data_lib.batch_at(step, cfg, shape).items()}
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.3, losses
+
+
+def test_moe_gather_matches_einsum():
+    """The optimized gather dispatch == GShard einsum dispatch."""
+    from repro.models import moe
+    cfg = reduced(get("olmoe-1b-7b"))
+    model = build(cfg)
+    params = model.init(KEY)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 64), 0, cfg.vocab)
+    out_e, aux_e = moe.forward(cfg, params, toks, impl="einsum")
+    out_g, aux_g = moe.forward(cfg, params, toks, impl="gather")
+    np.testing.assert_allclose(np.asarray(out_e), np.asarray(out_g),
+                               rtol=5e-3, atol=5e-3)
+    np.testing.assert_allclose(float(aux_e), float(aux_g), rtol=1e-5)
+
+
+def test_mamba_state_continuity():
+    """Prefill final state == state after stepwise decode over same tokens."""
+    cfg = reduced(get("mamba2-2.7b")).with_(remat=False)
+    model = build(cfg)
+    params = model.init(KEY)
+    B, S = 1, 16
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab)
+    _, cache_pre = model.prefill(params, toks, max_len=S)
+
+    # stepwise: drive decode_step token by token from empty state
+    from repro.models import mamba2
+    import jax.numpy as jnp
+    state = mamba2.init_state(cfg, B, jnp.float32)
+    cache = {"ssm": state["ssm"], "conv": state["conv"],
+             "pos": jnp.zeros((), jnp.int32)}
+    for t in range(S):
+        _, cache = model.decode_step(params, toks[:, t], cache)
+    np.testing.assert_allclose(np.asarray(cache["ssm"]),
+                               np.asarray(cache_pre["ssm"]), rtol=2e-2,
+                               atol=2e-2)

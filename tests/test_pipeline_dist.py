@@ -1,0 +1,92 @@
+"""Multi-device distribution tests (pipeline parallelism, distributed
+flash-decode). These need >1 device, so they run in a subprocess with
+forced host devices — the main pytest process keeps its single-device view.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=420)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_pipeline_matches_sequential():
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.configs import get, reduced
+        from repro.models import build
+        from repro.distributed import ctx
+
+        cfg = reduced(get('smollm-135m')).with_(remat=False, n_layers=2)
+        m = build(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, cfg.vocab)
+        ref = m.forward(params, toks)
+        def loss_ref(p):
+            return (m.forward(p, toks).astype(jnp.float32) ** 2).mean()
+        g_ref = jax.grad(loss_ref)(params)
+
+        mesh = Mesh(np.asarray(jax.devices()[:8]).reshape(2, 2, 2),
+                    ('pod', 'data', 'model'))
+        m_pp = build(cfg.with_(pipeline_stages=2, pipeline_microbatches=4))
+        with ctx.use_mesh(mesh), mesh:
+            out = jax.jit(m_pp.forward)(params, toks)
+            def loss(p):
+                return (m_pp.forward(p, toks).astype(jnp.float32) ** 2).mean()
+            g = jax.jit(jax.grad(loss))(params)
+        assert float(jnp.abs(ref - out).max()) < 1e-5
+        errs = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()), g, g_ref)
+        assert max(jax.tree.leaves(errs)) < 1e-6
+        print('PIPELINE_OK')
+    """)
+    assert "PIPELINE_OK" in out
+
+
+def test_distributed_flash_decode_matches():
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.configs import get, reduced
+        from repro.models import build
+        from repro.distributed import ctx, dist_decode
+
+        cfg = reduced(get('qwen2-72b')).with_(remat=False)
+        m = build(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+        logits, cache = m.prefill(params, toks, max_len=64)
+        lg_ref, cache_ref = m.decode_step(params, toks[:, 0], cache)
+
+        mesh = Mesh(np.asarray(jax.devices()[:8]).reshape(2, 4),
+                    ('data', 'model'))
+        dist_decode.ENABLED = True
+        with ctx.use_mesh(mesh), mesh:
+            lg, cache2 = jax.jit(m.decode_step)(params, toks[:, 0], cache)
+        dist_decode.ENABLED = False
+        assert float(jnp.abs(lg_ref - lg).max()) < 1e-4
+        assert float(jnp.abs(cache_ref['k'] - cache2['k']).max()) < 1e-4
+        # decode a few more steps distributed: stays finite & consistent
+        with ctx.use_mesh(mesh), mesh:
+            dist_decode.ENABLED = True
+            t = jnp.argmax(lg, -1).astype(jnp.int32)
+            for _ in range(3):
+                lg, cache2 = jax.jit(m.decode_step)(params, t, cache2)
+                t = jnp.argmax(lg, -1).astype(jnp.int32)
+            dist_decode.ENABLED = False
+        assert bool(jnp.all(jnp.isfinite(lg)))
+        print('DIST_DECODE_OK')
+    """)
+    assert "DIST_DECODE_OK" in out

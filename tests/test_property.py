@@ -1,0 +1,109 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.histogram import AppHistogram, HistogramConfig
+from repro.core.policy import (FixedKeepAlivePolicy, HybridConfig,
+                               HybridHistogramPolicy, PolicyWindows, is_warm,
+                               loaded_idle_time)
+from repro.core.workload import AppSpec, Trace
+from repro.core.simulator import simulate_scalar
+
+its = st.floats(min_value=0.0, max_value=5000.0, allow_nan=False)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(its, min_size=1, max_size=300))
+def test_histogram_counts_conserved(values):
+    cfg = HistogramConfig(range_minutes=240.0)
+    h = AppHistogram(cfg)
+    for v in values:
+        h.record(v)
+    assert h.total + h.oob == len(values)
+    assert h.counts.sum() == h.total
+    assert h.cv >= 0.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(its, min_size=1, max_size=200))
+def test_histogram_windows_bounds(values):
+    cfg = HistogramConfig()
+    h = AppHistogram(cfg)
+    for v in values:
+        h.record(v)
+    pw, ka = h.windows()
+    assert pw >= 0.0
+    assert ka >= 0.0
+    # windows never exceed the (margin-inflated) histogram range
+    assert pw + ka <= cfg.range_minutes * (1.0 + cfg.margin) + 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(0.0, 500.0), st.floats(0.0, 500.0), st.floats(0.0, 1000.0))
+def test_warmth_waste_consistency(prewarm, keep, it):
+    w = PolicyWindows(prewarm, keep)
+    waste = loaded_idle_time(it, w)
+    assert 0.0 <= waste <= max(keep, 0.0) + 1e-9
+    if is_warm(it, w):
+        # a warm hit means the image was resident at arrival; for prewarmed
+        # windows the resident span ends exactly at the arrival
+        assert waste <= it + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(1.0, 2000.0), min_size=2, max_size=60),
+       st.floats(1.0, 240.0))
+def test_fixed_policy_cold_count_formula(iats, keep):
+    """Scalar sim == direct formula for the fixed policy."""
+    times = np.cumsum(np.asarray(iats))
+    spec = AppSpec(app_id="app-000000", pattern="poisson", rate_per_day=1.0,
+                   period_minutes=1.0, exec_time_s=0.0, memory_mb=1.0,
+                   n_functions=1, triggers=("http",))
+    trace = Trace(specs=[spec], times=[times],
+                  duration_minutes=float(times[-1] + 1))
+    res = simulate_scalar(trace, FixedKeepAlivePolicy(keep),
+                          include_trailing=False)
+    expected_cold = 1 + int(np.sum(np.diff(times) > keep))
+    assert res.cold[0] == expected_cold
+    expected_waste = float(np.minimum(np.diff(times), keep).sum())
+    assert np.isclose(res.wasted_minutes[0], expected_waste, rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.floats(1.0, 400.0), min_size=5, max_size=80))
+def test_hybrid_never_negative_windows(iats):
+    p = HybridHistogramPolicy(HybridConfig(use_arima=False))
+    w = p.on_invocation("a", None)
+    for it in iats:
+        w = p.on_invocation("a", it)
+        assert w.prewarm >= 0.0
+        assert w.keep_alive >= 0.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 64), st.integers(2, 120))
+def test_batched_policy_kernel_invariants(napps, nbins):
+    """Kernel outputs: counts conserved, windows in range, use_hist sane."""
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    rng = np.random.default_rng(napps * 1000 + nbins)
+    counts = jnp.asarray(rng.integers(0, 4, (napps, nbins)), jnp.int32)
+    total = counts.sum(1)
+    oob = jnp.asarray(rng.integers(0, 2, napps), jnp.int32)
+    cvs = total.astype(jnp.float32)
+    cvss = jnp.asarray((np.asarray(counts) ** 2).sum(1), jnp.float32)
+    bins = jnp.asarray(rng.integers(0, nbins + 4, napps), jnp.int32)
+    active = jnp.asarray(rng.integers(0, 2, napps), jnp.int32)
+    (nc, no, nt, _, _, pw, ka, uh) = ops.policy_update(
+        counts, oob, total, cvs, cvss, bins, active,
+        range_minutes=float(nbins), tile_apps=min(napps, 32))
+    in_b = (np.asarray(active) != 0) & (np.asarray(bins) < nbins)
+    oob_b = (np.asarray(active) != 0) & (np.asarray(bins) >= nbins)
+    np.testing.assert_array_equal(np.asarray(nt),
+                                  np.asarray(total) + in_b)
+    np.testing.assert_array_equal(np.asarray(no), np.asarray(oob) + oob_b)
+    assert np.all(np.asarray(nc).sum(1) == np.asarray(nt))
+    assert np.all(np.asarray(pw) >= 0)
+    assert np.all(np.asarray(ka) >= 0)
+    assert np.all(np.asarray(pw) + np.asarray(ka)
+                  <= float(nbins) * 1.1 + 1e-4)

@@ -1,0 +1,156 @@
+"""Serving runtime tests: warm pool semantics, cluster sim, engine,
+controller fault tolerance, straggler hedging."""
+import numpy as np
+import pytest
+
+from repro.configs import get, reduced
+from repro.core.policy import (FixedKeepAlivePolicy, HybridConfig,
+                               HybridHistogramPolicy)
+from repro.core.workload import AppSpec, Trace, generate_trace
+from repro.runtime.straggler import HedgePolicy
+from repro.serving.cluster_sim import ClusterConfig, ClusterSim
+from repro.serving.engine import ServeEngine
+from repro.serving.registry import ModelEndpoint, Registry
+from repro.serving.warmpool import WarmPool
+
+MIN = 60.0
+
+
+def tiny_registry(n=4, weight_bytes=int(1e9)):
+    reg = Registry()
+    cfg = reduced(get("smollm-135m"))
+    for i in range(n):
+        reg.register(ModelEndpoint(app_id=f"app-{i:06d}", cfg=cfg, seed=i,
+                                   weight_bytes=weight_bytes))
+    return reg
+
+
+def test_warmpool_fixed_keepalive():
+    reg = tiny_registry()
+    pool = WarmPool(reg, FixedKeepAlivePolicy(10.0))
+    cold, _ = pool.on_request("app-000000", 0.0)
+    assert cold
+    pool.on_request_end("app-000000", 1.0)
+    # within keep-alive: warm
+    cold, lat = pool.on_request("app-000000", 1.0 + 5 * MIN)
+    assert not cold and lat == 0.0
+    pool.on_request_end("app-000000", 1.0 + 5 * MIN)
+    # beyond keep-alive: cold again
+    cold, lat = pool.on_request("app-000000", 1.0 + 5 * MIN + 11 * MIN)
+    assert cold and lat > 0.0
+
+
+def test_warmpool_prewarm_hits():
+    """Once the histogram learns a 30-min period, arrivals are warm AND the
+    image is not resident for the whole gap (memory saved)."""
+    reg = tiny_registry()
+    pool = WarmPool(reg, HybridHistogramPolicy(HybridConfig(use_arima=False)))
+    t = 0.0
+    colds = []
+    for i in range(40):
+        cold, _ = pool.on_request("app-000000", t)
+        colds.append(cold)
+        pool.on_request_end("app-000000", t + 1.0)
+        t += 30 * MIN
+    # after learning, no cold starts
+    assert not any(colds[-10:])
+    st = pool.state["app-000000"]
+    # image was unloaded between invocations (prewarm scheduled)
+    assert st.windows.prewarm > 0
+    stats = pool.finalize(t)
+    # resident time far below the no-unload bound
+    no_unload_bound = t * reg.get("app-000000").weight_bytes
+    assert stats.resident_byte_seconds < 0.35 * no_unload_bound
+
+
+def test_warmpool_budget_eviction():
+    reg = tiny_registry(n=4, weight_bytes=int(1e9))
+    pool = WarmPool(reg, FixedKeepAlivePolicy(240.0), budget_bytes=2.5e9)
+    for i, t in [(0, 0.0), (1, 60.0), (2, 120.0)]:
+        pool.on_request(f"app-{i:06d}", t)
+        pool.on_request_end(f"app-{i:06d}", t + 1)
+    # only 2 fit; at least one eviction happened
+    loaded = [a for a, s in pool.state.items() if s.loaded]
+    assert len(loaded) <= 2
+    assert pool.stats.evictions >= 1
+
+
+def test_warmpool_state_roundtrip():
+    reg = tiny_registry()
+    pool = WarmPool(reg, HybridHistogramPolicy(HybridConfig(use_arima=False)))
+    t = 0.0
+    for _ in range(20):
+        pool.on_request("app-000000", t)
+        pool.on_request_end("app-000000", t + 1.0)
+        t += 15 * MIN
+    sd = pool.state_dict()
+    pool2 = WarmPool(reg, HybridHistogramPolicy(HybridConfig(use_arima=False)))
+    pool2.load_state_dict(sd)
+    # the learned windows survive the controller restart
+    assert pool2.state["app-000000"].windows == pool.state["app-000000"].windows
+    c1, _ = pool.on_request("app-000000", t)
+    c2, _ = pool2.on_request("app-000000", t)
+    assert c1 == c2
+
+
+def _periodic_trace(n_apps=6, period=20.0, days=0.5):
+    times, specs = [], []
+    for i in range(n_apps):
+        t = np.arange(i * 2.0, days * 1440.0, period)
+        times.append(t)
+        specs.append(AppSpec(app_id=f"app-{i:06d}", pattern="periodic",
+                             rate_per_day=1440.0 / period,
+                             period_minutes=period, exec_time_s=0.5,
+                             memory_mb=100, n_functions=1, triggers=("timer",)))
+    return Trace(specs=specs, times=times, duration_minutes=days * 1440.0)
+
+
+def test_cluster_sim_hybrid_beats_fixed_on_memory():
+    trace = _periodic_trace()
+    reg = tiny_registry(n=6)
+    fixed = ClusterSim(reg, lambda: FixedKeepAlivePolicy(10.0),
+                       ClusterConfig(n_workers=3)).run(trace)
+    hyb = ClusterSim(reg, lambda: HybridHistogramPolicy(
+        HybridConfig(use_arima=False)),
+        ClusterConfig(n_workers=3)).run(trace)
+    assert hyb.cold_pct_p75 <= fixed.cold_pct_p75 + 1e-9
+    assert hyb.wasted_gb_minutes < fixed.wasted_gb_minutes
+
+
+def test_cluster_sim_controller_restart_mid_run():
+    trace = _periodic_trace()
+    reg = tiny_registry(n=6)
+    res = ClusterSim(reg, lambda: HybridHistogramPolicy(
+        HybridConfig(use_arima=False)),
+        ClusterConfig(n_workers=3, checkpoint_at_minute=300.0)).run(trace)
+    assert res.restored_mid_run
+    # restart must not blow up cold starts (windows were persisted)
+    assert res.cold_pct_p75 < 30.0
+
+
+def test_hedging_improves_tail():
+    rng = np.random.default_rng(0)
+    on = HedgePolicy(straggler_prob=0.05, straggler_factor=10.0, enabled=True)
+    off = HedgePolicy(straggler_prob=0.05, straggler_factor=10.0,
+                      enabled=False)
+    lat_on = [on.effective_latency(1.0, rng) for _ in range(4000)]
+    rng = np.random.default_rng(0)
+    lat_off = [off.effective_latency(1.0, rng) for _ in range(4000)]
+    assert np.percentile(lat_on, 99) < 0.7 * np.percentile(lat_off, 99)
+
+
+def test_engine_end_to_end_cold_vs_warm():
+    """Real JAX executions: a warm request must be much faster than a cold
+    one (weight load + compile dominate)."""
+    import jax.numpy as jnp
+    reg = tiny_registry(n=1)
+    eng = ServeEngine(reg)
+    app = "app-000000"
+    t_load = eng.load(app)
+    toks = jnp.zeros((1, 8), jnp.int32)
+    _, t_first = eng.generate(app, toks, max_new=4, max_len=16)   # compiles
+    _, t_warm = eng.generate(app, toks, max_new=4, max_len=16)
+    assert t_warm < t_first            # executable cache hit
+    assert eng.is_loaded(app)
+    eng.unload(app)
+    assert not eng.is_loaded(app)

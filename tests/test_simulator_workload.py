@@ -1,0 +1,140 @@
+"""Simulator + workload generator tests, including engine equivalence and
+reproduction of the paper's headline policy comparisons (trend-level)."""
+import numpy as np
+import pytest
+
+from repro.core import (FixedKeepAlivePolicy, HybridConfig,
+                        HybridHistogramPolicy, NoUnloadingPolicy,
+                        generate_trace, simulate, simulate_fixed_batch,
+                        simulate_hybrid_batch, simulate_scalar)
+from repro.core.workload import sample_apps
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return generate_trace(n_apps=300, days=5.0, seed=7)
+
+
+@pytest.fixture(scope="module")
+def int_trace():
+    t = generate_trace(n_apps=60, days=3.0, seed=3)
+    for i in range(t.n_apps):
+        t.times[i] = np.unique(np.floor(t.times[i]))
+    return t
+
+
+def test_fixed_batch_matches_scalar(int_trace):
+    fb = simulate_fixed_batch(int_trace, 10.0)
+    fs = simulate_scalar(int_trace, FixedKeepAlivePolicy(10.0))
+    np.testing.assert_array_equal(fb.cold, fs.cold)
+    np.testing.assert_allclose(fb.wasted_minutes, fs.wasted_minutes,
+                               rtol=1e-4, atol=0.5)
+
+
+def test_hybrid_batch_matches_scalar(int_trace):
+    cfg = HybridConfig(use_arima=False)
+    hb = simulate_hybrid_batch(int_trace, cfg)
+    hs = simulate_scalar(int_trace, HybridHistogramPolicy(cfg))
+    np.testing.assert_array_equal(hb.cold, hs.cold)
+    np.testing.assert_allclose(hb.wasted_minutes, hs.wasted_minutes,
+                               rtol=1e-4, atol=0.5)
+
+
+def test_first_invocation_always_cold(trace):
+    res = simulate(trace, NoUnloadingPolicy())
+    assert np.all(res.cold >= 1)
+
+
+def test_no_unloading_is_lower_bound(trace):
+    nou = simulate(trace, NoUnloadingPolicy())
+    f10 = simulate(trace, FixedKeepAlivePolicy(10.0))
+    assert np.all(nou.cold <= f10.cold)
+    # no-unloading: exactly one cold start per app
+    assert np.all(nou.cold == 1)
+
+
+def test_longer_keepalive_fewer_colds_more_waste(trace):
+    f10 = simulate(trace, FixedKeepAlivePolicy(10.0))
+    f120 = simulate(trace, FixedKeepAlivePolicy(120.0))
+    assert f120.cold.sum() < f10.cold.sum()
+    assert f120.total_wasted > f10.total_wasted
+    assert f120.cold_pct_percentile(75) < f10.cold_pct_percentile(75)
+
+
+def test_hybrid_pareto_dominates_fixed(trace):
+    """The paper's headline (Fig. 15): hybrid gives fewer cold starts than
+    the 10-minute fixed policy while using LESS memory."""
+    f10 = simulate(trace, FixedKeepAlivePolicy(10.0))
+    hyb = simulate(trace, HybridConfig(use_arima=False))
+    assert hyb.cold_pct_percentile(75) < f10.cold_pct_percentile(75) / 1.5
+    assert hyb.total_wasted < 1.15 * f10.total_wasted
+
+
+def test_cutoffs_reduce_waste(trace):
+    """Fig. 16: [5,99] cutoffs cut memory vs [0,100] without hurting colds."""
+    from repro.core.histogram import HistogramConfig
+    h_cut = simulate(trace, HybridConfig(
+        histogram=HistogramConfig(head_percentile=5, tail_percentile=99),
+        use_arima=False))
+    h_all = simulate(trace, HybridConfig(
+        histogram=HistogramConfig(head_percentile=0, tail_percentile=100),
+        use_arima=False))
+    assert h_cut.total_wasted <= h_all.total_wasted
+
+
+def test_arima_reduces_always_cold():
+    """Fig. 18: ARIMA halves the fraction of 100%-cold-start apps among
+    infrequently invoked ones."""
+    # apps with ITs beyond the 4h histogram range: periodic ~6h
+    from repro.core.workload import AppSpec, Trace
+    n = 30
+    times = []
+    specs = []
+    rng = np.random.default_rng(0)
+    for i in range(n):
+        period = 360.0 + rng.uniform(-5, 5)   # ~6h, OOB for 4h histogram
+        t = np.arange(rng.uniform(0, 60), 7 * 1440.0, period)
+        times.append(t)
+        specs.append(AppSpec(app_id=f"app-{i:06d}", pattern="periodic",
+                             rate_per_day=1440.0 / period,
+                             period_minutes=period, exec_time_s=1.0,
+                             memory_mb=100.0, n_functions=1, triggers=("timer",)))
+    trace = Trace(specs=specs, times=times, duration_minutes=7 * 1440.0)
+    no_arima = simulate(trace, HybridConfig(use_arima=False))
+    with_arima = simulate(trace, HybridConfig(use_arima=True))
+    assert with_arima.cold.sum() < 0.6 * no_arima.cold.sum()
+
+
+# --- workload generator vs paper anchors -------------------------------------
+
+def test_rate_distribution_anchors():
+    specs = sample_apps(4000, seed=11)
+    rates = np.array([s.rate_per_day for s in specs])
+    assert np.mean(rates <= 24) == pytest.approx(0.45, abs=0.06)
+    assert np.mean(rates <= 1440) == pytest.approx(0.81, abs=0.05)
+    assert rates.max() / rates.min() > 1e6    # many orders of magnitude
+
+
+def test_exec_time_distribution():
+    specs = sample_apps(4000, seed=12)
+    execs = np.array([s.exec_time_s for s in specs])
+    assert np.median(execs) < 1.0                      # 50% below 1s
+    assert np.mean(execs <= 60.0) > 0.9                # ~96% under 60s
+
+
+def test_memory_distribution():
+    specs = sample_apps(4000, seed=13)
+    mem = np.array([s.memory_mb for s in specs])
+    assert 90 < np.median(mem) < 250                   # ~170MB median
+    assert np.percentile(mem, 90) < 600                # 90% under ~400MB
+
+
+def test_cv_classes(trace):
+    cvs = []
+    for i in range(trace.n_apps):
+        ia = trace.iats(i)
+        if len(ia) >= 5:
+            cvs.append(np.std(ia) / max(np.mean(ia), 1e-9))
+    cvs = np.array(cvs)
+    assert np.mean(cvs < 0.1) > 0.08     # periodic class exists
+    assert np.mean(cvs > 1.0) > 0.2      # bursty class exists
