@@ -1,13 +1,21 @@
-"""Section 5.3 'Policy overhead': µs per policy update.
+"""Section 5.3 'Policy overhead' + fleet-scale simulator step-throughput.
 
 Paper: 835.7 µs per invocation in the Scala controller. Ours:
   * scalar host path (per-invocation, like the paper's controller);
   * batched-JAX fleet update (all apps in one vectorized op);
-  * Pallas kernel (interpret mode on CPU — the TPU-native path; interpret
-    timing is NOT meaningful on CPU, reported for completeness only).
+  * the fused hybrid simulator engine (incremental cumulative-count state,
+    chunked over apps) vs the pre-PR batched engine at 100k apps, and a
+    ~1M-app synthetic run through the chunked driver.
+
+Results are also recorded to ``BENCH_policy_overhead.json`` (repo root) so
+the step-throughput gain of the fused engine is tracked across PRs.
 """
 from __future__ import annotations
 
+import json
+import os
+import platform
+import sys
 import time
 
 import jax
@@ -16,11 +24,41 @@ import numpy as np
 
 from repro.core.histogram import HistogramConfig
 from repro.core.policy import HybridConfig, HybridHistogramPolicy
+from repro.core.simulator import (simulate_hybrid_batch,
+                                  simulate_hybrid_batch_reference)
+from repro.core.workload import Trace
 from repro.kernels import ref as kref
 
+# Anchored to the repo root (not the CWD) so re-records always update the
+# tracked file.
+JSON_PATH = os.environ.get(
+    "BENCH_POLICY_OVERHEAD_JSON",
+    os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                 "BENCH_policy_overhead.json"))
 
-def run(n_apps: int = 4096, n_bins: int = 240):
+
+def _app_steps(trace: Trace) -> int:
+    """Scanned app-steps: what the batched engines actually execute after
+    event-count bucketing (sum of bucket_size * bucket_scan_length)."""
+    from repro.core.simulator import _buckets
+    times, counts = trace.to_padded()
+    return sum(len(sel) * sub.shape[1] for sel, sub in _buckets(times, counts))
+
+
+def _time(fn, repeats=1):
+    fn()                       # warmup: jit compile + first transfer
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(n_apps_compare: int = 100_000, n_apps_scale: int = 1_000_000,
+        days: float = 14.0, max_events: int = 64):
     rows = []
+    record = {}
     rng = np.random.default_rng(0)
 
     # scalar path
@@ -35,6 +73,7 @@ def run(n_apps: int = 4096, n_bins: int = 240):
     rows.append(("overhead_scalar_us_per_invocation", scalar_us, 835.7))
 
     # batched jnp fleet update (jitted oracle — what a TPU controller runs)
+    n_apps, n_bins = 4096, 240
     counts = jnp.asarray(rng.integers(0, 5, (n_apps, n_bins)), jnp.int32)
     total = counts.sum(1)
     oob = jnp.zeros((n_apps,), jnp.int32)
@@ -56,4 +95,78 @@ def run(n_apps: int = 4096, n_bins: int = 240):
     rows.append(("overhead_batched_us_per_app", batched_us / n_apps, ""))
     rows.append(("overhead_speedup_vs_paper_per_app",
                  835.7 / max(batched_us / n_apps, 1e-9), ""))
+    record["overhead_scalar_us_per_invocation"] = scalar_us
+    record["overhead_batched_us_per_app"] = batched_us / n_apps
+
+    # ---- step-throughput: fused engine vs pre-PR batched engine ------------
+    hybrid = HybridConfig(use_arima=False)
+    trace_c = Trace.synthesize(n_apps_compare, days=days, seed=0,
+                               max_events=max_events)
+    steps_c = _app_steps(trace_c)
+
+    t_ref = _time(lambda: simulate_hybrid_batch_reference(trace_c, hybrid))
+    t_fused = _time(lambda: simulate_hybrid_batch(trace_c, hybrid))
+    ref_tput = steps_c / t_ref
+    fused_tput = steps_c / t_fused
+    speedup = t_ref / t_fused
+    rows.append((f"fused_vs_reference_{n_apps_compare}apps_speedup",
+                 speedup, ""))
+    rows.append((f"fused_step_throughput_{n_apps_compare}apps_per_s",
+                 fused_tput, ""))
+    rows.append((f"reference_step_throughput_{n_apps_compare}apps_per_s",
+                 ref_tput, ""))
+    record["compare_point"] = {
+        "n_apps": n_apps_compare, "days": days, "max_events": max_events,
+        "app_steps": steps_c,
+        "reference_seconds": t_ref, "fused_seconds": t_fused,
+        "reference_app_steps_per_s": ref_tput,
+        "fused_app_steps_per_s": fused_tput,
+        "fused_over_reference_speedup": speedup,
+    }
+
+    # ---- ~1M-app synthetic trace through the chunked fused driver ----------
+    trace_m = Trace.synthesize(n_apps_scale, days=days, seed=1,
+                               max_events=max_events)
+    steps_m = _app_steps(trace_m)
+    t0 = time.perf_counter()
+    res = simulate_hybrid_batch(trace_m, hybrid)
+    t_scale = time.perf_counter() - t0
+    rows.append((f"fused_{n_apps_scale}apps_seconds", t_scale, ""))
+    rows.append((f"fused_{n_apps_scale}apps_step_throughput_per_s",
+                 steps_m / t_scale, ""))
+    rows.append((f"fused_{n_apps_scale}apps_cold_p75_pct",
+                 res.cold_pct_percentile(75), ""))
+    record["scale_point"] = {
+        # deliberately a COLD end-to-end run: includes jit compiles and
+        # host->device transfers, unlike compare_point's warmed best-of
+        "timing": "cold end-to-end (includes jit compile + transfers)",
+        "n_apps": n_apps_scale, "days": days, "max_events": max_events,
+        "app_steps": steps_m, "seconds": t_scale,
+        "app_steps_per_s": steps_m / t_scale,
+        "total_invocations": int(res.invocations.sum()),
+        "cold_p75_pct": res.cold_pct_percentile(75),
+        "always_cold_fraction": res.always_cold_fraction,
+    }
+
+    record["meta"] = {
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "platform": platform.platform(),
+        "jax": jax.__version__,
+        "recorded_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+    }
+    # Only full-scale runs (or explicit env-var targets) touch the tracked
+    # record: reduced smoke invocations must not clobber the canonical
+    # 100k/1M-app measurement.
+    full_scale = n_apps_compare >= 100_000 and n_apps_scale >= 1_000_000
+    if full_scale or "BENCH_POLICY_OVERHEAD_JSON" in os.environ:
+        try:
+            with open(JSON_PATH, "w") as f:
+                json.dump(record, f, indent=2, sort_keys=True)
+                f.write("\n")
+        except OSError as e:
+            print(f"# WARNING: could not record {JSON_PATH}: {e}",
+                  file=sys.stderr)
+    else:
+        print(f"# reduced run: not recording {JSON_PATH}", file=sys.stderr)
     return rows

@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate: install dev deps, then run the full test suite.
+#
+# A missing dev dependency (e.g. hypothesis) must never kill collection
+# again — requirements-dev.txt is installed first, and the suite runs with
+# -x so the first regression fails fast, matching ROADMAP.md's tier-1
+# command.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -c "import jax, numpy" 2>/dev/null || \
+    python -m pip install "jax[cpu]" numpy
+python -m pip install -r requirements-dev.txt
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q

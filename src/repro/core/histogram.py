@@ -33,6 +33,8 @@ __all__ = [
     "init_state",
     "record_idle_times",
     "percentile_windows",
+    "find_first_ge",
+    "cum_record_idle_times",
     "AppHistogram",
 ]
 
@@ -150,6 +152,60 @@ def percentile_windows(
     prewarm = jnp.where(has_data, prewarm, 0.0)
     keep_alive = jnp.where(has_data, keep_alive, cfg.range_minutes)
     return prewarm, keep_alive
+
+
+# --- Incremental cumulative-count representation -----------------------------
+#
+# The fused simulator (repro.core.simulator / repro.kernels.histogram) carries
+# *cumulative* bin counts instead of raw counts: recording an idle time in bin
+# b is a suffix add over [b, n_bins), after which the percentile windows read
+# straight off the maintained prefix sums — no per-step fleet-wide cumsum.
+
+
+def cum_record_idle_times(
+    cum: jnp.ndarray, it_minutes: jnp.ndarray, active: jnp.ndarray,
+    cfg: HistogramConfig,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Record one IT per app into cumulative counts ``cum`` [n_apps, n_bins].
+
+    Returns (new_cum, old_count_at_bin, in_bounds, oob_hit); ``old_count``
+    is the pre-update raw count of the hit bin (Welford CV update input).
+    """
+    n_apps, n_bins = cum.shape
+    bin_idx = jnp.floor(it_minutes / cfg.bin_minutes).astype(jnp.int32)
+    in_bounds = active & (bin_idx >= 0) & (bin_idx < n_bins)
+    oob_hit = active & (bin_idx >= n_bins)
+    safe = jnp.clip(bin_idx, 0, n_bins - 1)
+    rows = jnp.arange(n_apps)
+    cum_at = cum[rows, safe].astype(jnp.int32)
+    cum_below = jnp.where(safe > 0,
+                          cum[rows, jnp.maximum(safe - 1, 0)].astype(jnp.int32),
+                          0)
+    old = cum_at - cum_below
+    iota = jnp.arange(n_bins, dtype=jnp.int32)
+    new_cum = cum + ((iota[None, :] >= safe[:, None])
+                     & in_bounds[:, None]).astype(cum.dtype)
+    return new_cum, old, in_bounds, oob_hit
+
+
+def find_first_ge(cum: jnp.ndarray, threshold: jnp.ndarray) -> jnp.ndarray:
+    """First bin index where row-wise nondecreasing ``cum`` >= ``threshold``.
+
+    Vectorized binary search: O(log n_bins) gathers per app instead of an
+    O(n_bins) masked reduction. Returns n_bins when no bin qualifies.
+    """
+    n_apps, n_bins = cum.shape
+    rows = jnp.arange(n_apps)
+    lo = jnp.zeros((n_apps,), jnp.int32)
+    hi = jnp.full((n_apps,), n_bins, jnp.int32)
+    # search space is [0, n_bins] — n_bins + 1 candidate answers
+    for _ in range(int(np.ceil(np.log2(n_bins + 1)))):
+        mid = (lo + hi) // 2
+        v = cum[rows, jnp.minimum(mid, n_bins - 1)].astype(jnp.int32)
+        ge = (v >= threshold) & (mid < n_bins)
+        hi = jnp.where(ge, mid, hi)
+        lo = jnp.where(ge, lo, jnp.minimum(mid + 1, hi))
+    return hi
 
 
 # --- Scalar host-side twin ---------------------------------------------------

@@ -1,20 +1,34 @@
 """Trace-driven cold-start simulator (Section 5.1 of the paper).
 
-Two interchangeable engines:
+Three interchangeable engines:
 
   * :func:`simulate_scalar` — event-driven reference. Walks each app's
     invocation sequence, querying any :class:`repro.core.policy.Policy`
     (including the full hybrid policy with its ARIMA path). This is the
-    oracle and handles arbitrary policies.
+    float64 oracle and handles arbitrary policies.
 
   * :func:`simulate_hybrid_batch` / :func:`simulate_fixed_batch` — vectorized
     JAX engines: all apps advance together through a ``lax.scan`` over padded
-    event indices, carrying the batched histogram state
-    (``[n_apps, n_bins]``). Apps are bucketed by event count so a handful of
-    very chatty apps do not inflate the scan length for everyone. ARIMA
-    cannot run inside a scan; apps whose out-of-bounds fraction crosses the
+    event indices. The hybrid engine carries *cumulative* per-app bin counts
+    (``[n_apps, n_bins]``, narrowest integer dtype the bucket's event count
+    allows) so a step's histogram update is a suffix add and the head/tail
+    percentile decision is a binary search — no fleet-wide cumsum recompute
+    per step. Apps are bucketed by event count so a handful of very chatty
+    apps do not inflate the scan length for everyone, and each bucket is
+    further chunked over apps with double-buffered host→device transfer so
+    ~1M-app traces fit in device memory. Time state is float64 end to end,
+    matching the scalar oracle exactly at keep-alive boundaries. ARIMA cannot
+    run inside a scan; apps whose out-of-bounds fraction crosses the
     threshold are re-simulated through the scalar engine and their results
     overridden (the paper: these are ~0.7% of invocations).
+
+  * On TPU the fused step runs as a Pallas kernel
+    (:func:`repro.kernels.histogram.fused_hybrid_step_pallas`) in float32;
+    pass ``use_pallas=True`` to exercise it in interpret mode elsewhere.
+
+The pre-PR batched engine (per-step full-matrix cumsum + argmax) is kept as
+``simulate_hybrid_batch_reference`` — it is the regression baseline for the
+``benchmarks/policy_overhead.py`` step-throughput comparison.
 
 Exactly as in the paper, function execution time is simulated as 0 (so idle
 time == inter-arrival time) to account wasted memory time conservatively, and
@@ -29,18 +43,25 @@ from typing import List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64
 
-from .histogram import HistogramConfig, HistogramState
+from .histogram import (HistogramConfig, HistogramState, cum_record_idle_times,
+                        find_first_ge)
 from .policy import (FixedKeepAlivePolicy, HybridConfig, HybridHistogramPolicy,
                      Policy, PolicyWindows, is_warm, loaded_idle_time)
 from .workload import Trace
 
 __all__ = [
     "SimResult", "simulate_scalar", "simulate_fixed_batch",
-    "simulate_hybrid_batch", "simulate", "BUCKET_EDGES",
+    "simulate_hybrid_batch", "simulate_hybrid_batch_reference", "simulate",
+    "BUCKET_EDGES", "DEFAULT_APP_CHUNK",
 ]
 
 BUCKET_EDGES = (64, 512, 4096, 1 << 62)
+
+# Apps per device-resident chunk of the hybrid scan: bounds the cumulative
+# count state ([chunk, n_bins]) regardless of fleet size.
+DEFAULT_APP_CHUNK = 131072
 
 
 @dataclasses.dataclass
@@ -62,7 +83,13 @@ class SimResult:
 
     @property
     def always_cold_fraction(self) -> float:
-        return float(np.mean(self.cold >= self.invocations))
+        # Only apps that were actually invoked can be always-cold; apps with
+        # zero invocations trivially satisfy cold >= invocations (0 >= 0) and
+        # must not inflate the fraction (paper Fig. 12 counts invoked apps).
+        invoked = self.invocations > 0
+        if not invoked.any():
+            return 0.0
+        return float(np.mean(self.cold[invoked] >= self.invocations[invoked]))
 
 
 # --------------------------------------------------------------------------
@@ -78,15 +105,15 @@ def simulate_scalar(trace: Trace, policy: Policy,
     inv = np.zeros(n, np.int64)
     waste = np.zeros(n, np.float64)
     for i in idx:
-        t = trace.times[i]
-        app = trace.specs[i].app_id
+        t = trace.events(i)
+        app = trace.app_id(i)
         inv[i] = len(t)
         if len(t) == 0:
             continue
         cold[i] += 1  # first invocation is always cold
         w = policy.on_invocation(app, None)
         for k in range(1, len(t)):
-            it = float(t[k] - t[k - 1])  # exec time = 0 => IT == IAT
+            it = float(t[k]) - float(t[k - 1])  # exec time = 0 => IT == IAT
             if not is_warm(it, w):
                 cold[i] += 1
             waste[i] += loaded_idle_time(it, w)
@@ -115,8 +142,9 @@ def _fixed_step(keep_alive, carry, t_now):
 @partial(jax.jit, static_argnums=(3,))
 def _fixed_scan(times, keep_alive, duration, include_trailing: bool):
     n = times.shape[0]
-    init = (jnp.full((n,), -jnp.inf, jnp.float32),
-            jnp.zeros((n,), jnp.int32), jnp.zeros((n,), jnp.float32))
+    tdtype = times.dtype
+    init = (jnp.full((n,), -jnp.inf, tdtype),
+            jnp.zeros((n,), jnp.int32), jnp.zeros((n,), tdtype))
     (last_t, cold, waste), _ = jax.lax.scan(
         partial(_fixed_step, keep_alive), init, times.T)
     if include_trailing:
@@ -131,13 +159,17 @@ def simulate_fixed_batch(trace: Trace, keep_alive_minutes: float,
     times, counts = trace.to_padded()
     cold_parts = np.zeros(trace.n_apps, np.int64)
     waste_parts = np.zeros(trace.n_apps, np.float64)
-    for sel, sub in _buckets(times, counts):
-        cold, waste = _fixed_scan(jnp.asarray(sub),
-                                  jnp.float32(keep_alive_minutes),
-                                  jnp.float32(trace.duration_minutes),
-                                  include_trailing)
-        cold_parts[sel] = np.asarray(cold)
-        waste_parts[sel] = np.asarray(waste)
+    # float64 time state: two-week traces (t ~ 2e4 minutes) lose the
+    # sub-millisecond IAT bits in float32, flipping warm/cold verdicts
+    # exactly at the keep-alive boundary vs the scalar oracle.
+    with enable_x64():
+        for sel, sub in _buckets(times, counts):
+            cold, waste = _fixed_scan(jnp.asarray(sub, jnp.float64),
+                                      jnp.float64(keep_alive_minutes),
+                                      jnp.float64(trace.duration_minutes),
+                                      include_trailing)
+            cold_parts[sel] = np.asarray(cold)
+            waste_parts[sel] = np.asarray(waste)
     return SimResult(cold_parts, counts.astype(np.int64), waste_parts)
 
 
@@ -152,11 +184,267 @@ def _buckets(times: np.ndarray, counts: np.ndarray):
         lo = edge
 
 
+def _chunked_buckets(times: np.ndarray, counts: np.ndarray, app_chunk: int):
+    """Bucket by event count, then chunk each bucket over apps."""
+    for sel, sub in _buckets(times, counts):
+        for lo in range(0, len(sel), app_chunk):
+            yield sel[lo:lo + app_chunk], sub[lo:lo + app_chunk]
+
+
 # -- hybrid ------------------------------------------------------------------
 
 
-def _hybrid_windows(counts, total, oob, cv_sum, cv_sum_sq, cfg: HistogramConfig,
-                    hybrid: HybridConfig):
+def _cum_dtype_for(width: int):
+    """Narrowest cum-count dtype for a bucket scanning ``width`` events.
+
+    Per-app cumulative counts are bounded by the bucket's scan length, so
+    short-trace buckets (the overwhelming majority of a realistic fleet) can
+    carry int8/int16 state — the suffix add over [n_apps, n_bins] is the
+    bandwidth hot spot of the whole simulation.
+    """
+    if width <= 127:
+        return jnp.int8
+    if width <= 32766:
+        return jnp.int16
+    return jnp.int32
+
+
+def _fused_hybrid_step(cfg: HistogramConfig, hybrid: HybridConfig, carry,
+                       t_now):
+    """Fused scan step: warm/cold + waste accounting, histogram suffix-add
+    update, Welford CV accumulation, and the head/tail percentile window
+    decision — one pass, no per-step cumsum (jnp path; the Pallas twin is
+    ``repro.kernels.histogram.fused_hybrid_step_pallas``)."""
+    (prev_t, cum, oob, cv_sum, cv_sum_sq, prewarm, keep, cold, waste) = carry
+    n_bins = cfg.n_bins
+    wdtype = t_now.dtype
+    valid = jnp.isfinite(t_now)
+    first = ~jnp.isfinite(prev_t)
+    it = t_now - prev_t
+
+    # Warm/cold under the windows decided after the previous invocation.
+    warm = jnp.where(prewarm <= 0.0, it <= keep,
+                     (it >= prewarm) & (it <= prewarm + keep))
+    is_cold = valid & (first | ~warm)
+
+    # Wasted loaded-idle time for the gap that just closed.
+    gap_w_nopre = jnp.minimum(it, keep)
+    gap_w_pre = jnp.where(it < prewarm, 0.0,
+                          jnp.minimum(it, prewarm + keep) - prewarm)
+    gap_waste = jnp.where(valid & ~first,
+                          jnp.where(prewarm <= 0.0, gap_w_nopre, gap_w_pre),
+                          0.0)
+
+    # Record the idle time into the cumulative histogram state.
+    rec = valid & ~first
+    cum, old, in_b, oob_hit = cum_record_idle_times(cum, it, rec, cfg)
+    total = cum[:, -1].astype(jnp.int32)
+    oob = oob + oob_hit.astype(jnp.int32)
+    inb = in_b.astype(cv_sum.dtype)
+    cv_sum = cv_sum + inb
+    cv_sum_sq = cv_sum_sq + inb * (2.0 * old.astype(cv_sum.dtype) + 1.0)
+
+    # Representativeness check (CV of bin counts), in the time dtype so the
+    # float64 path reproduces the scalar oracle's decisions bit-for-bit.
+    mean = cv_sum.astype(wdtype) / n_bins
+    var = jnp.maximum(cv_sum_sq.astype(wdtype) / n_bins - mean * mean, 0.0)
+    cv = jnp.where(mean > 0, jnp.sqrt(var) / jnp.maximum(mean, 1e-9), 0.0)
+
+    # Percentile windows off the maintained cumulative counts.
+    tot_f = total.astype(wdtype)
+    head_thr = jnp.maximum(jnp.ceil(tot_f * (cfg.head_percentile / 100.0)),
+                           1.0).astype(jnp.int32)
+    tail_thr = jnp.maximum(jnp.ceil(tot_f * (cfg.tail_percentile / 100.0)),
+                           1.0).astype(jnp.int32)
+    head_bin = find_first_ge(cum, head_thr)
+    tail_bin = find_first_ge(cum, tail_thr) + 1
+
+    new_pre = head_bin.astype(wdtype) * cfg.bin_minutes * (1.0 - cfg.margin)
+    tail = jnp.minimum(tail_bin.astype(wdtype) * cfg.bin_minutes,
+                       cfg.range_minutes) * (1.0 + cfg.margin)
+    new_keep = jnp.maximum(tail - new_pre, 0.0)
+
+    seen = total + oob
+    use_hist = ((seen >= hybrid.min_samples)
+                & (cv >= hybrid.cv_threshold)
+                & (total > 0)
+                & ~(oob.astype(wdtype) > hybrid.oob_fraction_threshold
+                    * jnp.maximum(seen, 1).astype(wdtype)))
+    new_pre = jnp.where(use_hist, new_pre, 0.0)
+    new_keep = jnp.where(use_hist, new_keep,
+                         jnp.asarray(hybrid.standard_keep_alive, wdtype))
+
+    # Decide windows for the next gap (for apps that just saw an event).
+    prewarm = jnp.where(valid, new_pre, prewarm)
+    keep = jnp.where(valid, new_keep, keep)
+    prev_t = jnp.where(valid, t_now, prev_t)
+    return (prev_t, cum, oob, cv_sum, cv_sum_sq, prewarm, keep,
+            cold + is_cold, waste + gap_waste), None
+
+
+def _trailing_waste(last_t, duration, prewarm, keep, waste):
+    tail_gap = jnp.maximum(duration - last_t, 0.0)
+    t_nopre = jnp.minimum(tail_gap, keep)
+    t_pre = jnp.where(tail_gap < prewarm, 0.0,
+                      jnp.minimum(tail_gap, prewarm + keep) - prewarm)
+    return waste + jnp.where(jnp.isfinite(last_t),
+                             jnp.where(prewarm <= 0.0, t_nopre, t_pre), 0.0)
+
+
+@partial(jax.jit, static_argnums=(2, 3, 4, 5))
+def _hybrid_scan(times, duration, cfg: HistogramConfig, hybrid: HybridConfig,
+                 include_trailing: bool, cum_dtype=jnp.int32):
+    n = times.shape[0]
+    tdtype = times.dtype
+    init = (
+        jnp.full((n,), -jnp.inf, tdtype),
+        jnp.zeros((n, cfg.n_bins), cum_dtype),
+        jnp.zeros((n,), jnp.int32),
+        jnp.zeros((n,), tdtype),                                      # cv_sum
+        jnp.zeros((n,), tdtype),                                      # cv_sum_sq
+        jnp.zeros((n,), tdtype),                                      # prewarm
+        jnp.full((n,), hybrid.standard_keep_alive, tdtype),           # keep
+        jnp.zeros((n,), jnp.int32),
+        jnp.zeros((n,), tdtype),
+    )
+    carry, _ = jax.lax.scan(partial(_fused_hybrid_step, cfg, hybrid), init,
+                            times.T)
+    (last_t, cum, oob, _, _, prewarm, keep, cold, waste) = carry
+    total = cum[:, -1].astype(jnp.int32)
+    if include_trailing:
+        waste = _trailing_waste(last_t, duration, prewarm, keep, waste)
+    oob_heavy = oob.astype(jnp.float32) > (
+        jnp.maximum(total + oob, 1).astype(jnp.float32)
+        * jnp.float32(hybrid.oob_fraction_threshold))
+    return cold, waste, oob_heavy
+
+
+@partial(jax.jit, static_argnums=(2, 3, 4, 5, 6))
+def _hybrid_scan_pallas(times, duration, cfg: HistogramConfig,
+                        hybrid: HybridConfig, include_trailing: bool,
+                        interpret: bool = True, tile_apps: int = 512):
+    """Same fused scan, stepping through the Pallas TPU kernel (float32)."""
+    from ..kernels.histogram import fused_hybrid_step_pallas
+
+    # Pad the app dimension to the kernel tile ONCE, outside the scan —
+    # otherwise the kernel wrapper re-pads and re-slices the whole carry
+    # (including [n, n_bins] cum) on every scan step. Padded rows carry
+    # t = +inf and are never active.
+    n_real = times.shape[0]
+    pad = (-n_real) % min(tile_apps, n_real) if n_real else 0
+    if pad:
+        times = jnp.concatenate(
+            [times, jnp.full((pad, times.shape[1]), jnp.inf, times.dtype)])
+    n = times.shape[0]
+    init = (
+        jnp.full((n,), -jnp.inf, jnp.float32),
+        jnp.zeros((n, cfg.n_bins), jnp.int32),
+        jnp.zeros((n,), jnp.int32),
+        jnp.zeros((n,), jnp.float32),
+        jnp.zeros((n,), jnp.float32),
+        jnp.zeros((n,), jnp.float32),
+        jnp.full((n,), jnp.float32(hybrid.standard_keep_alive)),
+        jnp.zeros((n,), jnp.int32),
+        jnp.zeros((n,), jnp.float32),
+    )
+
+    def step(carry, t_now):
+        out = fused_hybrid_step_pallas(
+            t_now, *carry,
+            head_pct=cfg.head_percentile, tail_pct=cfg.tail_percentile,
+            margin=cfg.margin, bin_minutes=cfg.bin_minutes,
+            range_minutes=cfg.range_minutes,
+            cv_threshold=hybrid.cv_threshold,
+            min_samples=hybrid.min_samples,
+            oob_threshold=hybrid.oob_fraction_threshold,
+            standard_keep=hybrid.standard_keep_alive,
+            tile_apps=tile_apps, interpret=interpret)
+        return out, None
+
+    carry, _ = jax.lax.scan(step, init, times.T)
+    carry = tuple(c[:n_real] for c in carry)
+    (last_t, cum, oob, _, _, prewarm, keep, cold, waste) = carry
+    total = cum[:, -1]
+    if include_trailing:
+        waste = _trailing_waste(last_t, duration, prewarm, keep, waste)
+    oob_heavy = oob.astype(jnp.float32) > (
+        jnp.maximum(total + oob, 1).astype(jnp.float32)
+        * jnp.float32(hybrid.oob_fraction_threshold))
+    return cold, waste, oob_heavy
+
+
+def simulate_hybrid_batch(trace: Trace, hybrid: HybridConfig,
+                          include_trailing: bool = True, *,
+                          app_chunk: Optional[int] = None,
+                          use_pallas: Optional[bool] = None) -> SimResult:
+    """Vectorized hybrid simulation + scalar post-pass for ARIMA apps.
+
+    Buckets apps by event count, chunks each bucket to ``app_chunk`` apps
+    (bounding device state), and streams chunks with the next host→device
+    transfer overlapping the current chunk's scan. ``use_pallas`` defaults
+    to True on TPU (float32 fused kernel) and False elsewhere (float64 jnp
+    fused step, exact vs the scalar oracle). Caveat: TPUs have no float64,
+    so the Pallas path can flip warm/cold verdicts that land exactly on a
+    keep-alive boundary once trace times outgrow float32 (t ~ 2e4 minutes);
+    pass ``use_pallas=False`` when oracle-exact counts matter more than
+    throughput.
+    """
+    times, counts = trace.to_padded()
+    n = trace.n_apps
+    cold_parts = np.zeros(n, np.int64)
+    waste_parts = np.zeros(n, np.float64)
+    oob_flags = np.zeros(n, bool)
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    chunk = int(app_chunk) if app_chunk else DEFAULT_APP_CHUNK
+    cfg = hybrid.histogram
+
+    def run_all(run_dtype, scan_fn):
+        # Streaming with a one-chunk lookahead: at most two chunk copies are
+        # alive at once (the one scanning and the one whose host->device
+        # transfer is enqueued ahead of blocking on the current result).
+        work = _chunked_buckets(times, counts, chunk)
+        pending = next(work, None)
+        if pending is None:
+            return
+        pending = (pending[0],
+                   jax.device_put(np.ascontiguousarray(pending[1], run_dtype)))
+        while pending is not None:
+            sel, cur = pending
+            nxt = next(work, None)
+            pending = None if nxt is None else (
+                nxt[0], jax.device_put(np.ascontiguousarray(nxt[1], run_dtype)))
+            cold, waste, oobh = scan_fn(cur)
+            cold_parts[sel] = np.asarray(cold)
+            waste_parts[sel] = np.asarray(waste)
+            oob_flags[sel] = np.asarray(oobh)
+
+    if use_pallas:
+        from ..kernels import ops
+        run_all(np.float32, lambda cur: _hybrid_scan_pallas(
+            cur, jnp.float32(trace.duration_minutes), cfg, hybrid,
+            include_trailing, ops.INTERPRET))
+    else:
+        with enable_x64():
+            run_all(np.float64, lambda cur: _hybrid_scan(
+                cur, jnp.float64(trace.duration_minutes), cfg, hybrid,
+                include_trailing, _cum_dtype_for(cur.shape[1])))
+    result = SimResult(cold_parts, counts.astype(np.int64), waste_parts)
+    if hybrid.use_arima and oob_flags.any():
+        # Re-simulate OOB-heavy apps with the full scalar policy (ARIMA path).
+        policy = HybridHistogramPolicy(hybrid)
+        arima_idx = np.where(oob_flags)[0]
+        scalar = simulate_scalar(trace, policy, include_trailing, arima_idx)
+        result.cold[arima_idx] = scalar.cold[arima_idx]
+        result.wasted_minutes[arima_idx] = scalar.wasted_minutes[arima_idx]
+    return result
+
+
+# -- pre-PR batched engine (benchmark/regression baseline) -------------------
+
+
+def _hybrid_windows_reference(counts, total, oob, cv_sum, cv_sum_sq,
+                              cfg: HistogramConfig, hybrid: HybridConfig):
     """Vectorized decision tree (ARIMA branch resolved to standard keep-alive;
     ARIMA apps are post-processed by the scalar engine)."""
     n_bins = cfg.n_bins
@@ -188,7 +476,8 @@ def _hybrid_windows(counts, total, oob, cv_sum, cv_sum_sq, cfg: HistogramConfig,
     return prewarm, keep
 
 
-def _hybrid_step(cfg: HistogramConfig, hybrid: HybridConfig, carry, t_now):
+def _hybrid_step_reference(cfg: HistogramConfig, hybrid: HybridConfig, carry,
+                           t_now):
     (prev_t, counts, total, oob, cv_sum, cv_sum_sq, prewarm, keep,
      cold, waste) = carry
     n_bins = cfg.n_bins
@@ -196,19 +485,16 @@ def _hybrid_step(cfg: HistogramConfig, hybrid: HybridConfig, carry, t_now):
     first = ~jnp.isfinite(prev_t)
     it = t_now - prev_t
 
-    # Warm/cold under the windows decided after the previous invocation.
     warm = jnp.where(prewarm <= 0.0, it <= keep,
                      (it >= prewarm) & (it <= prewarm + keep))
     is_cold = valid & (first | ~warm)
 
-    # Wasted loaded-idle time for the gap that just closed.
     gap_w_nopre = jnp.minimum(it, keep)
     gap_w_pre = jnp.where(it < prewarm, 0.0,
                           jnp.minimum(it, prewarm + keep) - prewarm)
     gap_waste = jnp.where(valid & ~first,
                           jnp.where(prewarm <= 0.0, gap_w_nopre, gap_w_pre), 0.0)
 
-    # Record the idle time into the histogram state.
     rec = valid & ~first
     bin_idx = jnp.floor(it / cfg.bin_minutes).astype(jnp.int32)
     in_b = rec & (bin_idx >= 0) & (bin_idx < n_bins)
@@ -224,9 +510,8 @@ def _hybrid_step(cfg: HistogramConfig, hybrid: HybridConfig, carry, t_now):
     cv_sum = cv_sum + inb
     cv_sum_sq = cv_sum_sq + inb * (2.0 * old.astype(jnp.float32) + 1.0)
 
-    # Decide windows for the next gap (for apps that just saw an event).
-    new_pre, new_keep = _hybrid_windows(counts, total, oob, cv_sum, cv_sum_sq,
-                                        cfg, hybrid)
+    new_pre, new_keep = _hybrid_windows_reference(counts, total, oob, cv_sum,
+                                                  cv_sum_sq, cfg, hybrid)
     prewarm = jnp.where(valid, new_pre, prewarm)
     keep = jnp.where(valid, new_keep, keep)
     prev_t = jnp.where(valid, t_now, prev_t)
@@ -235,8 +520,8 @@ def _hybrid_step(cfg: HistogramConfig, hybrid: HybridConfig, carry, t_now):
 
 
 @partial(jax.jit, static_argnums=(2, 3, 4))
-def _hybrid_scan(times, duration, cfg: HistogramConfig, hybrid: HybridConfig,
-                 include_trailing: bool):
+def _hybrid_scan_reference(times, duration, cfg: HistogramConfig,
+                           hybrid: HybridConfig, include_trailing: bool):
     n = times.shape[0]
     n_bins = cfg.n_bins
     init = (
@@ -251,39 +536,35 @@ def _hybrid_scan(times, duration, cfg: HistogramConfig, hybrid: HybridConfig,
         jnp.zeros((n,), jnp.int32),
         jnp.zeros((n,), jnp.float32),
     )
-    carry, _ = jax.lax.scan(partial(_hybrid_step, cfg, hybrid), init, times.T)
+    carry, _ = jax.lax.scan(partial(_hybrid_step_reference, cfg, hybrid),
+                            init, times.T)
     (last_t, counts, total, oob, _, _, prewarm, keep, cold, waste) = carry
     if include_trailing:
-        tail_gap = jnp.maximum(duration - last_t, 0.0)
-        t_nopre = jnp.minimum(tail_gap, keep)
-        t_pre = jnp.where(tail_gap < prewarm, 0.0,
-                          jnp.minimum(tail_gap, prewarm + keep) - prewarm)
-        waste = waste + jnp.where(jnp.isfinite(last_t),
-                                  jnp.where(prewarm <= 0.0, t_nopre, t_pre), 0.0)
+        waste = _trailing_waste(last_t, duration, prewarm, keep, waste)
     oob_heavy = oob.astype(jnp.float32) > (
         jnp.maximum(total + oob, 1).astype(jnp.float32)
         * jnp.float32(hybrid.oob_fraction_threshold))
     return cold, waste, oob_heavy
 
 
-def simulate_hybrid_batch(trace: Trace, hybrid: HybridConfig,
-                          include_trailing: bool = True) -> SimResult:
-    """Vectorized hybrid simulation + scalar post-pass for ARIMA apps."""
+def simulate_hybrid_batch_reference(trace: Trace, hybrid: HybridConfig,
+                                    include_trailing: bool = True) -> SimResult:
+    """Pre-PR batched hybrid engine (float32, per-step cumsum recompute)."""
     times, counts = trace.to_padded()
     n = trace.n_apps
     cold_parts = np.zeros(n, np.int64)
     waste_parts = np.zeros(n, np.float64)
     oob_flags = np.zeros(n, bool)
     for sel, sub in _buckets(times, counts):
-        cold, waste, oobh = _hybrid_scan(
-            jnp.asarray(sub), jnp.float32(trace.duration_minutes),
+        cold, waste, oobh = _hybrid_scan_reference(
+            jnp.asarray(sub, jnp.float32),
+            jnp.float32(trace.duration_minutes),
             hybrid.histogram, hybrid, include_trailing)
         cold_parts[sel] = np.asarray(cold)
         waste_parts[sel] = np.asarray(waste)
         oob_flags[sel] = np.asarray(oobh)
     result = SimResult(cold_parts, counts.astype(np.int64), waste_parts)
     if hybrid.use_arima and oob_flags.any():
-        # Re-simulate OOB-heavy apps with the full scalar policy (ARIMA path).
         policy = HybridHistogramPolicy(hybrid)
         arima_idx = np.where(oob_flags)[0]
         scalar = simulate_scalar(trace, policy, include_trailing, arima_idx)

@@ -107,25 +107,88 @@ class AppSpec:
 
 @dataclasses.dataclass
 class Trace:
-    specs: List[AppSpec]
-    times: List[np.ndarray]      # per-app invocation times, minutes, sorted
+    specs: Optional[List[AppSpec]]
+    times: Optional[List[np.ndarray]]  # per-app invocation times, minutes, sorted
     duration_minutes: float
+    # Cached/primary padded representation. Fleet-scale synthesized traces
+    # (:meth:`synthesize`) carry ONLY this form — no per-app python objects.
+    _padded: Optional[Tuple[np.ndarray, np.ndarray]] = \
+        dataclasses.field(default=None, repr=False)
 
     @property
     def n_apps(self) -> int:
-        return len(self.specs)
+        if self.times is not None:
+            return len(self.times)
+        return int(self._padded[0].shape[0])
+
+    def app_id(self, i: int) -> str:
+        return self.specs[i].app_id if self.specs is not None else f"app-{i:06d}"
+
+    def events(self, i: int) -> np.ndarray:
+        """Invocation times of app ``i`` (works for padded-only traces)."""
+        if self.times is not None:
+            return self.times[i]
+        padded, counts = self._padded
+        return padded[i, : int(counts[i])]
 
     def to_padded(self) -> Tuple[np.ndarray, np.ndarray]:
-        """Return (times [n_apps, max_ev] f32 padded with +inf, counts)."""
+        """Return (times [n_apps, max_ev] padded with +inf, counts [n_apps]).
+
+        The time dtype of the source arrays is preserved (float64 for
+        generated traces) so the float64 simulator scans see full-precision
+        inter-arrival times. List-backed traces build a fresh array per
+        call (so ``times`` edits are always honored); padded-only traces
+        (``synthesize``) return their shared primary arrays — treat those
+        as read-only, a fleet-scale trace cannot afford a copy per call.
+        """
+        if self._padded is not None:
+            return self._padded
         counts = np.array([len(t) for t in self.times], np.int32)
-        max_ev = max(int(counts.max()), 1)
-        out = np.full((self.n_apps, max_ev), np.inf, np.float32)
+        max_ev = max(int(counts.max()), 1) if len(counts) else 1
+        dtype = self.times[0].dtype if self.times else np.float64
+        out = np.full((self.n_apps, max_ev), np.inf, dtype)
         for i, t in enumerate(self.times):
             out[i, : len(t)] = t
         return out, counts
 
     def iats(self, i: int) -> np.ndarray:
-        return np.diff(self.times[i])
+        return np.diff(self.events(i))
+
+    @classmethod
+    def synthesize(cls, n_apps: int, days: float = 1.0, seed: int = 0,
+                   max_events: int = 64, app_chunk: int = 262144) -> "Trace":
+        """Fleet-scale synthetic trace (~1M apps) in padded form directly.
+
+        A vectorized scaling path for throughput benchmarking of the batched
+        simulators: per-app rates come from the paper's Fig. 5(a) CDF, event
+        counts are Poisson in the daily rate (clamped to ``max_events`` so
+        device memory stays bounded), and invocation times are sorted
+        uniforms over the trace window. No per-app AppSpec/ndarray objects
+        are materialized, so a 1M-app trace costs one [n_apps, max_events]
+        float32 array instead of millions of python objects. The result is
+        padded-only (``specs``/``times`` are None): consumers that need
+        per-app specs — dataset export, the cluster sim, the workload
+        figures — require :func:`generate_trace` traces; the simulators go
+        through ``to_padded``/``events``/``app_id`` and handle both forms.
+        """
+        duration = days * MINUTES_PER_DAY
+        rng = np.random.default_rng(seed)
+        max_ev = int(max_events)
+        padded = np.full((n_apps, max_ev), np.inf, np.float32)
+        counts = np.empty(n_apps, np.int32)
+        for lo in range(0, n_apps, app_chunk):
+            hi = min(lo + app_chunk, n_apps)
+            m = hi - lo
+            rates = _sample_rates(rng, m)
+            lam = np.minimum(rates * days, float(max_ev))
+            cnt = np.clip(rng.poisson(lam), 1, max_ev).astype(np.int32)
+            t = rng.uniform(0.0, duration, (m, max_ev)).astype(np.float32)
+            t[np.arange(max_ev)[None, :] >= cnt[:, None]] = np.inf
+            t.sort(axis=1)
+            padded[lo:hi] = t
+            counts[lo:hi] = cnt
+        return cls(specs=None, times=None, duration_minutes=duration,
+                   _padded=(padded, counts))
 
 
 def _inv_cdf(anchors: np.ndarray, u: np.ndarray) -> np.ndarray:

@@ -1,0 +1,30 @@
+"""Version compatibility for the distributed layer.
+
+``jax.shard_map`` (with ``axis_names``/``check_vma``) only exists in newer
+JAX releases; 0.4.x exposes ``jax.experimental.shard_map.shard_map`` with
+``auto``/``check_rep`` instead. :func:`shard_map` hides the difference:
+``axis_names`` (the *manual* axes) is translated to the old API's ``auto``
+set (every mesh axis NOT named manual).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+
+def shard_map(f, mesh, in_specs, out_specs, axis_names=None, check=False):
+    if hasattr(jax, "shard_map"):
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check)
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return jax.shard_map(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    # Old JAX: partial-manual (auto axes) lowers through an SPMD path whose
+    # PartitionId handling is unimplemented on some backends. The callers
+    # here disable sharding hints inside the region, so full-manual (every
+    # axis manual, unnamed axes simply replicated by the specs) computes the
+    # same values.
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check)

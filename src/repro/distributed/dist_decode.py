@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from . import ctx
+from . import compat, ctx
 
 # Flipped by the hillclimb driver / launcher; read by sharding rules too.
 ENABLED = False
@@ -113,6 +113,6 @@ def decode_attention(q, k_new, v_new, cache_k, cache_v, pos
     out_specs = (P(dp, None, None, None),
                  P(dp, model_ax, None, None),
                  P(dp, model_ax, None, None))
-    fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_vma=False)
+    fn = compat.shard_map(body, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check=False)
     return fn(q, k_new, v_new, cache_k, cache_v, pos)

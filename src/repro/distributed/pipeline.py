@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from . import ctx
+from . import compat, ctx
 
 
 def _stage_slice(tree, n_stages: int):
@@ -100,12 +100,12 @@ def pipeline_scan(block_fn: Callable, layer_params, x, *, n_stages: int,
         return outs
 
     param_specs = jax.tree.map(lambda _: P(stage_axis), staged)
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         per_stage, mesh=mesh,
         in_specs=(param_specs, P()),
         out_specs=P(),
         axis_names={stage_axis},
-        check_vma=False)
+        check=False)
     # ctx.hint-style NamedSharding constraints are not valid inside the
     # partial-manual region (the stage axis is Manual there) — disable them
     # for the duration of this trace.

@@ -1,0 +1,18 @@
+"""Version compatibility helpers for the Pallas TPU kernels.
+
+``pltpu.CompilerParams`` was called ``pltpu.TPUCompilerParams`` in older JAX
+releases (<= 0.4.x). Every kernel goes through :func:`compiler_params` so the
+package imports and runs on both spellings.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None)
+if _COMPILER_PARAMS_CLS is None:  # pragma: no cover - depends on jax version
+    _COMPILER_PARAMS_CLS = getattr(pltpu, "TPUCompilerParams")
+
+
+def compiler_params(**kwargs):
+    """Build TPU compiler params under either pltpu spelling."""
+    return _COMPILER_PARAMS_CLS(**kwargs)

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import compat
+
 
 def _scan_block(a, b):
     """Inclusive scan of the recurrence semigroup over axis 0. a,b: [T, D]."""
@@ -84,7 +86,7 @@ def rglru_scan_pallas(b_in, a, *, block_t: int = 256, block_d: int = 512,
             jax.ShapeDtypeStruct((B, 1, D), b_in.dtype),
         ],
         scratch_shapes=[pltpu.VMEM((1, bd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(b_in, a)

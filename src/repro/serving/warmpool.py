@@ -112,16 +112,27 @@ class WarmPool:
     # -- the policy surface ---------------------------------------------------
 
     def tick(self, now: float) -> None:
-        """Advance virtual time: expire keep-alives, fire pre-warms."""
-        for app_id, st in self.state.items():
+        """Advance virtual time: expire keep-alives, then fire pre-warms.
+
+        Iterates over a snapshot: a pre-warm ``_load`` can trigger
+        ``_ensure_budget`` evictions that mutate other apps' states, so the
+        pass must not interleave with live dict iteration. All keep-alive
+        expiries are processed first (freeing memory that is rightfully free
+        at ``now``, so pre-warms do not force spurious evictions), then due
+        pre-warms fire in scheduled-time order.
+        """
+        items = list(self.state.items())
+        for app_id, st in items:
             if st.loaded and now >= st.unload_at:
                 self._unload(app_id, now)
-            if not st.loaded and now >= st.prewarm_at:
-                self._load(app_id, now)
-                st.prewarm_at = float("inf")
-                w = st.windows or self.policy.windows(app_id)
-                st.unload_at = now + w.keep_alive * MINUTE
-                self.stats.prewarms += 1
+        due = [(st.prewarm_at, app_id, st) for app_id, st in items
+               if not st.loaded and now >= st.prewarm_at]
+        for _, app_id, st in sorted(due, key=lambda d: (d[0], d[1])):
+            self._load(app_id, now)
+            st.prewarm_at = float("inf")
+            w = st.windows or self.policy.windows(app_id)
+            st.unload_at = now + w.keep_alive * MINUTE
+            self.stats.prewarms += 1
 
     def on_request(self, app_id: str, now: float) -> Tuple[bool, float]:
         """A request arrives. Returns (was_cold, startup_latency_s)."""

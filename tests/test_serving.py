@@ -75,6 +75,48 @@ def test_warmpool_budget_eviction():
     assert pool.stats.evictions >= 1
 
 
+def test_warmpool_tick_expires_before_prewarming():
+    """Regression: a pre-warm _load inside tick() used to fire before other
+    apps' keep-alive expiries were processed (dict order), so _ensure_budget
+    evicted an app whose keep-alive had already lapsed — a spurious eviction
+    plus mid-iteration mutation of the states being looped over."""
+    reg = tiny_registry(n=2, weight_bytes=int(1e9))
+    pool = WarmPool(reg, FixedKeepAlivePolicy(10.0), budget_bytes=1e9)
+    # app 1 first in dict order, with a due pre-warm
+    st_b = pool._st("app-000001")
+    # app 0 loaded, keep-alive expiring before the tick time
+    cold, _ = pool.on_request("app-000000", 0.0)
+    assert cold
+    pool.on_request_end("app-000000", 0.0)
+    pool.state["app-000000"].unload_at = 50.0
+    st_b.prewarm_at = 80.0
+    pool.tick(100.0)
+    # expiry freed the budget: the pre-warm must NOT have evicted app 0
+    assert pool.stats.evictions == 0
+    assert pool.stats.prewarms == 1
+    assert not pool.state["app-000000"].loaded
+    assert st_b.loaded
+    assert st_b.prewarm_at == float("inf")
+
+
+def test_warmpool_tick_prewarms_fire_in_time_order():
+    """Two due pre-warms, budget for one: the later-scheduled pre-warm is
+    processed last, so it wins the single slot (deterministically, not in
+    dict insertion order)."""
+    reg = tiny_registry(n=2, weight_bytes=int(1e9))
+    pool = WarmPool(reg, FixedKeepAlivePolicy(10.0), budget_bytes=1e9)
+    # insert app 1 first so dict order disagrees with schedule order
+    st_b = pool._st("app-000001")
+    st_a = pool._st("app-000000")
+    st_b.prewarm_at = 20.0
+    st_a.prewarm_at = 10.0
+    pool.tick(30.0)
+    assert pool.stats.prewarms == 2
+    assert st_b.loaded              # later schedule processed second, kept
+    assert not st_a.loaded          # evicted by the second pre-warm
+    assert pool.stats.evictions == 1
+
+
 def test_warmpool_state_roundtrip():
     reg = tiny_registry()
     pool = WarmPool(reg, HybridHistogramPolicy(HybridConfig(use_arima=False)))

@@ -105,6 +105,142 @@ def test_arima_reduces_always_cold():
     assert with_arima.cold.sum() < 0.6 * no_arima.cold.sum()
 
 
+# --- fused engine: float64 parity, chunking, scale path ----------------------
+
+def test_fixed_batch_float64_boundary_parity():
+    """ITs sitting exactly on the keep-alive boundary of a two-week trace:
+    float32 time arithmetic flips warm/cold verdicts vs the float64 oracle
+    (t ~ 2e4 minutes loses the sub-millisecond IAT bits)."""
+    from repro.core.workload import AppSpec, Trace
+    c = 1.0 / 3.0
+    times = np.arange(0.0, 20160.0, 10.0) + c
+    spec = AppSpec(app_id="app-000000", pattern="periodic", rate_per_day=144.0,
+                   period_minutes=10.0, exec_time_s=1.0, memory_mb=100.0,
+                   n_functions=1, triggers=("timer",))
+    trace = Trace(specs=[spec], times=[times], duration_minutes=20160.0)
+    fb = simulate_fixed_batch(trace, 10.0)
+    fs = simulate_scalar(trace, FixedKeepAlivePolicy(10.0))
+    np.testing.assert_array_equal(fb.cold, fs.cold)
+    np.testing.assert_allclose(fb.wasted_minutes, fs.wasted_minutes, rtol=1e-9)
+
+
+def test_hybrid_fused_exact_parity_two_week_trace():
+    """Cross-engine: fused batched engine == float64 scalar oracle, exact
+    cold counts and ~machine-precision waste, on a full two-week float trace
+    (the pre-PR float32 engine diverges here)."""
+    t = generate_trace(n_apps=40, days=14.0, seed=11)
+    cfg = HybridConfig(use_arima=False)
+    hs = simulate_scalar(t, HybridHistogramPolicy(cfg))
+    hb = simulate_hybrid_batch(t, cfg)
+    np.testing.assert_array_equal(hb.cold, hs.cold)
+    np.testing.assert_allclose(hb.wasted_minutes, hs.wasted_minutes,
+                               rtol=1e-9, atol=1e-6)
+
+
+def test_hybrid_chunked_matches_unchunked(int_trace):
+    cfg = HybridConfig(use_arima=False)
+    whole = simulate_hybrid_batch(int_trace, cfg)
+    chunked = simulate_hybrid_batch(int_trace, cfg, app_chunk=7)
+    np.testing.assert_array_equal(chunked.cold, whole.cold)
+    np.testing.assert_allclose(chunked.wasted_minutes, whole.wasted_minutes)
+
+
+def test_hybrid_pallas_path_matches_scalar():
+    """The fused Pallas kernel path (interpret mode here, TPU in prod) must
+    agree with the scalar oracle on a small integer-time trace."""
+    from repro.core.workload import Trace
+    base = Trace.synthesize(n_apps=48, days=0.5, seed=4, max_events=24)
+    padded, counts = base.to_padded()
+    # integer minutes (exact in float32), in a fresh trace — to_padded's
+    # cached arrays are shared and must not be mutated
+    t = Trace(specs=None, times=None, duration_minutes=base.duration_minutes,
+              _padded=(np.floor(padded), counts))
+    cfg = HybridConfig(use_arima=False)
+    hs = simulate_scalar(t, HybridHistogramPolicy(cfg))
+    hp = simulate_hybrid_batch(t, cfg, use_pallas=True, app_chunk=16)
+    np.testing.assert_array_equal(hp.cold, hs.cold)
+    np.testing.assert_allclose(hp.wasted_minutes, hs.wasted_minutes,
+                               rtol=1e-4, atol=0.5)
+
+
+def test_synthesize_scaling_path():
+    from repro.core.workload import Trace
+    t = Trace.synthesize(n_apps=5000, days=2.0, seed=9, max_events=48,
+                         app_chunk=1024)
+    assert t.n_apps == 5000
+    padded, counts = t.to_padded()
+    assert padded.shape == (5000, 48)
+    assert counts.min() >= 1 and counts.max() <= 48
+    # rows sorted, padding is +inf, events within the trace window
+    for i in (0, 17, 4999):
+        ev = t.events(i)
+        assert len(ev) == counts[i]
+        assert np.all(np.diff(ev) >= 0)
+        assert np.all((ev >= 0) & (ev <= t.duration_minutes))
+        assert np.all(np.isinf(padded[i, counts[i]:]))
+    assert t.app_id(3) == "app-000003"
+    # the padded-only trace runs through both engines
+    res = simulate_hybrid_batch(t, HybridConfig(use_arima=False),
+                                app_chunk=2048)
+    assert res.invocations.sum() == counts.sum()
+    assert np.all(res.cold >= 1)
+
+
+def test_hybrid_parity_power_of_two_bins():
+    """Regression: the percentile binary search must cover the full [0,
+    n_bins] answer space — with a power-of-two bin count an iteration-short
+    search returns the wrong head bin and flips windows vs the oracle."""
+    from repro.core.histogram import HistogramConfig
+    from repro.core.workload import Trace
+    t = Trace.synthesize(n_apps=64, days=1.0, seed=33, max_events=32)
+    cfg = HybridConfig(histogram=HistogramConfig(range_minutes=128.0),
+                       use_arima=False)
+    hs = simulate_scalar(t, HybridHistogramPolicy(cfg))
+    hb = simulate_hybrid_batch(t, cfg)
+    np.testing.assert_array_equal(hb.cold, hs.cold)
+    np.testing.assert_allclose(hb.wasted_minutes, hs.wasted_minutes,
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_find_first_ge_power_of_two_bins():
+    import jax.numpy as jnp
+    from repro.core.histogram import find_first_ge
+    for n_bins in (2, 4, 8, 64, 128, 240, 256):
+        cum = jnp.asarray(np.full((1, n_bins), 5), jnp.int32)
+        thr = jnp.asarray([1], jnp.int32)
+        assert int(find_first_ge(cum, thr)[0]) == 0, n_bins
+        empty = jnp.zeros((1, n_bins), jnp.int32)
+        assert int(find_first_ge(empty, thr)[0]) == n_bins, n_bins
+        ladder = jnp.asarray(np.arange(1, n_bins + 1)[None, :], jnp.int32)
+        for want in (0, n_bins // 2, n_bins - 1):
+            got = int(find_first_ge(ladder, jnp.asarray([want + 1]))[0])
+            assert got == want, (n_bins, want, got)
+
+
+def test_synthesize_parity_small():
+    from repro.core.workload import Trace
+    t = Trace.synthesize(n_apps=64, days=1.0, seed=21, max_events=32)
+    cfg = HybridConfig(use_arima=False)
+    hs = simulate_scalar(t, HybridHistogramPolicy(cfg))
+    hb = simulate_hybrid_batch(t, cfg)
+    np.testing.assert_array_equal(hb.cold, hs.cold)
+    np.testing.assert_allclose(hb.wasted_minutes, hs.wasted_minutes,
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_always_cold_fraction_ignores_zero_invocation_apps():
+    from repro.core.simulator import SimResult
+    res = SimResult(cold=np.array([1, 0, 0, 2]),
+                    invocations=np.array([1, 0, 0, 4]),
+                    wasted_minutes=np.zeros(4))
+    # only the two invoked apps count; one of them is always-cold
+    assert res.always_cold_fraction == pytest.approx(0.5)
+    empty = SimResult(cold=np.zeros(3, np.int64),
+                      invocations=np.zeros(3, np.int64),
+                      wasted_minutes=np.zeros(3))
+    assert empty.always_cold_fraction == 0.0
+
+
 # --- workload generator vs paper anchors -------------------------------------
 
 def test_rate_distribution_anchors():
