@@ -1,0 +1,57 @@
+#!/usr/bin/env python
+"""Regenerate the golden-trace regression fixtures under tests/golden/.
+
+The goldens pin the float64 scalar oracle's per-app cold counts, final
+policy windows, and wasted minutes on the deterministic traces defined in
+``tests/golden_traces.py``. ``tests/test_golden.py`` replays every engine
+against them, so an (intentional or accidental) policy-formula change fails
+loudly instead of silently shifting Fig. 12-style numbers.
+
+Run after a DELIBERATE formula change, then review the diff of the JSON:
+
+    PYTHONPATH=src python scripts/regen_golden.py
+"""
+import dataclasses
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+sys.path.insert(0, os.path.join(REPO, "tests"))
+
+from repro.core.policy import HybridHistogramPolicy           # noqa: E402
+from repro.core.simulator import simulate_scalar              # noqa: E402
+
+from golden_traces import GOLDEN_TRACES                       # noqa: E402
+
+GOLDEN_DIR = os.path.join(REPO, "tests", "golden")
+
+
+def main() -> None:
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    for name, (make_trace, cfg) in sorted(GOLDEN_TRACES.items()):
+        trace = make_trace()
+        res = simulate_scalar(trace, HybridHistogramPolicy(cfg))
+        record = {
+            "trace": name,
+            "n_apps": trace.n_apps,
+            "duration_minutes": trace.duration_minutes,
+            "config": dataclasses.asdict(cfg),
+            "cold": res.cold.tolist(),
+            "invocations": res.invocations.tolist(),
+            "final_prewarm": res.final_prewarm.tolist(),
+            "final_keep_alive": res.final_keep_alive.tolist(),
+            "wasted_minutes": res.wasted_minutes.tolist(),
+        }
+        path = os.path.join(GOLDEN_DIR, f"{name}.json")
+        with open(path, "w") as f:
+            json.dump(record, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {path}: {trace.n_apps} apps, "
+              f"{int(res.invocations.sum())} invocations, "
+              f"{int(res.cold.sum())} cold starts")
+
+
+if __name__ == "__main__":
+    main()

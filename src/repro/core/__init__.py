@@ -1,19 +1,28 @@
-"""Core: the paper's contribution — hybrid histogram cold-start policy."""
+"""Core: the paper's contribution — hybrid histogram cold-start policy.
+
+All decision formulas are single-sourced in :mod:`repro.core.policy_math`;
+everything else (scalar policy, batched engines, Pallas kernels, serving
+warm pool) is representation-specific glue around those helpers.
+"""
+from . import policy_math
 from .histogram import AppHistogram, HistogramConfig, HistogramState, init_state
 from .policy import (FixedKeepAlivePolicy, HybridConfig, HybridHistogramPolicy,
                      NoUnloadingPolicy, Policy, PolicyWindows, is_warm,
                      loaded_idle_time)
 from .simulator import (SimResult, simulate, simulate_fixed_batch,
-                        simulate_hybrid_batch, simulate_scalar)
+                        simulate_hybrid_batch, simulate_hybrid_batch_reference,
+                        simulate_scalar)
 from .workload import AppSpec, Trace, generate_trace, sample_apps
 from .metrics import PolicyPoint, evaluate, normalize_waste, pareto_frontier
 
 __all__ = [
+    "policy_math",
     "AppHistogram", "HistogramConfig", "HistogramState", "init_state",
     "FixedKeepAlivePolicy", "HybridConfig", "HybridHistogramPolicy",
     "NoUnloadingPolicy", "Policy", "PolicyWindows", "is_warm",
     "loaded_idle_time", "SimResult", "simulate", "simulate_fixed_batch",
-    "simulate_hybrid_batch", "simulate_scalar", "AppSpec", "Trace",
+    "simulate_hybrid_batch", "simulate_hybrid_batch_reference",
+    "simulate_scalar", "AppSpec", "Trace",
     "generate_trace", "sample_apps", "PolicyPoint", "evaluate",
     "normalize_waste", "pareto_frontier",
 ]

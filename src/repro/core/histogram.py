@@ -17,6 +17,10 @@ State is stored as JAX arrays shaped ``[n_apps, n_bins]`` so the entire fleet
 updates in one vectorized op (and, at scale, in the Pallas kernel in
 ``repro.kernels.histogram``). A scalar host-side twin (`AppHistogram`) mirrors
 the semantics for the control-plane path and for differential testing.
+
+All decision formulas (binning, percentile thresholds, window margins, CV)
+live in :mod:`repro.core.policy_math`; this module only holds the state
+containers and representation-specific glue.
 """
 from __future__ import annotations
 
@@ -26,6 +30,8 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from . import policy_math
 
 __all__ = [
     "HistogramConfig",
@@ -89,22 +95,21 @@ def record_idle_times(
       cfg: histogram configuration.
     """
     n_bins = cfg.n_bins
-    bin_idx = jnp.floor(it_minutes / cfg.bin_minutes).astype(jnp.int32)
-    in_bounds = active & (bin_idx >= 0) & (bin_idx < n_bins)
-    oob_hit = active & (bin_idx >= n_bins)
-    safe_idx = jnp.clip(bin_idx, 0, n_bins - 1)
+    safe_idx, in_bounds, oob_hit = policy_math.classify_idle_time(
+        it_minutes, active, cfg.bin_minutes, n_bins)
 
     one_hot = jax.nn.one_hot(safe_idx, n_bins, dtype=jnp.int32)
     one_hot = one_hot * in_bounds.astype(jnp.int32)[:, None]
     old_count = jnp.take_along_axis(state.counts, safe_idx[:, None], axis=1)[:, 0]
 
-    inb = in_bounds.astype(jnp.float32)
+    cv_sum, cv_sum_sq = policy_math.welford_update(
+        state.cv_sum, state.cv_sum_sq, in_bounds, old_count)
     return HistogramState(
         counts=state.counts + one_hot,
         oob=state.oob + oob_hit.astype(jnp.int32),
         total=state.total + in_bounds.astype(jnp.int32),
-        cv_sum=state.cv_sum + inb,
-        cv_sum_sq=state.cv_sum_sq + inb * (2.0 * old_count.astype(jnp.float32) + 1.0),
+        cv_sum=cv_sum,
+        cv_sum_sq=cv_sum_sq,
     )
 
 
@@ -115,15 +120,12 @@ def _weighted_percentile_bins(
 
     Returns the bin *lower edge index* when ``round_up`` is False (paper rounds
     the head "to the next lower value") and index+1 (upper edge) when True
-    (tail rounds "to the next higher value"). Result is in bin units.
+    (tail rounds "to the next higher value"). Result is in bin units;
+    ``n_bins`` (+1 for round_up) when total == 0 — callers mask on total > 0.
     """
     cum = jnp.cumsum(counts, axis=-1)
-    threshold = jnp.ceil(total.astype(jnp.float32) * (pct / 100.0)).astype(jnp.int32)
-    threshold = jnp.maximum(threshold, 1)
-    # first index where cum >= threshold
-    hit = cum >= threshold[..., None]
-    idx = jnp.argmax(hit, axis=-1)
-    # if total == 0 there is no hit anywhere; callers mask on total > 0.
+    thr = policy_math.percentile_threshold_scaled(total, pct)
+    idx = policy_math.first_bin_ge_scaled(cum, thr, gather=True)
     return idx + (1 if round_up else 0)
 
 
@@ -144,12 +146,11 @@ def percentile_windows(
     tail_bin = _weighted_percentile_bins(
         state.counts, state.total, cfg.tail_percentile, round_up=True
     )
-    prewarm = head_bin.astype(jnp.float32) * cfg.bin_minutes * (1.0 - cfg.margin)
-    tail = tail_bin.astype(jnp.float32) * cfg.bin_minutes * (1.0 + cfg.margin)
-    tail = jnp.minimum(tail, cfg.range_minutes * (1.0 + cfg.margin))
-    keep_alive = jnp.maximum(tail - prewarm, 0.0)
+    load_at, unload_at = policy_math.window_values(
+        head_bin, tail_bin, cfg.bin_minutes, cfg.range_minutes, cfg.margin)
+    keep_alive = unload_at - load_at
     has_data = state.total > 0
-    prewarm = jnp.where(has_data, prewarm, 0.0)
+    prewarm = jnp.where(has_data, load_at, 0.0)
     keep_alive = jnp.where(has_data, keep_alive, cfg.range_minutes)
     return prewarm, keep_alive
 
@@ -171,20 +172,10 @@ def cum_record_idle_times(
     Returns (new_cum, old_count_at_bin, in_bounds, oob_hit); ``old_count``
     is the pre-update raw count of the hit bin (Welford CV update input).
     """
-    n_apps, n_bins = cum.shape
-    bin_idx = jnp.floor(it_minutes / cfg.bin_minutes).astype(jnp.int32)
-    in_bounds = active & (bin_idx >= 0) & (bin_idx < n_bins)
-    oob_hit = active & (bin_idx >= n_bins)
-    safe = jnp.clip(bin_idx, 0, n_bins - 1)
-    rows = jnp.arange(n_apps)
-    cum_at = cum[rows, safe].astype(jnp.int32)
-    cum_below = jnp.where(safe > 0,
-                          cum[rows, jnp.maximum(safe - 1, 0)].astype(jnp.int32),
-                          0)
-    old = cum_at - cum_below
-    iota = jnp.arange(n_bins, dtype=jnp.int32)
-    new_cum = cum + ((iota[None, :] >= safe[:, None])
-                     & in_bounds[:, None]).astype(cum.dtype)
+    safe, in_bounds, oob_hit = policy_math.classify_idle_time(
+        it_minutes, active, cfg.bin_minutes, cum.shape[-1])
+    old = policy_math.raw_count_at(cum, safe, gather=True)
+    new_cum = policy_math.suffix_add(cum, safe, in_bounds)
     return new_cum, old, in_bounds, oob_hit
 
 
@@ -194,18 +185,9 @@ def find_first_ge(cum: jnp.ndarray, threshold: jnp.ndarray) -> jnp.ndarray:
     Vectorized binary search: O(log n_bins) gathers per app instead of an
     O(n_bins) masked reduction. Returns n_bins when no bin qualifies.
     """
-    n_apps, n_bins = cum.shape
-    rows = jnp.arange(n_apps)
-    lo = jnp.zeros((n_apps,), jnp.int32)
-    hi = jnp.full((n_apps,), n_bins, jnp.int32)
-    # search space is [0, n_bins] — n_bins + 1 candidate answers
-    for _ in range(int(np.ceil(np.log2(n_bins + 1)))):
-        mid = (lo + hi) // 2
-        v = cum[rows, jnp.minimum(mid, n_bins - 1)].astype(jnp.int32)
-        ge = (v >= threshold) & (mid < n_bins)
-        hi = jnp.where(ge, mid, hi)
-        lo = jnp.where(ge, lo, jnp.minimum(mid + 1, hi))
-    return hi
+    return policy_math.first_bin_ge_scaled(
+        cum, threshold.astype(jnp.int32) * jnp.int32(policy_math.PCT_SCALE),
+        gather=True)
 
 
 # --- Scalar host-side twin ---------------------------------------------------
@@ -223,26 +205,27 @@ class AppHistogram:
         self._cv_sum_sq = 0.0
 
     def record(self, it_minutes: float) -> None:
-        b = int(np.floor(it_minutes / self.cfg.bin_minutes))
-        if b < 0:
-            return
-        if b >= self.cfg.n_bins:
+        safe, in_b, oob_hit = policy_math.classify_idle_time(
+            float(it_minutes), True, self.cfg.bin_minutes, self.cfg.n_bins)
+        if oob_hit:
             self.oob += 1
             return
+        if not in_b:
+            return
+        b = int(safe)
         old = self.counts[b]
         self.counts[b] += 1
         self.total += 1
-        self._cv_sum += 1.0
-        self._cv_sum_sq += 2.0 * old + 1.0
+        cvs, cvss = policy_math.welford_update(
+            self._cv_sum, self._cv_sum_sq, True, old)
+        self._cv_sum, self._cv_sum_sq = float(cvs), float(cvss)
 
     @property
     def cv(self) -> float:
-        n = self.cfg.n_bins
-        mean = self._cv_sum / n
-        if mean <= 0:
-            return 0.0
-        var = max(self._cv_sum_sq / n - mean * mean, 0.0)
-        return float(np.sqrt(var) / mean)
+        # float64 for reporting; the decision gate re-derives the float32
+        # value through policy_math.use_histogram_gate.
+        return float(policy_math.bin_count_cv(
+            self._cv_sum, self._cv_sum_sq, self.cfg.n_bins, np.float64))
 
     @property
     def oob_fraction(self) -> float:
@@ -250,14 +233,23 @@ class AppHistogram:
         return self.oob / seen if seen else 0.0
 
     def windows(self) -> Tuple[float, float]:
+        """(prewarm, keep_alive) from the head/tail percentile bins.
+
+        The bounds come out of policy_math in float32 (dtype-invariant
+        across engines); the keep-alive *length* is their exact float64
+        difference, so ``prewarm + keep_alive`` reconstructs the float32
+        unload bound bit-for-bit.
+        """
         cfg = self.cfg
         if self.total == 0:
             return 0.0, cfg.range_minutes
         cum = np.cumsum(self.counts)
-        head_t = max(int(np.ceil(self.total * cfg.head_percentile / 100.0)), 1)
-        tail_t = max(int(np.ceil(self.total * cfg.tail_percentile / 100.0)), 1)
-        head_bin = int(np.argmax(cum >= head_t))
-        tail_bin = int(np.argmax(cum >= tail_t)) + 1
-        prewarm = head_bin * cfg.bin_minutes * (1.0 - cfg.margin)
-        tail = min(tail_bin * cfg.bin_minutes, cfg.range_minutes) * (1.0 + cfg.margin)
-        return prewarm, max(tail - prewarm, 0.0)
+        head_bin = int(policy_math.first_bin_ge_scaled(
+            cum, policy_math.percentile_threshold_scaled(
+                self.total, cfg.head_percentile), gather=False))
+        tail_bin = int(policy_math.first_bin_ge_scaled(
+            cum, policy_math.percentile_threshold_scaled(
+                self.total, cfg.tail_percentile), gather=False)) + 1
+        load_at, unload_at = policy_math.window_values(
+            head_bin, tail_bin, cfg.bin_minutes, cfg.range_minutes, cfg.margin)
+        return float(load_at), float(unload_at) - float(load_at)

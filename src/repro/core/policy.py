@@ -39,6 +39,7 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from . import policy_math
 from .arima import ArimaForecaster
 from .histogram import AppHistogram, HistogramConfig
 
@@ -64,22 +65,16 @@ class PolicyWindows:
 
 def is_warm(it: float, w: PolicyWindows) -> bool:
     """Whether an invocation with idle time ``it`` (minutes) hits warm."""
-    if w.prewarm <= 0.0:
-        return it <= w.keep_alive
-    return w.prewarm <= it <= w.prewarm + w.keep_alive
+    load_at, unload_at = policy_math.window_bounds(w.prewarm, w.keep_alive)
+    return bool(policy_math.warm_from_bounds(it, load_at, unload_at))
 
 
 def loaded_idle_time(it: float, w: PolicyWindows) -> float:
     """Memory-time (minutes) the image sat loaded-but-idle during a gap of
     length ``it`` under windows ``w`` (exec time treated as 0, worst case,
     exactly as the paper's simulator does)."""
-    if w.prewarm <= 0.0:
-        return min(it, w.keep_alive)
-    if it < w.prewarm:
-        # Invocation arrived before pre-warming: image was never loaded during
-        # the gap; the arrival itself is the (cold) load.
-        return 0.0
-    return min(it, w.prewarm + w.keep_alive) - w.prewarm
+    load_at, unload_at = policy_math.window_bounds(w.prewarm, w.keep_alive)
+    return float(policy_math.idle_from_bounds(it, load_at, unload_at))
 
 
 class Policy:
@@ -163,7 +158,7 @@ class HybridHistogramPolicy(Policy):
         h = self._hist.get(app_id)
         if h is None or (h.total + h.oob) < cfg.min_samples:
             return self._standard()
-        if h.oob_fraction > cfg.oob_fraction_threshold:
+        if policy_math.oob_heavy(h.total, h.oob, cfg.oob_fraction_threshold):
             # Histogram cannot represent this app (most ITs out of bounds):
             # time-series path (or standard keep-alive if ARIMA is disabled
             # or not warmed up yet — matching the batched engine).
@@ -172,15 +167,15 @@ class HybridHistogramPolicy(Policy):
                 if fc is not None and fc.n_obs >= cfg.arima_min_samples:
                     pred = fc.forecast()
                     if pred is not None and math.isfinite(pred) and pred > 0:
-                        m = cfg.arima_margin
-                        return PolicyWindows(prewarm=pred * (1.0 - m),
-                                             keep_alive=2.0 * m * pred)
+                        return PolicyWindows(*policy_math.arima_window(
+                            pred, cfg.arima_margin))
             return self._standard()
-        if h.cv < cfg.cv_threshold:
+        if not policy_math.use_histogram_gate(
+                h.total, h.oob, h._cv_sum, h._cv_sum_sq, cfg.histogram.n_bins,
+                cfg.min_samples, cfg.cv_threshold, cfg.oob_fraction_threshold):
             # Histogram not representative (bin counts too uniform / too new).
             return self._standard()
-        prewarm, keep_alive = h.windows()
-        return PolicyWindows(prewarm, keep_alive)
+        return PolicyWindows(*h.windows())
 
     # -- Policy interface ------------------------------------------------------
 

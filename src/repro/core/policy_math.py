@@ -1,0 +1,447 @@
+"""Single source of truth for the hybrid keep-alive policy math (paper §4).
+
+Every engine in the repo — the scalar control-plane policy
+(:class:`repro.core.policy.HybridHistogramPolicy` / ``AppHistogram``), the
+vectorized ``lax.scan`` engines in :mod:`repro.core.simulator`, and the
+Pallas TPU kernels in :mod:`repro.kernels.histogram` — computes its
+decisions through the helpers below. A policy-formula change is a one-file
+edit here; the conformance suite (``tests/test_engine_conformance.py``)
+asserts the engines stay in exact agreement.
+
+Mapping to the paper's §4 hybrid-policy description:
+
+  * :func:`classify_idle_time`       — §4.2 range-limited IT histogram:
+    1-minute bins up to a 4-hour range, beyond-range ITs counted as
+    out-of-bounds (OOB).
+  * :func:`suffix_add` / :func:`raw_count_at` — the fused engines' cumulative
+    bin-count representation of that histogram (recording bin *b* is a
+    suffix add over ``[b, n_bins)``, so percentiles read straight off the
+    maintained prefix sums).
+  * :func:`welford_update` / :func:`bin_count_cv` — §4.2 representativeness:
+    coefficient of variation of the bin counts, maintained incrementally.
+  * :func:`percentile_threshold_scaled` / :func:`first_bin_ge_scaled` /
+    :func:`window_values` — §4.2 head/tail percentile windows: pre-warm =
+    5th-percentile bin lower edge minus a 10% margin, keep-alive up to the
+    99th-percentile bin upper edge plus the margin.
+  * :func:`use_histogram_gate` / :func:`oob_heavy` — Fig. 10 decision tree:
+    too few ITs or a too-uniform histogram (CV below threshold) falls back
+    to the *standard keep-alive* (pre-warm 0, keep-alive = range); mostly
+    OOB apps go to the time-series (ARIMA) path.
+  * :func:`arima_window`             — §4.3 ARIMA windows: pre-warm just
+    below the forecast IT, keep-alive covering a band around it.
+  * :func:`warm_from_bounds` / :func:`idle_from_bounds` — §4.1 semantics:
+    an invocation is warm iff it lands while the image is resident
+    (``load_at <= IT <= unload_at``); loaded-but-idle time is the wasted
+    memory the provider pays.
+
+Dtype discipline (what makes the float32/TPU engines bit-match the float64
+oracle):
+
+  * The *decision layer* is dtype-invariant by construction: percentile
+    thresholds are exact integer arithmetic (no float ``ceil``), CV and the
+    window values (``load_at`` / ``unload_at``) are always computed in
+    float32 from exactly-representable integer state. Engines carry the
+    resulting bounds in their own time dtype (a float32 value widens to
+    float64 exactly), so warm/cold verdicts compare identical reals in
+    every engine.
+  * The *time layer* (inter-arrival times, waste accumulation) stays in the
+    engine's dtype. The float32 engines recover exact ITs via per-chunk
+    time rebasing (see ``simulator.simulate_hybrid_batch``).
+  * Integer state must stay below 2**24 for the float32 casts to be exact
+    and below 2**31 / PCT_SCALE for the scaled threshold compare; both hold
+    for any trace this repo produces (per-app event counts are bounded by
+    the 1-minute dataset granularity).
+
+Helpers are polymorphic over numpy and jnp (host scalars stay numpy — the
+scalar policy pays no jax dispatch overhead) and trace identically inside
+``jax.lax.scan`` bodies and Pallas TPU kernel bodies. Helpers that need a
+row-wise lookup take a ``gather`` flag: gathers are fast under XLA but not
+Mosaic-lowerable, so Pallas bodies use the reduction forms (both forms are
+asserted equivalent by the property suite).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "PCT_SCALE",
+    "pct_numer",
+    "window_bounds",
+    "warm_from_bounds",
+    "idle_from_bounds",
+    "classify_idle_time",
+    "suffix_add",
+    "raw_count_at",
+    "welford_update",
+    "bin_count_cv",
+    "percentile_threshold_scaled",
+    "first_bin_ge_scaled",
+    "window_values",
+    "standard_window_bounds",
+    "use_histogram_gate",
+    "oob_heavy",
+    "arima_window",
+    "fused_hybrid_step_math",
+]
+
+# Percentiles are quantized to 1/100 of a percent and compared in exact
+# integer arithmetic: ``cum >= ceil(total*pct/100)`` iff
+# ``cum*PCT_SCALE >= total*pct_numer`` — no float rounding, so every engine
+# derives the same percentile bin in any dtype.
+PCT_SCALE = 10_000
+
+
+def _ns(*xs):
+    """numpy for host values, jnp for traced/device values."""
+    for x in xs:
+        if isinstance(x, (jax.Array, jax.core.Tracer)):
+            return jnp
+    return np
+
+
+# --------------------------------------------------------------------------
+# Warm/cold + waste verdicts (§4.1)
+# --------------------------------------------------------------------------
+
+
+def window_bounds(prewarm, keep_alive):
+    """(load_at, unload_at) residency offsets from the last execution end.
+
+    ``prewarm <= 0`` means the image is never unloaded after the execution:
+    it is resident on ``[0, keep_alive]``. Otherwise it is unloaded
+    immediately, re-loaded at ``prewarm`` and kept until
+    ``prewarm + keep_alive``.
+    """
+    if _both_float(prewarm, keep_alive):   # scalar control-plane fast path
+        load_at = prewarm if prewarm > 0.0 else 0.0
+        return load_at, load_at + keep_alive
+    xp = _ns(prewarm, keep_alive)
+    load_at = xp.where(prewarm > 0.0, prewarm, 0.0)
+    return load_at, load_at + keep_alive
+
+
+def _both_float(a, b) -> bool:
+    return isinstance(a, (float, int)) and isinstance(b, (float, int))
+
+
+def warm_from_bounds(it, load_at, unload_at):
+    """Warm iff the invocation arrives while the image is resident."""
+    return (it >= load_at) & (it <= unload_at)
+
+
+def idle_from_bounds(it, load_at, unload_at):
+    """Loaded-but-idle memory time during a gap of length ``it`` (>= 0).
+
+    The image sits idle from ``load_at`` until the arrival (or until
+    ``unload_at`` if the gap outlives the keep-alive); arrivals before
+    ``load_at`` never paid for a resident image.
+    """
+    if _both_float(it, load_at) and _both_float(it, unload_at):
+        return max(min(it, unload_at) - load_at, 0.0)
+    xp = _ns(it, load_at, unload_at)
+    return xp.maximum(xp.minimum(it, unload_at) - load_at, 0.0)
+
+
+# --------------------------------------------------------------------------
+# Histogram update (§4.2)
+# --------------------------------------------------------------------------
+
+
+def classify_idle_time(it, active, bin_minutes: float, n_bins: int):
+    """Bin an idle time: (clipped_bin, in_bounds, oob_hit)."""
+    if isinstance(it, float):          # scalar control-plane fast path
+        bin_idx = math.floor(it / bin_minutes)
+        in_bounds = bool(active) and 0 <= bin_idx < n_bins
+        oob_hit = bool(active) and bin_idx >= n_bins
+        return min(max(bin_idx, 0), n_bins - 1), in_bounds, oob_hit
+    xp = _ns(it, active)
+    bin_idx = xp.floor(it / bin_minutes).astype(xp.int32)
+    in_bounds = active & (bin_idx >= 0) & (bin_idx < n_bins)
+    oob_hit = active & (bin_idx >= n_bins)
+    safe = xp.clip(bin_idx, 0, n_bins - 1)
+    return safe, in_bounds, oob_hit
+
+
+def suffix_add(cum, safe_bin, in_bounds):
+    """Record a hit at ``safe_bin`` into cumulative counts ``cum``.
+
+    ``cum`` is [n_apps, n_bins] maintained prefix sums; one observation is
+    a +1 over the suffix ``[safe_bin, n_bins)``. Traced-only (rank 2).
+    """
+    iota = jax.lax.broadcasted_iota(jnp.int32, cum.shape, cum.ndim - 1)
+    return cum + ((iota >= safe_bin[..., None])
+                  & in_bounds[..., None]).astype(cum.dtype)
+
+
+def raw_count_at(cum, safe_bin, *, gather: bool):
+    """Pre-update raw count of ``safe_bin`` read off cumulative counts.
+
+    ``gather=True`` uses row-wise dynamic indexing (fast under XLA);
+    ``gather=False`` uses masked reductions (Mosaic/Pallas-lowerable).
+    Both return the same int32 values.
+    """
+    if gather:
+        rows = jnp.arange(cum.shape[0])
+        cum_at = cum[rows, safe_bin].astype(jnp.int32)
+        cum_below = jnp.where(
+            safe_bin > 0,
+            cum[rows, jnp.maximum(safe_bin - 1, 0)].astype(jnp.int32), 0)
+        return cum_at - cum_below
+    iota = jax.lax.broadcasted_iota(jnp.int32, cum.shape, cum.ndim - 1)
+    cum_at = jnp.sum(jnp.where(iota == safe_bin[..., None], cum, 0), axis=-1)
+    cum_below = jnp.sum(
+        jnp.where(iota == (safe_bin - 1)[..., None], cum, 0), axis=-1)
+    return (cum_at - cum_below).astype(jnp.int32)
+
+
+def welford_update(cv_sum, cv_sum_sq, in_bounds, old_count):
+    """O(1) update of the bin-count sum / sum-of-squares accumulators.
+
+    A bin going ``old -> old+1`` changes the sum of squared counts by
+    ``2*old + 1``. Accumulator dtype is preserved (float64 oracle, float32
+    kernels); values are exact integers while below the dtype's mantissa.
+    """
+    if isinstance(cv_sum, float):      # scalar control-plane fast path
+        inb = 1.0 if in_bounds else 0.0
+        return cv_sum + inb, cv_sum_sq + inb * (2.0 * float(old_count) + 1.0)
+    xp = _ns(cv_sum, cv_sum_sq)
+    dt = cv_sum.dtype if hasattr(cv_sum, "dtype") else xp.float64
+    inb = xp.asarray(in_bounds, dt) if xp is np else in_bounds.astype(dt)
+    old = xp.asarray(old_count, dt) if xp is np else old_count.astype(dt)
+    return cv_sum + inb, cv_sum_sq + inb * (2.0 * old + 1.0)
+
+
+# --------------------------------------------------------------------------
+# Representativeness (CV of bin counts, §4.2)
+# --------------------------------------------------------------------------
+
+
+def bin_count_cv(cv_sum, cv_sum_sq, n_bins: int, dtype=np.float32):
+    """Coefficient of variation of the bin counts from the accumulators.
+
+    The gate evaluates this in float32 in every engine (``dtype`` is only
+    widened for host-side reporting); the inputs are exact integers, so the
+    float32 value is identical across engines.
+    """
+    if isinstance(cv_sum, float):              # scalar control-plane paths
+        if dtype is np.float64:
+            mean = cv_sum / n_bins
+            if mean <= 0.0:
+                return 0.0
+            var = max(cv_sum_sq / n_bins - mean * mean, 0.0)
+            return math.sqrt(var) / max(mean, 1e-9)
+        # float32 gate semantics: every op rounds to float32, exactly the
+        # sequence the batched engines trace
+        mean = np.float32(cv_sum) / np.float32(n_bins)
+        if not mean > 0:
+            return np.float32(0.0)
+        var = np.float32(cv_sum_sq) / np.float32(n_bins) - mean * mean
+        if var < 0:
+            var = np.float32(0.0)
+        return np.sqrt(var) / max(mean, np.float32(1e-9))
+    xp = _ns(cv_sum, cv_sum_sq)
+    cvs = xp.asarray(cv_sum, dtype) if xp is np else cv_sum.astype(dtype)
+    cvss = xp.asarray(cv_sum_sq, dtype) if xp is np else cv_sum_sq.astype(dtype)
+    mean = cvs / n_bins
+    var = xp.maximum(cvss / n_bins - mean * mean, dtype(0.0))
+    return xp.where(mean > 0, xp.sqrt(var) / xp.maximum(mean, dtype(1e-9)),
+                    dtype(0.0))
+
+
+# --------------------------------------------------------------------------
+# Percentile windows (§4.2)
+# --------------------------------------------------------------------------
+
+
+def pct_numer(pct: float) -> int:
+    """Percentile as an exact integer numerator over PCT_SCALE."""
+    return int(round(pct * (PCT_SCALE / 100.0)))
+
+
+def percentile_threshold_scaled(total, pct: float):
+    """Scaled percentile threshold: ``cum`` hits the pct-percentile iff
+    ``cum * PCT_SCALE >= threshold`` (with the paper's floor of one
+    sample). Pure integer math — dtype-invariant by construction."""
+    numer = pct_numer(pct)
+    if isinstance(total, int):
+        return max(total * numer, PCT_SCALE)
+    xp = _ns(total)
+    if xp is np:
+        return np.maximum(np.int64(total) * numer, PCT_SCALE)
+    return jnp.maximum(total.astype(jnp.int32) * jnp.int32(numer),
+                       jnp.int32(PCT_SCALE))
+
+
+def first_bin_ge_scaled(cum, thr_scaled, *, gather: bool):
+    """First bin index where ``cum * PCT_SCALE >= thr_scaled``; ``n_bins``
+    when no bin qualifies (only possible with zero in-bounds samples —
+    callers gate on ``total > 0``).
+
+    ``gather=True`` runs an O(log n_bins) binary search (XLA scan bodies);
+    ``gather=False`` a masked min over the bin iota (Pallas bodies, numpy
+    host path). Identical results.
+    """
+    xp = _ns(cum, thr_scaled)
+    n_bins = cum.shape[-1]
+    if xp is np:
+        cum = np.asarray(cum, np.int64)
+        if cum.ndim == 1 and np.ndim(thr_scaled) == 0:
+            # host fast path: cum is nondecreasing, so the masked min is a
+            # binary search — cum*S >= thr iff cum >= ceil(thr/S)
+            need = -(-int(thr_scaled) // PCT_SCALE)
+            return int(np.searchsorted(cum, need, side="left"))
+        iota = np.broadcast_to(np.arange(n_bins), cum.shape)
+        hit = cum * PCT_SCALE >= np.asarray(thr_scaled)[..., None]
+        return np.min(np.where(hit, iota, n_bins), axis=-1)
+    if not gather:
+        iota = jax.lax.broadcasted_iota(jnp.int32, cum.shape, cum.ndim - 1)
+        hit = cum.astype(jnp.int32) * jnp.int32(PCT_SCALE) >= \
+            thr_scaled[..., None]
+        return jnp.min(jnp.where(hit, iota, n_bins), axis=-1)
+    n_apps = cum.shape[0]
+    rows = jnp.arange(n_apps)
+    lo = jnp.zeros((n_apps,), jnp.int32)
+    hi = jnp.full((n_apps,), n_bins, jnp.int32)
+    # search space is [0, n_bins] — n_bins + 1 candidate answers
+    for _ in range(int(np.ceil(np.log2(n_bins + 1)))):
+        mid = (lo + hi) // 2
+        v = cum[rows, jnp.minimum(mid, n_bins - 1)].astype(jnp.int32)
+        ge = (v * jnp.int32(PCT_SCALE) >= thr_scaled) & (mid < n_bins)
+        hi = jnp.where(ge, mid, hi)
+        lo = jnp.where(ge, lo, jnp.minimum(mid + 1, hi))
+    return hi
+
+
+def window_values(head_bin, tail_bin, bin_minutes: float,
+                  range_minutes: float, margin: float):
+    """(load_at, unload_at) in minutes from percentile bin indices.
+
+    load_at   = head bin lower edge, reduced by the margin;
+    unload_at = tail bin upper edge (clamped to the range), increased by
+                the margin — never below load_at.
+    Always computed AND returned in float32: window values are decisions,
+    and float32 keeps them identical across engines (they widen to float64
+    exactly).
+    """
+    xp = _ns(head_bin, tail_bin)
+    f = np.float32
+    head = xp.asarray(head_bin, f) if xp is np else head_bin.astype(f)
+    tail = xp.asarray(tail_bin, f) if xp is np else tail_bin.astype(f)
+    load_at = head * f(bin_minutes) * f(1.0 - margin)
+    unload_at = xp.minimum(tail * f(bin_minutes), f(range_minutes)) \
+        * f(1.0 + margin)
+    return load_at, xp.maximum(unload_at, load_at)
+
+
+def standard_window_bounds(standard_keep: float) -> Tuple[float, float]:
+    """The fallback windows: never unload early, keep for the full range."""
+    return np.float32(0.0), np.float32(standard_keep)
+
+
+# --------------------------------------------------------------------------
+# Decision gates (Fig. 10)
+# --------------------------------------------------------------------------
+
+
+def oob_heavy(total, oob, oob_fraction_threshold: float):
+    """Mostly-out-of-bounds check routing an app to the time-series path."""
+    f = np.float32
+    if isinstance(total, int):             # scalar control-plane fast path
+        return bool(f(oob) > f(oob_fraction_threshold) * f(max(total + oob, 1)))
+    return oob.astype(f) > f(oob_fraction_threshold) * \
+        jnp.maximum(total + oob, 1).astype(f)
+
+
+def use_histogram_gate(total, oob, cv_sum, cv_sum_sq, n_bins: int,
+                       min_samples: int, cv_threshold: float,
+                       oob_fraction_threshold: float):
+    """Whether the histogram windows govern the next gap (else fall back to
+    the standard keep-alive / time-series path). Evaluated in int/float32
+    so every engine takes the same branch."""
+    if isinstance(total, int):             # scalar control-plane fast path
+        return bool(
+            total + oob >= min_samples and total > 0
+            and not oob_heavy(total, oob, oob_fraction_threshold)
+            and bin_count_cv(float(cv_sum), float(cv_sum_sq), n_bins,
+                             np.float32) >= np.float32(cv_threshold))
+    cv = bin_count_cv(cv_sum, cv_sum_sq, n_bins, np.float32)
+    seen = total + oob
+    return (seen >= min_samples) & (cv >= np.float32(cv_threshold)) \
+        & (total > 0) & ~oob_heavy(total, oob, oob_fraction_threshold)
+
+
+def arima_window(predicted_it: float, margin: float) -> Tuple[float, float]:
+    """§4.3: (prewarm, keep_alive) around a forecast idle time — pre-warm
+    just before the prediction, keep alive across a 2-margin band."""
+    return predicted_it * (1.0 - margin), 2.0 * margin * predicted_it
+
+
+# --------------------------------------------------------------------------
+# The fused simulator step (one invocation column for the whole fleet)
+# --------------------------------------------------------------------------
+
+
+def fused_hybrid_step_math(t_now, prev_t, cum, oob, cv_sum, cv_sum_sq,
+                           prewarm, unload_at, cold, waste, *, n_bins: int,
+                           head_pct: float, tail_pct: float, margin: float,
+                           bin_minutes: float, range_minutes: float,
+                           cv_threshold: float, min_samples: int,
+                           oob_threshold: float, standard_keep: float,
+                           gather: bool):
+    """One fused hybrid-policy step: warm/cold + waste verdict under the
+    previously decided windows, histogram suffix-add update, Welford CV
+    accumulation, and the percentile-window decision for the next gap.
+
+    Carries (prewarm, unload_at) residency *bounds* — not (prewarm, keep)
+    — so no engine ever re-derives ``prewarm + keep`` in its own dtype.
+    Works identically inside ``lax.scan`` bodies (``gather=True``) and
+    Pallas kernel bodies (``gather=False``); the time dtype (float64 on
+    CPU, float32 on TPU) is taken from ``t_now``.
+    """
+    wdtype = t_now.dtype
+    valid = jnp.isfinite(t_now)
+    first = ~jnp.isfinite(prev_t)
+    it = t_now - prev_t
+
+    # Verdict for the gap that just closed.
+    is_cold = valid & (first | ~warm_from_bounds(it, prewarm, unload_at))
+    gap_waste = jnp.where(valid & ~first,
+                          idle_from_bounds(it, prewarm, unload_at),
+                          jnp.zeros((), wdtype))
+
+    # Histogram + CV update on the cumulative representation.
+    rec = valid & ~first
+    safe, in_b, oob_hit = classify_idle_time(it, rec, bin_minutes, n_bins)
+    old = raw_count_at(cum, safe, gather=gather)
+    new_cum = suffix_add(cum, safe, in_b)
+    # last prefix sum == total in-bounds count (cum is nondecreasing; the
+    # reduction form avoids a lane slice inside Pallas)
+    total = (new_cum[:, -1] if gather else jnp.max(new_cum, axis=-1)) \
+        .astype(jnp.int32)
+    oob = oob + oob_hit.astype(jnp.int32)
+    cv_sum, cv_sum_sq = welford_update(cv_sum, cv_sum_sq, in_b, old)
+
+    # Decision layer (int/float32 — dtype-invariant across engines).
+    head_thr = percentile_threshold_scaled(total, head_pct)
+    tail_thr = percentile_threshold_scaled(total, tail_pct)
+    head_bin = first_bin_ge_scaled(new_cum, head_thr, gather=gather)
+    tail_bin = first_bin_ge_scaled(new_cum, tail_thr, gather=gather) + 1
+    new_load, new_unload = window_values(head_bin, tail_bin, bin_minutes,
+                                         range_minutes, margin)
+    use_hist = use_histogram_gate(total, oob, cv_sum, cv_sum_sq, n_bins,
+                                  min_samples, cv_threshold, oob_threshold)
+    std_load, std_unload = standard_window_bounds(standard_keep)
+    new_load = jnp.where(use_hist, new_load, std_load).astype(wdtype)
+    new_unload = jnp.where(use_hist, new_unload, std_unload).astype(wdtype)
+
+    # Windows decided now govern the next gap of apps that saw an event.
+    prewarm = jnp.where(valid, new_load, prewarm)
+    unload_at = jnp.where(valid, new_unload, unload_at)
+    prev_t = jnp.where(valid, t_now, prev_t)
+    return (prev_t, new_cum, oob, cv_sum, cv_sum_sq, prewarm, unload_at,
+            cold + is_cold, waste + gap_waste)

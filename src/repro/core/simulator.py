@@ -1,6 +1,7 @@
 """Trace-driven cold-start simulator (Section 5.1 of the paper).
 
-Three interchangeable engines:
+Four interchangeable engines, all computing their decisions through the
+single-source policy math in :mod:`repro.core.policy_math`:
 
   * :func:`simulate_scalar` — event-driven reference. Walks each app's
     invocation sequence, querying any :class:`repro.core.policy.Policy`
@@ -16,19 +17,31 @@ Three interchangeable engines:
     per step. Apps are bucketed by event count so a handful of very chatty
     apps do not inflate the scan length for everyone, and each bucket is
     further chunked over apps with double-buffered host→device transfer so
-    ~1M-app traces fit in device memory. Time state is float64 end to end,
-    matching the scalar oracle exactly at keep-alive boundaries. ARIMA cannot
-    run inside a scan; apps whose out-of-bounds fraction crosses the
-    threshold are re-simulated through the scalar engine and their results
-    overridden (the paper: these are ~0.7% of invocations).
+    ~1M-app traces fit in device memory. ARIMA cannot run inside a scan;
+    apps whose out-of-bounds fraction crosses the threshold are re-simulated
+    through the scalar engine and their results overridden (the paper: these
+    are ~0.7% of invocations).
 
   * On TPU the fused step runs as a Pallas kernel
     (:func:`repro.kernels.histogram.fused_hybrid_step_pallas`) in float32;
     pass ``use_pallas=True`` to exercise it in interpret mode elsewhere.
 
-The pre-PR batched engine (per-step full-matrix cumsum + argmax) is kept as
-``simulate_hybrid_batch_reference`` — it is the regression baseline for the
-``benchmarks/policy_overhead.py`` step-throughput comparison.
+  * ``simulate_hybrid_batch_reference`` — the pre-fused batched engine
+    (per-step full-matrix cumsum), kept as the regression baseline for the
+    ``benchmarks/policy_overhead.py`` step-throughput comparison.
+
+Float32 exactness (the TPU story): TPUs have no float64, so the Pallas and
+reference engines carry float32 time state. Absolute timestamps on a
+multi-week trace (t ~ 2e4 minutes) cannot hold sub-minute inter-arrival
+structure in float32, so both float32 engines *rebase* each app chunk before
+the scan — every app's timestamps are shifted by its own first event (the
+chunk's per-row minimum), computed in float64 on the host. Policy verdicts
+are invariant under time translation (a property test guards this), so the
+rebased scan reproduces the float64 oracle's cold counts exactly whenever
+the rebased times are float32-representable; trailing waste is reconstructed
+afterward in float64 from the un-rebased clock. The decision layer itself
+(percentile thresholds, windows, CV gate) is dtype-invariant by construction
+— see :mod:`repro.core.policy_math`.
 
 Exactly as in the paper, function execution time is simulated as 0 (so idle
 time == inter-arrival time) to account wasted memory time conservatively, and
@@ -38,17 +51,17 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import List, Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
-from .histogram import (HistogramConfig, HistogramState, cum_record_idle_times,
-                        find_first_ge)
+from . import policy_math
+from .histogram import HistogramConfig
 from .policy import (FixedKeepAlivePolicy, HybridConfig, HybridHistogramPolicy,
-                     Policy, PolicyWindows, is_warm, loaded_idle_time)
+                     Policy, is_warm, loaded_idle_time)
 from .workload import Trace
 
 __all__ = [
@@ -69,6 +82,10 @@ class SimResult:
     cold: np.ndarray            # [n_apps] cold-start counts
     invocations: np.ndarray     # [n_apps] invocation counts
     wasted_minutes: np.ndarray  # [n_apps] loaded-but-idle memory time
+    # Final per-app policy windows (None for engines/paths that predate the
+    # conformance harness; filled by all four engines here).
+    final_prewarm: Optional[np.ndarray] = None     # [n_apps] float64
+    final_keep_alive: Optional[np.ndarray] = None  # [n_apps] float64
 
     @property
     def cold_pct(self) -> np.ndarray:
@@ -104,24 +121,27 @@ def simulate_scalar(trace: Trace, policy: Policy,
     cold = np.zeros(n, np.int64)
     inv = np.zeros(n, np.int64)
     waste = np.zeros(n, np.float64)
+    final_pre = np.zeros(n, np.float64)
+    final_keep = np.zeros(n, np.float64)
     for i in idx:
         t = trace.events(i)
         app = trace.app_id(i)
         inv[i] = len(t)
-        if len(t) == 0:
-            continue
-        cold[i] += 1  # first invocation is always cold
-        w = policy.on_invocation(app, None)
-        for k in range(1, len(t)):
-            it = float(t[k]) - float(t[k - 1])  # exec time = 0 => IT == IAT
-            if not is_warm(it, w):
-                cold[i] += 1
-            waste[i] += loaded_idle_time(it, w)
-            w = policy.on_invocation(app, it)
-        if include_trailing:
-            tail_gap = trace.duration_minutes - float(t[-1])
-            waste[i] += loaded_idle_time(tail_gap, w) if tail_gap > 0 else 0.0
-    return SimResult(cold, inv, waste)
+        w = policy.windows(app)
+        if len(t):
+            cold[i] += 1  # first invocation is always cold
+            w = policy.on_invocation(app, None)
+            for k in range(1, len(t)):
+                it = float(t[k]) - float(t[k - 1])  # exec time = 0 => IT == IAT
+                if not is_warm(it, w):
+                    cold[i] += 1
+                waste[i] += loaded_idle_time(it, w)
+                w = policy.on_invocation(app, it)
+            if include_trailing:
+                tail_gap = trace.duration_minutes - float(t[-1])
+                waste[i] += loaded_idle_time(tail_gap, w) if tail_gap > 0 else 0.0
+        final_pre[i], final_keep[i] = w.prewarm, w.keep_alive
+    return SimResult(cold, inv, waste, final_pre, final_keep)
 
 
 # --------------------------------------------------------------------------
@@ -133,8 +153,11 @@ def _fixed_step(keep_alive, carry, t_now):
     valid = jnp.isfinite(t_now)
     it = t_now - prev_t
     first = ~jnp.isfinite(prev_t)
-    is_cold = valid & (first | (it > keep_alive))
-    gap_waste = jnp.where(valid & ~first, jnp.minimum(it, keep_alive), 0.0)
+    warm = policy_math.warm_from_bounds(it, 0.0, keep_alive)
+    is_cold = valid & (first | ~warm)
+    gap_waste = jnp.where(valid & ~first,
+                          policy_math.idle_from_bounds(it, 0.0, keep_alive),
+                          0.0)
     new_prev = jnp.where(valid, t_now, prev_t)
     return (new_prev, cold + is_cold, waste + gap_waste), None
 
@@ -149,8 +172,9 @@ def _fixed_scan(times, keep_alive, duration, include_trailing: bool):
         partial(_fixed_step, keep_alive), init, times.T)
     if include_trailing:
         tail = jnp.maximum(duration - last_t, 0.0)
-        waste = waste + jnp.where(jnp.isfinite(last_t),
-                                  jnp.minimum(tail, keep_alive), 0.0)
+        waste = waste + jnp.where(
+            jnp.isfinite(last_t),
+            policy_math.idle_from_bounds(tail, 0.0, keep_alive), 0.0)
     return cold, waste
 
 
@@ -170,7 +194,10 @@ def simulate_fixed_batch(trace: Trace, keep_alive_minutes: float,
                                       include_trailing)
             cold_parts[sel] = np.asarray(cold)
             waste_parts[sel] = np.asarray(waste)
-    return SimResult(cold_parts, counts.astype(np.int64), waste_parts)
+    n = trace.n_apps
+    return SimResult(cold_parts, counts.astype(np.int64), waste_parts,
+                     np.zeros(n, np.float64),
+                     np.full(n, float(keep_alive_minutes), np.float64))
 
 
 def _buckets(times: np.ndarray, counts: np.ndarray):
@@ -185,10 +212,31 @@ def _buckets(times: np.ndarray, counts: np.ndarray):
 
 
 def _chunked_buckets(times: np.ndarray, counts: np.ndarray, app_chunk: int):
-    """Bucket by event count, then chunk each bucket over apps."""
+    """Bucket by event count, then chunk each bucket over apps.
+
+    The last chunk of a bucket is ragged when the bucket size is not a
+    multiple of ``app_chunk`` — every consumer below handles that, but an
+    invalid chunk size is rejected loudly here rather than producing empty
+    chunks downstream.
+    """
+    if app_chunk < 1:
+        raise ValueError(
+            f"app_chunk must be a positive app count, got {app_chunk}")
     for sel, sub in _buckets(times, counts):
+        _check_scan_width(sub.shape[1])
         for lo in range(0, len(sel), app_chunk):
             yield sel[lo:lo + app_chunk], sub[lo:lo + app_chunk]
+
+
+def _check_scan_width(width: int) -> None:
+    """The scaled percentile compare (policy_math) multiplies cumulative
+    counts — bounded by the scan width — by PCT_SCALE in int32; guard every
+    engine identically rather than overflowing silently."""
+    if width * policy_math.PCT_SCALE >= 2 ** 31:
+        raise ValueError(
+            f"bucket scan width {width} overflows the int32 scaled "
+            f"percentile compare (max {2 ** 31 // policy_math.PCT_SCALE - 1} "
+            f"events per app)")
 
 
 # -- hybrid ------------------------------------------------------------------
@@ -209,93 +257,30 @@ def _cum_dtype_for(width: int):
     return jnp.int32
 
 
+def _step_params(cfg: HistogramConfig, hybrid: HybridConfig, gather: bool):
+    return dict(
+        n_bins=cfg.n_bins, head_pct=cfg.head_percentile,
+        tail_pct=cfg.tail_percentile, margin=cfg.margin,
+        bin_minutes=cfg.bin_minutes, range_minutes=cfg.range_minutes,
+        cv_threshold=hybrid.cv_threshold, min_samples=hybrid.min_samples,
+        oob_threshold=hybrid.oob_fraction_threshold,
+        standard_keep=hybrid.standard_keep_alive, gather=gather)
+
+
 def _fused_hybrid_step(cfg: HistogramConfig, hybrid: HybridConfig, carry,
                        t_now):
-    """Fused scan step: warm/cold + waste accounting, histogram suffix-add
-    update, Welford CV accumulation, and the head/tail percentile window
-    decision — one pass, no per-step cumsum (jnp path; the Pallas twin is
-    ``repro.kernels.histogram.fused_hybrid_step_pallas``)."""
-    (prev_t, cum, oob, cv_sum, cv_sum_sq, prewarm, keep, cold, waste) = carry
-    n_bins = cfg.n_bins
-    wdtype = t_now.dtype
-    valid = jnp.isfinite(t_now)
-    first = ~jnp.isfinite(prev_t)
-    it = t_now - prev_t
-
-    # Warm/cold under the windows decided after the previous invocation.
-    warm = jnp.where(prewarm <= 0.0, it <= keep,
-                     (it >= prewarm) & (it <= prewarm + keep))
-    is_cold = valid & (first | ~warm)
-
-    # Wasted loaded-idle time for the gap that just closed.
-    gap_w_nopre = jnp.minimum(it, keep)
-    gap_w_pre = jnp.where(it < prewarm, 0.0,
-                          jnp.minimum(it, prewarm + keep) - prewarm)
-    gap_waste = jnp.where(valid & ~first,
-                          jnp.where(prewarm <= 0.0, gap_w_nopre, gap_w_pre),
-                          0.0)
-
-    # Record the idle time into the cumulative histogram state.
-    rec = valid & ~first
-    cum, old, in_b, oob_hit = cum_record_idle_times(cum, it, rec, cfg)
-    total = cum[:, -1].astype(jnp.int32)
-    oob = oob + oob_hit.astype(jnp.int32)
-    inb = in_b.astype(cv_sum.dtype)
-    cv_sum = cv_sum + inb
-    cv_sum_sq = cv_sum_sq + inb * (2.0 * old.astype(cv_sum.dtype) + 1.0)
-
-    # Representativeness check (CV of bin counts), in the time dtype so the
-    # float64 path reproduces the scalar oracle's decisions bit-for-bit.
-    mean = cv_sum.astype(wdtype) / n_bins
-    var = jnp.maximum(cv_sum_sq.astype(wdtype) / n_bins - mean * mean, 0.0)
-    cv = jnp.where(mean > 0, jnp.sqrt(var) / jnp.maximum(mean, 1e-9), 0.0)
-
-    # Percentile windows off the maintained cumulative counts.
-    tot_f = total.astype(wdtype)
-    head_thr = jnp.maximum(jnp.ceil(tot_f * (cfg.head_percentile / 100.0)),
-                           1.0).astype(jnp.int32)
-    tail_thr = jnp.maximum(jnp.ceil(tot_f * (cfg.tail_percentile / 100.0)),
-                           1.0).astype(jnp.int32)
-    head_bin = find_first_ge(cum, head_thr)
-    tail_bin = find_first_ge(cum, tail_thr) + 1
-
-    new_pre = head_bin.astype(wdtype) * cfg.bin_minutes * (1.0 - cfg.margin)
-    tail = jnp.minimum(tail_bin.astype(wdtype) * cfg.bin_minutes,
-                       cfg.range_minutes) * (1.0 + cfg.margin)
-    new_keep = jnp.maximum(tail - new_pre, 0.0)
-
-    seen = total + oob
-    use_hist = ((seen >= hybrid.min_samples)
-                & (cv >= hybrid.cv_threshold)
-                & (total > 0)
-                & ~(oob.astype(wdtype) > hybrid.oob_fraction_threshold
-                    * jnp.maximum(seen, 1).astype(wdtype)))
-    new_pre = jnp.where(use_hist, new_pre, 0.0)
-    new_keep = jnp.where(use_hist, new_keep,
-                         jnp.asarray(hybrid.standard_keep_alive, wdtype))
-
-    # Decide windows for the next gap (for apps that just saw an event).
-    prewarm = jnp.where(valid, new_pre, prewarm)
-    keep = jnp.where(valid, new_keep, keep)
-    prev_t = jnp.where(valid, t_now, prev_t)
-    return (prev_t, cum, oob, cv_sum, cv_sum_sq, prewarm, keep,
-            cold + is_cold, waste + gap_waste), None
+    """Fused scan step — single-source math, XLA gather strategy (the Pallas
+    twin is ``repro.kernels.histogram.fused_hybrid_step_pallas``)."""
+    return policy_math.fused_hybrid_step_math(
+        t_now, *carry, **_step_params(cfg, hybrid, gather=True)), None
 
 
-def _trailing_waste(last_t, duration, prewarm, keep, waste):
-    tail_gap = jnp.maximum(duration - last_t, 0.0)
-    t_nopre = jnp.minimum(tail_gap, keep)
-    t_pre = jnp.where(tail_gap < prewarm, 0.0,
-                      jnp.minimum(tail_gap, prewarm + keep) - prewarm)
-    return waste + jnp.where(jnp.isfinite(last_t),
-                             jnp.where(prewarm <= 0.0, t_nopre, t_pre), 0.0)
-
-
-@partial(jax.jit, static_argnums=(2, 3, 4, 5))
-def _hybrid_scan(times, duration, cfg: HistogramConfig, hybrid: HybridConfig,
-                 include_trailing: bool, cum_dtype=jnp.int32):
+@partial(jax.jit, static_argnums=(1, 2, 3))
+def _hybrid_scan(times, cfg: HistogramConfig, hybrid: HybridConfig,
+                 cum_dtype=jnp.int32):
     n = times.shape[0]
     tdtype = times.dtype
+    _check_scan_width(times.shape[1])
     init = (
         jnp.full((n,), -jnp.inf, tdtype),
         jnp.zeros((n, cfg.n_bins), cum_dtype),
@@ -303,27 +288,24 @@ def _hybrid_scan(times, duration, cfg: HistogramConfig, hybrid: HybridConfig,
         jnp.zeros((n,), tdtype),                                      # cv_sum
         jnp.zeros((n,), tdtype),                                      # cv_sum_sq
         jnp.zeros((n,), tdtype),                                      # prewarm
-        jnp.full((n,), hybrid.standard_keep_alive, tdtype),           # keep
+        jnp.full((n,), hybrid.standard_keep_alive, tdtype),           # unload_at
         jnp.zeros((n,), jnp.int32),
         jnp.zeros((n,), tdtype),
     )
     carry, _ = jax.lax.scan(partial(_fused_hybrid_step, cfg, hybrid), init,
                             times.T)
-    (last_t, cum, oob, _, _, prewarm, keep, cold, waste) = carry
+    (last_t, cum, oob, _, _, prewarm, unload_at, cold, waste) = carry
     total = cum[:, -1].astype(jnp.int32)
-    if include_trailing:
-        waste = _trailing_waste(last_t, duration, prewarm, keep, waste)
-    oob_heavy = oob.astype(jnp.float32) > (
-        jnp.maximum(total + oob, 1).astype(jnp.float32)
-        * jnp.float32(hybrid.oob_fraction_threshold))
-    return cold, waste, oob_heavy
+    oob_heavy = policy_math.oob_heavy(total, oob,
+                                      hybrid.oob_fraction_threshold)
+    return cold, waste, oob_heavy, last_t, prewarm, unload_at
 
 
-@partial(jax.jit, static_argnums=(2, 3, 4, 5, 6))
-def _hybrid_scan_pallas(times, duration, cfg: HistogramConfig,
-                        hybrid: HybridConfig, include_trailing: bool,
+@partial(jax.jit, static_argnums=(1, 2, 3, 4))
+def _hybrid_scan_pallas(times, cfg: HistogramConfig, hybrid: HybridConfig,
                         interpret: bool = True, tile_apps: int = 512):
-    """Same fused scan, stepping through the Pallas TPU kernel (float32)."""
+    """Same fused scan, stepping through the Pallas TPU kernel (float32;
+    the driver feeds per-chunk *rebased* times — see module docstring)."""
     from ..kernels.histogram import fused_hybrid_step_pallas
 
     # Pad the app dimension to the kernel tile ONCE, outside the scan —
@@ -342,8 +324,8 @@ def _hybrid_scan_pallas(times, duration, cfg: HistogramConfig,
         jnp.zeros((n,), jnp.int32),
         jnp.zeros((n,), jnp.float32),
         jnp.zeros((n,), jnp.float32),
-        jnp.zeros((n,), jnp.float32),
-        jnp.full((n,), jnp.float32(hybrid.standard_keep_alive)),
+        jnp.zeros((n,), jnp.float32),                                 # prewarm
+        jnp.full((n,), jnp.float32(hybrid.standard_keep_alive)),      # unload_at
         jnp.zeros((n,), jnp.int32),
         jnp.zeros((n,), jnp.float32),
     )
@@ -363,14 +345,42 @@ def _hybrid_scan_pallas(times, duration, cfg: HistogramConfig,
 
     carry, _ = jax.lax.scan(step, init, times.T)
     carry = tuple(c[:n_real] for c in carry)
-    (last_t, cum, oob, _, _, prewarm, keep, cold, waste) = carry
+    (last_t, cum, oob, _, _, prewarm, unload_at, cold, waste) = carry
     total = cum[:, -1]
+    oob_heavy = policy_math.oob_heavy(total, oob,
+                                      hybrid.oob_fraction_threshold)
+    return cold, waste, oob_heavy, last_t, prewarm, unload_at
+
+
+def _rebase_chunk(sub: np.ndarray):
+    """Per-chunk time rebasing for the float32 engines.
+
+    Shifts each app's timestamps by its own first event (the chunk's
+    row-wise minimum — times are sorted), in float64 on the host, BEFORE the
+    cast to float32. Policy verdicts depend only on inter-arrival times, so
+    the shift changes nothing semantically while keeping multi-week clocks
+    small enough for float32 to hold the fine IAT structure. Padding (+inf)
+    is unaffected. Returns (rebased float64 array, per-app offsets).
+    """
+    t0 = sub[:, 0].astype(np.float64)
+    return sub.astype(np.float64) - t0[:, None], t0
+
+
+def _absolute_results(waste, last_t, prewarm, unload_at, t0, duration,
+                      include_trailing):
+    """Reconstruct absolute-time results after a (possibly rebased) scan.
+
+    Trailing waste is computed on the host in float64 from the un-rebased
+    last-event clock, so the float32 engines never difference the large
+    absolute timestamps. Returns (waste64, prewarm64, keep64).
+    """
+    pre = np.asarray(prewarm, np.float64)
+    ub = np.asarray(unload_at, np.float64)
+    waste = np.asarray(waste, np.float64)
     if include_trailing:
-        waste = _trailing_waste(last_t, duration, prewarm, keep, waste)
-    oob_heavy = oob.astype(jnp.float32) > (
-        jnp.maximum(total + oob, 1).astype(jnp.float32)
-        * jnp.float32(hybrid.oob_fraction_threshold))
-    return cold, waste, oob_heavy
+        tail_gap = duration - (t0 + np.asarray(last_t, np.float64))
+        waste = waste + policy_math.idle_from_bounds(tail_gap, pre, ub)
+    return waste, pre, ub - pre
 
 
 def simulate_hybrid_batch(trace: Trace, hybrid: HybridConfig,
@@ -383,53 +393,71 @@ def simulate_hybrid_batch(trace: Trace, hybrid: HybridConfig,
     (bounding device state), and streams chunks with the next host→device
     transfer overlapping the current chunk's scan. ``use_pallas`` defaults
     to True on TPU (float32 fused kernel) and False elsewhere (float64 jnp
-    fused step, exact vs the scalar oracle). Caveat: TPUs have no float64,
-    so the Pallas path can flip warm/cold verdicts that land exactly on a
-    keep-alive boundary once trace times outgrow float32 (t ~ 2e4 minutes);
-    pass ``use_pallas=False`` when oracle-exact counts matter more than
-    throughput.
+    fused step, always oracle-exact). The Pallas path rebases each chunk by
+    the per-app first event, which makes it reproduce the scalar oracle's
+    cold counts exactly whenever an app's own activity *span* is
+    representable on its time grid in float32 (see the module docstring) —
+    true for bursty/short-lived apps however deep into a multi-week trace
+    they sit, but an app spanning weeks of sub-minute-grid events still
+    exceeds float32; pass ``use_pallas=False`` when oracle-exact counts
+    matter more than throughput.
     """
     times, counts = trace.to_padded()
     n = trace.n_apps
     cold_parts = np.zeros(n, np.int64)
     waste_parts = np.zeros(n, np.float64)
+    pre_parts = np.zeros(n, np.float64)
+    keep_parts = np.full(n, hybrid.standard_keep_alive, np.float64)
     oob_flags = np.zeros(n, bool)
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
-    chunk = int(app_chunk) if app_chunk else DEFAULT_APP_CHUNK
+    chunk = DEFAULT_APP_CHUNK if app_chunk is None else int(app_chunk)
     cfg = hybrid.histogram
+    duration = float(trace.duration_minutes)
 
-    def run_all(run_dtype, scan_fn):
+    def run_all(run_dtype, scan_fn, rebase: bool):
         # Streaming with a one-chunk lookahead: at most two chunk copies are
         # alive at once (the one scanning and the one whose host->device
         # transfer is enqueued ahead of blocking on the current result).
+        def prep(sel_sub):
+            sel, sub = sel_sub
+            if rebase:
+                sub, t0 = _rebase_chunk(sub)
+            else:
+                t0 = np.zeros(len(sel), np.float64)
+            return sel, jax.device_put(
+                np.ascontiguousarray(sub, run_dtype)), t0
+
         work = _chunked_buckets(times, counts, chunk)
         pending = next(work, None)
         if pending is None:
             return
-        pending = (pending[0],
-                   jax.device_put(np.ascontiguousarray(pending[1], run_dtype)))
+        pending = prep(pending)
         while pending is not None:
-            sel, cur = pending
+            sel, cur, t0 = pending
             nxt = next(work, None)
-            pending = None if nxt is None else (
-                nxt[0], jax.device_put(np.ascontiguousarray(nxt[1], run_dtype)))
-            cold, waste, oobh = scan_fn(cur)
+            pending = None if nxt is None else prep(nxt)
+            cold, waste, oobh, last_t, prewarm, unload_at = scan_fn(cur)
             cold_parts[sel] = np.asarray(cold)
-            waste_parts[sel] = np.asarray(waste)
             oob_flags[sel] = np.asarray(oobh)
+            waste_parts[sel], pre_parts[sel], keep_parts[sel] = \
+                _absolute_results(waste, last_t, prewarm, unload_at, t0,
+                                  duration, include_trailing)
 
     if use_pallas:
         from ..kernels import ops
-        run_all(np.float32, lambda cur: _hybrid_scan_pallas(
-            cur, jnp.float32(trace.duration_minutes), cfg, hybrid,
-            include_trailing, ops.INTERPRET))
+        run_all(np.float32,
+                lambda cur: _hybrid_scan_pallas(cur, cfg, hybrid,
+                                                ops.INTERPRET),
+                rebase=True)
     else:
         with enable_x64():
-            run_all(np.float64, lambda cur: _hybrid_scan(
-                cur, jnp.float64(trace.duration_minutes), cfg, hybrid,
-                include_trailing, _cum_dtype_for(cur.shape[1])))
-    result = SimResult(cold_parts, counts.astype(np.int64), waste_parts)
+            run_all(np.float64,
+                    lambda cur: _hybrid_scan(cur, cfg, hybrid,
+                                             _cum_dtype_for(cur.shape[1])),
+                    rebase=False)
+    result = SimResult(cold_parts, counts.astype(np.int64), waste_parts,
+                       pre_parts, keep_parts)
     if hybrid.use_arima and oob_flags.any():
         # Re-simulate OOB-heavy apps with the full scalar policy (ARIMA path).
         policy = HybridHistogramPolicy(hybrid)
@@ -437,91 +465,71 @@ def simulate_hybrid_batch(trace: Trace, hybrid: HybridConfig,
         scalar = simulate_scalar(trace, policy, include_trailing, arima_idx)
         result.cold[arima_idx] = scalar.cold[arima_idx]
         result.wasted_minutes[arima_idx] = scalar.wasted_minutes[arima_idx]
+        result.final_prewarm[arima_idx] = scalar.final_prewarm[arima_idx]
+        result.final_keep_alive[arima_idx] = scalar.final_keep_alive[arima_idx]
     return result
 
 
 # -- pre-PR batched engine (benchmark/regression baseline) -------------------
 
 
-def _hybrid_windows_reference(counts, total, oob, cv_sum, cv_sum_sq,
-                              cfg: HistogramConfig, hybrid: HybridConfig):
-    """Vectorized decision tree (ARIMA branch resolved to standard keep-alive;
-    ARIMA apps are post-processed by the scalar engine)."""
-    n_bins = cfg.n_bins
-    seen = total + oob
-    mean = cv_sum / n_bins
-    var = jnp.maximum(cv_sum_sq / n_bins - mean * mean, 0.0)
-    cv = jnp.where(mean > 0, jnp.sqrt(var) / jnp.maximum(mean, 1e-9), 0.0)
-
-    cum = jnp.cumsum(counts, axis=-1)
-    tot_f = jnp.maximum(total, 1).astype(jnp.float32)
-    head_thr = jnp.ceil(tot_f * (cfg.head_percentile / 100.0)).astype(jnp.int32)
-    tail_thr = jnp.ceil(tot_f * (cfg.tail_percentile / 100.0)).astype(jnp.int32)
-    head_bin = jnp.argmax(cum >= jnp.maximum(head_thr, 1)[:, None], axis=-1)
-    tail_bin = jnp.argmax(cum >= jnp.maximum(tail_thr, 1)[:, None], axis=-1) + 1
-
-    prewarm = head_bin.astype(jnp.float32) * cfg.bin_minutes * (1.0 - cfg.margin)
-    tail = jnp.minimum(tail_bin.astype(jnp.float32) * cfg.bin_minutes,
-                       cfg.range_minutes) * (1.0 + cfg.margin)
-    keep = jnp.maximum(tail - prewarm, 0.0)
-
-    use_hist = ((seen >= hybrid.min_samples)
-                & (cv >= hybrid.cv_threshold)
-                & (total > 0)
-                & ~(oob.astype(jnp.float32) > hybrid.oob_fraction_threshold
-                    * jnp.maximum(seen, 1).astype(jnp.float32)))
-    std_keep = jnp.float32(hybrid.standard_keep_alive)
-    prewarm = jnp.where(use_hist, prewarm, 0.0)
-    keep = jnp.where(use_hist, keep, std_keep)
-    return prewarm, keep
-
-
 def _hybrid_step_reference(cfg: HistogramConfig, hybrid: HybridConfig, carry,
                            t_now):
-    (prev_t, counts, total, oob, cv_sum, cv_sum_sq, prewarm, keep,
+    """Legacy fused step: raw counts + a full [n_apps, n_bins] cumsum and
+    percentile search per scan step — the step-throughput baseline the
+    incremental cumulative-count engine is benchmarked against. Decision
+    math is the same single-source helpers as every other engine."""
+    (prev_t, counts, total, oob, cv_sum, cv_sum_sq, prewarm, unload_at,
      cold, waste) = carry
-    n_bins = cfg.n_bins
     valid = jnp.isfinite(t_now)
     first = ~jnp.isfinite(prev_t)
     it = t_now - prev_t
 
-    warm = jnp.where(prewarm <= 0.0, it <= keep,
-                     (it >= prewarm) & (it <= prewarm + keep))
+    warm = policy_math.warm_from_bounds(it, prewarm, unload_at)
     is_cold = valid & (first | ~warm)
-
-    gap_w_nopre = jnp.minimum(it, keep)
-    gap_w_pre = jnp.where(it < prewarm, 0.0,
-                          jnp.minimum(it, prewarm + keep) - prewarm)
     gap_waste = jnp.where(valid & ~first,
-                          jnp.where(prewarm <= 0.0, gap_w_nopre, gap_w_pre), 0.0)
+                          policy_math.idle_from_bounds(it, prewarm, unload_at),
+                          0.0)
 
     rec = valid & ~first
-    bin_idx = jnp.floor(it / cfg.bin_minutes).astype(jnp.int32)
-    in_b = rec & (bin_idx >= 0) & (bin_idx < n_bins)
-    oob_hit = rec & (bin_idx >= n_bins)
-    safe = jnp.clip(bin_idx, 0, n_bins - 1)
-    napps = counts.shape[0]
-    rows = jnp.arange(napps)
+    safe, in_b, oob_hit = policy_math.classify_idle_time(
+        it, rec, cfg.bin_minutes, cfg.n_bins)
+    rows = jnp.arange(counts.shape[0])
     old = counts[rows, safe]
     counts = counts.at[rows, safe].add(in_b.astype(jnp.int32))
     total = total + in_b.astype(jnp.int32)
     oob = oob + oob_hit.astype(jnp.int32)
-    inb = in_b.astype(jnp.float32)
-    cv_sum = cv_sum + inb
-    cv_sum_sq = cv_sum_sq + inb * (2.0 * old.astype(jnp.float32) + 1.0)
+    cv_sum, cv_sum_sq = policy_math.welford_update(cv_sum, cv_sum_sq, in_b,
+                                                   old)
 
-    new_pre, new_keep = _hybrid_windows_reference(counts, total, oob, cv_sum,
-                                                  cv_sum_sq, cfg, hybrid)
-    prewarm = jnp.where(valid, new_pre, prewarm)
-    keep = jnp.where(valid, new_keep, keep)
+    cum = jnp.cumsum(counts, axis=-1)   # the per-step recompute (baseline)
+    # masked-reduction search: the same one-sweep structure as the legacy
+    # argmax (the binary-search form would distort the baseline's cost)
+    head_bin = policy_math.first_bin_ge_scaled(
+        cum, policy_math.percentile_threshold_scaled(
+            total, cfg.head_percentile), gather=False)
+    tail_bin = policy_math.first_bin_ge_scaled(
+        cum, policy_math.percentile_threshold_scaled(
+            total, cfg.tail_percentile), gather=False) + 1
+    new_load, new_unload = policy_math.window_values(
+        head_bin, tail_bin, cfg.bin_minutes, cfg.range_minutes, cfg.margin)
+    use_hist = policy_math.use_histogram_gate(
+        total, oob, cv_sum, cv_sum_sq, cfg.n_bins, hybrid.min_samples,
+        hybrid.cv_threshold, hybrid.oob_fraction_threshold)
+    std_load, std_unload = policy_math.standard_window_bounds(
+        hybrid.standard_keep_alive)
+    new_load = jnp.where(use_hist, new_load, std_load)
+    new_unload = jnp.where(use_hist, new_unload, std_unload)
+
+    prewarm = jnp.where(valid, new_load, prewarm)
+    unload_at = jnp.where(valid, new_unload, unload_at)
     prev_t = jnp.where(valid, t_now, prev_t)
-    return (prev_t, counts, total, oob, cv_sum, cv_sum_sq, prewarm, keep,
+    return (prev_t, counts, total, oob, cv_sum, cv_sum_sq, prewarm, unload_at,
             cold + is_cold, waste + gap_waste), None
 
 
-@partial(jax.jit, static_argnums=(2, 3, 4))
-def _hybrid_scan_reference(times, duration, cfg: HistogramConfig,
-                           hybrid: HybridConfig, include_trailing: bool):
+@partial(jax.jit, static_argnums=(1, 2))
+def _hybrid_scan_reference(times, cfg: HistogramConfig, hybrid: HybridConfig):
     n = times.shape[0]
     n_bins = cfg.n_bins
     init = (
@@ -532,44 +540,51 @@ def _hybrid_scan_reference(times, duration, cfg: HistogramConfig,
         jnp.zeros((n,), jnp.float32),
         jnp.zeros((n,), jnp.float32),
         jnp.zeros((n,), jnp.float32),                                 # prewarm
-        jnp.full((n,), jnp.float32(hybrid.standard_keep_alive)),      # keep
+        jnp.full((n,), jnp.float32(hybrid.standard_keep_alive)),      # unload_at
         jnp.zeros((n,), jnp.int32),
         jnp.zeros((n,), jnp.float32),
     )
     carry, _ = jax.lax.scan(partial(_hybrid_step_reference, cfg, hybrid),
                             init, times.T)
-    (last_t, counts, total, oob, _, _, prewarm, keep, cold, waste) = carry
-    if include_trailing:
-        waste = _trailing_waste(last_t, duration, prewarm, keep, waste)
-    oob_heavy = oob.astype(jnp.float32) > (
-        jnp.maximum(total + oob, 1).astype(jnp.float32)
-        * jnp.float32(hybrid.oob_fraction_threshold))
-    return cold, waste, oob_heavy
+    (last_t, counts, total, oob, _, _, prewarm, unload_at, cold, waste) = carry
+    oob_heavy = policy_math.oob_heavy(total, oob,
+                                      hybrid.oob_fraction_threshold)
+    return cold, waste, oob_heavy, last_t, prewarm, unload_at
 
 
 def simulate_hybrid_batch_reference(trace: Trace, hybrid: HybridConfig,
                                     include_trailing: bool = True) -> SimResult:
-    """Pre-PR batched hybrid engine (float32, per-step cumsum recompute)."""
+    """Pre-fused batched hybrid engine (float32, per-step cumsum recompute,
+    per-chunk time rebasing like the Pallas path)."""
     times, counts = trace.to_padded()
     n = trace.n_apps
     cold_parts = np.zeros(n, np.int64)
     waste_parts = np.zeros(n, np.float64)
+    pre_parts = np.zeros(n, np.float64)
+    keep_parts = np.full(n, hybrid.standard_keep_alive, np.float64)
     oob_flags = np.zeros(n, bool)
+    duration = float(trace.duration_minutes)
     for sel, sub in _buckets(times, counts):
-        cold, waste, oobh = _hybrid_scan_reference(
-            jnp.asarray(sub, jnp.float32),
-            jnp.float32(trace.duration_minutes),
-            hybrid.histogram, hybrid, include_trailing)
+        _check_scan_width(sub.shape[1])
+        sub, t0 = _rebase_chunk(sub)
+        cold, waste, oobh, last_t, prewarm, unload_at = \
+            _hybrid_scan_reference(jnp.asarray(sub, jnp.float32),
+                                   hybrid.histogram, hybrid)
         cold_parts[sel] = np.asarray(cold)
-        waste_parts[sel] = np.asarray(waste)
         oob_flags[sel] = np.asarray(oobh)
-    result = SimResult(cold_parts, counts.astype(np.int64), waste_parts)
+        waste_parts[sel], pre_parts[sel], keep_parts[sel] = \
+            _absolute_results(waste, last_t, prewarm, unload_at, t0,
+                              duration, include_trailing)
+    result = SimResult(cold_parts, counts.astype(np.int64), waste_parts,
+                       pre_parts, keep_parts)
     if hybrid.use_arima and oob_flags.any():
         policy = HybridHistogramPolicy(hybrid)
         arima_idx = np.where(oob_flags)[0]
         scalar = simulate_scalar(trace, policy, include_trailing, arima_idx)
         result.cold[arima_idx] = scalar.cold[arima_idx]
         result.wasted_minutes[arima_idx] = scalar.wasted_minutes[arima_idx]
+        result.final_prewarm[arima_idx] = scalar.final_prewarm[arima_idx]
+        result.final_keep_alive[arima_idx] = scalar.final_keep_alive[arima_idx]
     return result
 
 

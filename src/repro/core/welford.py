@@ -16,8 +16,10 @@ counts by 1 and the sum of squared counts by ``2c+1``, so we track
     cv   = sqrt(var) / mean                   (0 when mean == 0)
 
 This module provides both a scalar (host/control-plane) implementation and a
-batched JAX implementation operating on ``[n_apps]`` state vectors, which is
-what the vectorized simulator and the Pallas policy kernel use.
+batched JAX implementation operating on ``[n_apps]`` state vectors. The
+update/derivation formulas are the single-source helpers in
+:mod:`repro.core.policy_math` (``welford_update`` / ``bin_count_cv``); only
+the ``cv_from_counts`` test oracle recomputes from scratch.
 """
 from __future__ import annotations
 
@@ -25,6 +27,8 @@ import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
+
+from . import policy_math
 
 __all__ = ["CVState", "cv_init", "cv_update", "cv_value", "cv_from_counts"]
 
@@ -39,8 +43,9 @@ class CVState:
 
     def update(self, old_count: float) -> None:
         """Record that one bin went from ``old_count`` to ``old_count + 1``."""
-        self.sum_counts += 1.0
-        self.sum_sq_counts += 2.0 * old_count + 1.0
+        s, ss = policy_math.welford_update(self.sum_counts, self.sum_sq_counts,
+                                           True, old_count)
+        self.sum_counts, self.sum_sq_counts = float(s), float(ss)
 
     def remove(self, old_count: float) -> None:
         """Record that one bin went from ``old_count`` to ``old_count - 1``."""
@@ -49,11 +54,9 @@ class CVState:
 
     @property
     def cv(self) -> float:
-        mean = self.sum_counts / self.n_bins
-        if mean <= 0.0:
-            return 0.0
-        var = max(self.sum_sq_counts / self.n_bins - mean * mean, 0.0)
-        return float(np.sqrt(var) / mean)
+        return float(policy_math.bin_count_cv(self.sum_counts,
+                                              self.sum_sq_counts,
+                                              self.n_bins, np.float64))
 
 
 # --- Batched JAX path (state = dict of [n_apps] vectors) -------------------
@@ -71,17 +74,14 @@ def cv_update(state: dict, old_count: jnp.ndarray, active: jnp.ndarray) -> dict:
 
     ``active`` masks apps that actually recorded an in-bounds IT this step.
     """
-    act = active.astype(state["sum"].dtype)
-    return {
-        "sum": state["sum"] + act,
-        "sum_sq": state["sum_sq"] + act * (2.0 * old_count.astype(state["sum"].dtype) + 1.0),
-    }
+    s, ss = policy_math.welford_update(state["sum"], state["sum_sq"],
+                                       active != 0, old_count)
+    return {"sum": s, "sum_sq": ss}
 
 
 def cv_value(state: dict, n_bins: int) -> jnp.ndarray:
-    mean = state["sum"] / n_bins
-    var = jnp.maximum(state["sum_sq"] / n_bins - mean * mean, 0.0)
-    return jnp.where(mean > 0.0, jnp.sqrt(var) / jnp.maximum(mean, 1e-9), 0.0)
+    return policy_math.bin_count_cv(state["sum"], state["sum_sq"], n_bins,
+                                    state["sum"].dtype)
 
 
 def cv_from_counts(counts: jnp.ndarray) -> jnp.ndarray:

@@ -171,6 +171,15 @@ class Trace:
         figures — require :func:`generate_trace` traces; the simulators go
         through ``to_padded``/``events``/``app_id`` and handle both forms.
         """
+        if n_apps < 0:
+            raise ValueError(f"n_apps must be >= 0, got {n_apps}")
+        if app_chunk < 1:
+            raise ValueError(
+                "app_chunk must be a positive app count (it is a generation "
+                f"batch size; n_apps need not be a multiple of it), got "
+                f"{app_chunk}")
+        if max_events < 1:
+            raise ValueError(f"max_events must be >= 1, got {max_events}")
         duration = days * MINUTES_PER_DAY
         rng = np.random.default_rng(seed)
         max_ev = int(max_events)

@@ -9,12 +9,14 @@ histograms plus their policy windows in a single vectorized pass:
   for each app a in tile:                      (one VMEM tile = TA apps)
     counts[a, bin(it_a)] += 1                  (or OOB counter)
     cv[a]     <- Welford O(1) update
-    head/tail <- weighted 5th/99th percentile over bins (one cumsum sweep)
+    head/tail <- weighted 5th/99th percentile over bins
     prewarm/keepalive <- margins + representativeness fallback
 
-Everything is rank-2 [TA, n_bins] arithmetic — ideal VPU work; the bin
-update is a one-hot add (compare-against-iota), the percentile extraction a
-cumsum + masked min over the bin iota.
+Everything is rank-2 [TA, n_bins] arithmetic — ideal VPU work. The decision
+formulas are NOT written here: kernel bodies call the single-source helpers
+in :mod:`repro.core.policy_math` with ``gather=False`` (masked-reduction
+forms — compare-against-iota instead of row gathers), which trace inside
+Pallas identically to the ``lax.scan`` engines.
 
 Grid: (n_apps / TA,) — fully parallel over app tiles.
 """
@@ -25,11 +27,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
+from ..core import policy_math
 from . import compat
-
-BIG = 10 ** 9
 
 
 def _policy_kernel(counts_ref, oob_ref, total_ref, cvs_ref, cvss_ref,
@@ -55,37 +55,24 @@ def _policy_kernel(counts_ref, oob_ref, total_ref, cvs_ref, cvss_ref,
 
     total = total_ref[...] + in_b.astype(jnp.int32)
     oob = oob_ref[...] + oob_hit.astype(jnp.int32)
-    inb_f = in_b.astype(jnp.float32)
-    cvs = cvs_ref[...] + inb_f                                    # Welford sums
-    cvss = cvss_ref[...] + inb_f * (2.0 * old.astype(jnp.float32) + 1.0)
+    cvs, cvss = policy_math.welford_update(cvs_ref[...], cvss_ref[...],
+                                           in_b, old)
 
-    # CV of bin counts (representativeness check)
-    mean = cvs / n_bins
-    var = jnp.maximum(cvss / n_bins - mean * mean, 0.0)
-    cv = jnp.where(mean > 0, jnp.sqrt(var) / jnp.maximum(mean, 1e-9), 0.0)
-
-    # weighted percentiles: one cumsum over bins, masked min over iota
     cum = jnp.cumsum(new_counts, axis=1)                          # [TA, n_bins]
-    tot_f = jnp.maximum(total, 1).astype(jnp.float32)
-    head_thr = jnp.maximum(jnp.ceil(tot_f * (head_pct / 100.0)), 1.0)
-    tail_thr = jnp.maximum(jnp.ceil(tot_f * (tail_pct / 100.0)), 1.0)
-    cum_f = cum.astype(jnp.float32)
-    head_bin = jnp.min(jnp.where(cum_f >= head_thr[:, None], iota, BIG), axis=1)
-    tail_bin = jnp.min(jnp.where(cum_f >= tail_thr[:, None], iota, BIG), axis=1) + 1
-    head_bin = jnp.where(head_bin == BIG, 0, head_bin)
-    tail_bin = jnp.where(tail_bin == BIG + 1, n_bins, tail_bin)
-
-    prewarm = head_bin.astype(jnp.float32) * bin_minutes * (1.0 - margin)
-    tail = jnp.minimum(tail_bin.astype(jnp.float32) * bin_minutes,
-                       range_minutes) * (1.0 + margin)
-    keep = jnp.maximum(tail - prewarm, 0.0)
-
-    seen = total + oob
-    use_hist = ((seen >= min_samples) & (cv >= cv_threshold) & (total > 0)
-                & ~(oob.astype(jnp.float32) > oob_threshold
-                    * jnp.maximum(seen, 1).astype(jnp.float32)))
-    prewarm = jnp.where(use_hist, prewarm, 0.0)
-    keep = jnp.where(use_hist, keep, range_minutes)
+    head_bin = policy_math.first_bin_ge_scaled(
+        cum, policy_math.percentile_threshold_scaled(total, head_pct),
+        gather=False)
+    tail_bin = policy_math.first_bin_ge_scaled(
+        cum, policy_math.percentile_threshold_scaled(total, tail_pct),
+        gather=False) + 1
+    load_at, unload_at = policy_math.window_values(
+        head_bin, tail_bin, bin_minutes, range_minutes, margin)
+    use_hist = policy_math.use_histogram_gate(
+        total, oob, cvs, cvss, n_bins, min_samples, cv_threshold,
+        oob_threshold)
+    std_load, std_unload = policy_math.standard_window_bounds(range_minutes)
+    prewarm = jnp.where(use_hist, load_at, std_load)
+    keep = jnp.where(use_hist, unload_at, std_unload) - prewarm
 
     ncounts_ref[...] = new_counts
     noob_ref[...] = oob
@@ -163,103 +150,27 @@ def policy_update_pallas(counts, oob, total, cv_sum, cv_sum_sq, bins, active,
 
 
 def _fused_step_kernel(t_ref, prev_ref, cum_ref, oob_ref, cvs_ref, cvss_ref,
-                       pre_ref, keep_ref, cold_ref, waste_ref,
+                       pre_ref, unload_ref, cold_ref, waste_ref,
                        nprev_ref, ncum_ref, noob_ref, ncvs_ref, ncvss_ref,
-                       npre_ref, nkeep_ref, ncold_ref, nwaste_ref, *,
-                       n_bins: int, head_pct: float, tail_pct: float,
-                       margin: float, bin_minutes: float, range_minutes: float,
-                       cv_threshold: float, min_samples: int,
-                       oob_threshold: float, standard_keep: float):
+                       npre_ref, nunload_ref, ncold_ref, nwaste_ref, **params):
     """One hybrid-policy scan step for a tile of TA apps.
 
-    Carries *cumulative* bin counts (``cum``) instead of raw counts: the
-    per-event update is a suffix add, so no per-step cumsum recompute is
-    needed for the percentile windows — the event-dependent work replaces
-    the fleet-wide O(n_bins) prefix scan of the legacy engine.
+    Carries *cumulative* bin counts (``cum``) and the residency bounds
+    (prewarm, unload_at). The body is exactly the single-source step in
+    ``policy_math.fused_hybrid_step_math`` with the Pallas-lowerable
+    ``gather=False`` lookup strategy.
     """
-    t_now = t_ref[...]
-    prev_t = prev_ref[...]
-    cum = cum_ref[...]                              # [TA, n_bins] i32
-    prewarm = pre_ref[...]
-    keep = keep_ref[...]
-    TA = cum.shape[0]
-
-    valid = jnp.isfinite(t_now)
-    first = ~jnp.isfinite(prev_t)
-    it = t_now - prev_t
-
-    # Warm/cold + waste under the windows decided after the previous event.
-    warm = jnp.where(prewarm <= 0.0, it <= keep,
-                     (it >= prewarm) & (it <= prewarm + keep))
-    is_cold = valid & (first | ~warm)
-    gap_w_nopre = jnp.minimum(it, keep)
-    gap_w_pre = jnp.where(it < prewarm, 0.0,
-                          jnp.minimum(it, prewarm + keep) - prewarm)
-    gap_waste = jnp.where(valid & ~first,
-                          jnp.where(prewarm <= 0.0, gap_w_nopre, gap_w_pre),
-                          0.0)
-
-    # Histogram bin update on the cumulative representation.
-    rec = valid & ~first
-    bin_idx = jnp.floor(it / bin_minutes).astype(jnp.int32)
-    in_b = rec & (bin_idx >= 0) & (bin_idx < n_bins)
-    oob_hit = rec & (bin_idx >= n_bins)
-    safe = jnp.clip(bin_idx, 0, n_bins - 1)
-
-    iota = jax.lax.broadcasted_iota(jnp.int32, (TA, n_bins), 1)
-    at_mask = iota == safe[:, None]
-    cum_at = jnp.sum(jnp.where(at_mask, cum, 0), axis=1)
-    cum_below = jnp.sum(jnp.where(iota == (safe - 1)[:, None], cum, 0), axis=1)
-    old = cum_at - cum_below                        # pre-update count at bin
-    new_cum = cum + ((iota >= safe[:, None]) & in_b[:, None]).astype(jnp.int32)
-
-    total = jnp.max(new_cum, axis=1)                # == new_cum[:, -1]
-    oob = oob_ref[...] + oob_hit.astype(jnp.int32)
-    inb_f = in_b.astype(jnp.float32)
-    cvs = cvs_ref[...] + inb_f
-    cvss = cvss_ref[...] + inb_f * (2.0 * old.astype(jnp.float32) + 1.0)
-
-    # Representativeness (CV of bin counts).
-    mean = cvs / n_bins
-    var = jnp.maximum(cvss / n_bins - mean * mean, 0.0)
-    cv = jnp.where(mean > 0, jnp.sqrt(var) / jnp.maximum(mean, 1e-9), 0.0)
-
-    # Head/tail percentile windows straight off the maintained cumulative
-    # counts: masked min over the bin iota, no cumsum.
-    tot_f = total.astype(jnp.float32)
-    head_thr = jnp.maximum(jnp.ceil(tot_f * (head_pct / 100.0)), 1.0)
-    tail_thr = jnp.maximum(jnp.ceil(tot_f * (tail_pct / 100.0)), 1.0)
-    cum_f = new_cum.astype(jnp.float32)
-    head_bin = jnp.min(jnp.where(cum_f >= head_thr[:, None], iota, BIG), axis=1)
-    tail_bin = jnp.min(jnp.where(cum_f >= tail_thr[:, None], iota, BIG), axis=1) + 1
-    head_bin = jnp.where(head_bin == BIG, 0, head_bin)
-    tail_bin = jnp.where(tail_bin == BIG + 1, n_bins, tail_bin)
-
-    new_pre = head_bin.astype(jnp.float32) * bin_minutes * (1.0 - margin)
-    tail = jnp.minimum(tail_bin.astype(jnp.float32) * bin_minutes,
-                       range_minutes) * (1.0 + margin)
-    new_keep = jnp.maximum(tail - new_pre, 0.0)
-
-    seen = total + oob
-    use_hist = ((seen >= min_samples) & (cv >= cv_threshold) & (total > 0)
-                & ~(oob.astype(jnp.float32) > oob_threshold
-                    * jnp.maximum(seen, 1).astype(jnp.float32)))
-    new_pre = jnp.where(use_hist, new_pre, 0.0)
-    new_keep = jnp.where(use_hist, new_keep, standard_keep)
-
-    nprev_ref[...] = jnp.where(valid, t_now, prev_t)
-    ncum_ref[...] = new_cum
-    noob_ref[...] = oob
-    ncvs_ref[...] = cvs
-    ncvss_ref[...] = cvss
-    npre_ref[...] = jnp.where(valid, new_pre, prewarm)
-    nkeep_ref[...] = jnp.where(valid, new_keep, keep)
-    ncold_ref[...] = cold_ref[...] + is_cold.astype(jnp.int32)
-    nwaste_ref[...] = waste_ref[...] + gap_waste
+    out = policy_math.fused_hybrid_step_math(
+        t_ref[...], prev_ref[...], cum_ref[...], oob_ref[...], cvs_ref[...],
+        cvss_ref[...], pre_ref[...], unload_ref[...], cold_ref[...],
+        waste_ref[...], gather=False, **params)
+    (nprev_ref[...], ncum_ref[...], noob_ref[...], ncvs_ref[...],
+     ncvss_ref[...], npre_ref[...], nunload_ref[...], ncold_ref[...],
+     nwaste_ref[...]) = out
 
 
 def fused_hybrid_step_pallas(t_now, prev_t, cum, oob, cv_sum, cv_sum_sq,
-                             prewarm, keep, cold, waste, *,
+                             prewarm, unload_at, cold, waste, *,
                              head_pct=5.0, tail_pct=99.0, margin=0.10,
                              bin_minutes=1.0, range_minutes=240.0,
                              cv_threshold=2.0, min_samples=5,
@@ -268,14 +179,15 @@ def fused_hybrid_step_pallas(t_now, prev_t, cum, oob, cv_sum, cv_sum_sq,
     """One fused hybrid-simulator scan step for the whole fleet.
 
     All vectors are [n_apps]; ``cum`` is [n_apps, n_bins] i32 *cumulative*
-    in-bounds counts. Returns the updated
-    (prev_t, cum, oob, cv_sum, cv_sum_sq, prewarm, keep, cold, waste).
+    in-bounds counts; (``prewarm``, ``unload_at``) are the residency bounds
+    decided after each app's previous event. Returns the updated
+    (prev_t, cum, oob, cv_sum, cv_sum_sq, prewarm, unload_at, cold, waste).
     Designed to sit inside ``jax.lax.scan`` over padded event columns.
     """
     n_apps, n_bins = cum.shape
     if n_apps == 0:
-        return (prev_t, cum, oob, cv_sum, cv_sum_sq, prewarm, keep, cold,
-                waste)
+        return (prev_t, cum, oob, cv_sum, cv_sum_sq, prewarm, unload_at,
+                cold, waste)
     TA = min(tile_apps, n_apps)
     pad = (-n_apps) % TA
     if pad:
@@ -284,7 +196,7 @@ def fused_hybrid_step_pallas(t_now, prev_t, cum, oob, cv_sum, cv_sum_sq,
         t_now = pv(t_now, jnp.inf)        # padded rows are never active
         prev_t, cum, oob = pv(prev_t), pv(cum), pv(oob)
         cv_sum, cv_sum_sq = pv(cv_sum), pv(cv_sum_sq)
-        prewarm, keep = pv(prewarm), pv(keep)
+        prewarm, unload_at = pv(prewarm), pv(unload_at)
         cold, waste = pv(cold), pv(waste)
         n_apps += pad
     grid = (n_apps // TA,)
@@ -312,7 +224,8 @@ def fused_hybrid_step_pallas(t_now, prev_t, cum, oob, cv_sum, cv_sum_sq,
         compiler_params=compat.compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
-    )(t_now, prev_t, cum, oob, cv_sum, cv_sum_sq, prewarm, keep, cold, waste)
+    )(t_now, prev_t, cum, oob, cv_sum, cv_sum_sq, prewarm, unload_at, cold,
+      waste)
     if pad:
         outs = tuple(o[:-pad] for o in outs)
     return outs

@@ -74,8 +74,8 @@ def policy_update(counts, oob, total, cv_sum, cv_sum_sq, bins, active, **kw):
                                    "oob_threshold", "standard_keep",
                                    "tile_apps"))
 def fused_hybrid_step(t_now, prev_t, cum, oob, cv_sum, cv_sum_sq, prewarm,
-                      keep, cold, waste, **kw):
+                      unload_at, cold, waste, **kw):
     """Fused simulator step (see kernels.histogram.fused_hybrid_step_pallas)."""
     return fused_hybrid_step_pallas(t_now, prev_t, cum, oob, cv_sum,
-                                    cv_sum_sq, prewarm, keep, cold, waste,
-                                    interpret=INTERPRET, **kw)
+                                    cv_sum_sq, prewarm, unload_at, cold,
+                                    waste, interpret=INTERPRET, **kw)

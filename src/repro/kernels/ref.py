@@ -6,7 +6,6 @@ import math
 import jax
 import jax.numpy as jnp
 
-from ..core.histogram import HistogramConfig
 from ..models.layers import _sdpa
 from ..models.mamba2 import ssd_reference
 from ..models.rglru import rglru_scan_ref
@@ -46,7 +45,10 @@ def policy_update_ref(counts, oob, total, cv_sum, cv_sum_sq, bins, active,
                       *, head_pct=5.0, tail_pct=99.0, margin=0.10,
                       bin_minutes=1.0, range_minutes=240.0, cv_threshold=2.0,
                       min_samples=5, oob_threshold=0.5):
-    """Vectorized jnp oracle mirroring repro.core semantics exactly."""
+    """Vectorized jnp oracle: same single-source policy math as the kernel,
+    but through the XLA-friendly gather forms."""
+    from ..core import policy_math
+
     n_apps, n_bins = counts.shape
     active = active != 0
     in_b = active & (bins >= 0) & (bins < n_bins)
@@ -57,30 +59,23 @@ def policy_update_ref(counts, oob, total, cv_sum, cv_sum_sq, bins, active,
     new_counts = counts + onehot
     total = total + in_b.astype(jnp.int32)
     oob = oob + oob_hit.astype(jnp.int32)
-    inb_f = in_b.astype(jnp.float32)
-    cv_sum = cv_sum + inb_f
-    cv_sum_sq = cv_sum_sq + inb_f * (2.0 * old.astype(jnp.float32) + 1.0)
-
-    mean = cv_sum / n_bins
-    var = jnp.maximum(cv_sum_sq / n_bins - mean * mean, 0.0)
-    cv = jnp.where(mean > 0, jnp.sqrt(var) / jnp.maximum(mean, 1e-9), 0.0)
+    cv_sum, cv_sum_sq = policy_math.welford_update(cv_sum, cv_sum_sq, in_b,
+                                                   old)
 
     cum = jnp.cumsum(new_counts, axis=1)
-    tot_f = jnp.maximum(total, 1).astype(jnp.float32)
-    head_thr = jnp.maximum(jnp.ceil(tot_f * head_pct / 100.0), 1.0)
-    tail_thr = jnp.maximum(jnp.ceil(tot_f * tail_pct / 100.0), 1.0)
-    head_bin = jnp.argmax(cum.astype(jnp.float32) >= head_thr[:, None], axis=1)
-    tail_bin = jnp.argmax(cum.astype(jnp.float32) >= tail_thr[:, None], axis=1) + 1
-
-    prewarm = head_bin.astype(jnp.float32) * bin_minutes * (1.0 - margin)
-    tail = jnp.minimum(tail_bin.astype(jnp.float32) * bin_minutes,
-                       range_minutes) * (1.0 + margin)
-    keep = jnp.maximum(tail - prewarm, 0.0)
-    seen = total + oob
-    use_hist = ((seen >= min_samples) & (cv >= cv_threshold) & (total > 0)
-                & ~(oob.astype(jnp.float32) > oob_threshold
-                    * jnp.maximum(seen, 1).astype(jnp.float32)))
-    prewarm = jnp.where(use_hist, prewarm, 0.0)
-    keep = jnp.where(use_hist, keep, range_minutes)
+    head_bin = policy_math.first_bin_ge_scaled(
+        cum, policy_math.percentile_threshold_scaled(total, head_pct),
+        gather=True)
+    tail_bin = policy_math.first_bin_ge_scaled(
+        cum, policy_math.percentile_threshold_scaled(total, tail_pct),
+        gather=True) + 1
+    load_at, unload_at = policy_math.window_values(
+        head_bin, tail_bin, bin_minutes, range_minutes, margin)
+    use_hist = policy_math.use_histogram_gate(
+        total, oob, cv_sum, cv_sum_sq, n_bins, min_samples, cv_threshold,
+        oob_threshold)
+    std_load, std_unload = policy_math.standard_window_bounds(range_minutes)
+    prewarm = jnp.where(use_hist, load_at, std_load)
+    keep = jnp.where(use_hist, unload_at, std_unload) - prewarm
     return (new_counts, oob, total, cv_sum, cv_sum_sq, prewarm, keep,
             use_hist.astype(jnp.int32))

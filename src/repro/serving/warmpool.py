@@ -20,6 +20,7 @@ import dataclasses
 import heapq
 from typing import Dict, List, Optional, Tuple
 
+from ..core import policy_math
 from ..core.policy import Policy, PolicyWindows
 from .registry import ModelEndpoint, Registry
 
@@ -157,13 +158,16 @@ class WarmPool:
         st.last_end = now
         w = self.policy.on_invocation(app_id, idle_min)
         st.windows = w
-        if w.prewarm <= 0.0:
-            st.unload_at = now + w.keep_alive * MINUTE
+        # The residency schedule comes from the same single-source bounds the
+        # simulators use: resident on [load_at, unload_at] from the gap start.
+        load_at, unload_at = policy_math.window_bounds(w.prewarm, w.keep_alive)
+        if load_at <= 0.0:
+            st.unload_at = now + float(unload_at) * MINUTE
             st.prewarm_at = float("inf")
         else:
             # unload immediately; reload right before the predicted arrival
             self._unload(app_id, now)
-            st.prewarm_at = now + w.prewarm * MINUTE
+            st.prewarm_at = now + float(load_at) * MINUTE
             st.unload_at = float("inf")
 
     # -- reporting ------------------------------------------------------------

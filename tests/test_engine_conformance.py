@@ -1,0 +1,147 @@
+"""Differential conformance harness across the four hybrid-policy engines.
+
+Engines under test (all routed through ``repro.core.policy_math``):
+
+  * ``simulate_scalar``                     — float64 event-driven oracle
+  * ``simulate_hybrid_batch`` (jnp)         — float64 fused lax.scan engine
+  * ``simulate_hybrid_batch`` (Pallas)      — float32 fused TPU kernel
+                                              (interpret mode on CPU)
+  * ``simulate_hybrid_batch_reference``     — float32 legacy per-step-cumsum
+                                              engine
+
+Assertions: exact cold-count, invocation, and final-window parity for every
+engine; waste is bit-exact for the float64 engine (same accumulation order
+as the oracle) and machine-precision-close for the float32 engines (their
+per-gap terms accumulate in float32).
+
+The traces (see ``golden_traces``) include a two-week trace with
+sub-millisecond inter-arrivals — absolute timestamps beyond float32 — which
+the float32 engines only survive because of per-chunk time rebasing, plus
+OOB-heavy and sub-``min_samples`` apps that exercise every decision-gate
+branch. This suite is also run by CI under ``JAX_ENABLE_X64=0`` to emulate
+TPU's float64-free numerics.
+"""
+import numpy as np
+import pytest
+
+from repro.core.policy import HybridConfig, HybridHistogramPolicy
+from repro.core.simulator import (simulate_hybrid_batch,
+                                  simulate_hybrid_batch_reference,
+                                  simulate_scalar)
+
+from golden_traces import (CFG48, bursty_subms_multiweek, coarse_twoweek,
+                           synthesized_small, GOLDEN_TRACES)
+
+# name -> (runner, waste is bit-exact vs the float64 oracle)
+ENGINES = {
+    "jnp_f64": (lambda t, cfg: simulate_hybrid_batch(t, cfg,
+                                                     use_pallas=False), True),
+    "jnp_f64_chunked": (lambda t, cfg: simulate_hybrid_batch(
+        t, cfg, use_pallas=False, app_chunk=7), True),
+    "pallas_f32": (lambda t, cfg: simulate_hybrid_batch(
+        t, cfg, use_pallas=True, app_chunk=16), False),
+    "reference_f32": (lambda t, cfg: simulate_hybrid_batch_reference(t, cfg),
+                      False),
+}
+
+TRACES = {
+    "bursty_subms_multiweek": bursty_subms_multiweek,
+    "coarse_twoweek": coarse_twoweek,
+    "synthesized_small": synthesized_small,
+}
+
+
+@pytest.fixture(scope="module", params=sorted(TRACES))
+def case(request):
+    name = request.param
+    trace = TRACES[name]()
+    cfg = GOLDEN_TRACES[name][1]
+    oracle = simulate_scalar(trace, HybridHistogramPolicy(cfg))
+    return name, trace, cfg, oracle
+
+
+@pytest.mark.parametrize("engine", sorted(ENGINES))
+def test_engine_conformance(case, engine):
+    name, trace, cfg, oracle = case
+    runner, waste_exact = ENGINES[engine]
+    got = runner(trace, cfg)
+    err = f"{engine} vs scalar oracle on {name}"
+    np.testing.assert_array_equal(got.invocations, oracle.invocations,
+                                  err_msg=err)
+    np.testing.assert_array_equal(got.cold, oracle.cold, err_msg=err)
+    # the float32 decision layer is dtype-invariant: windows match exactly
+    np.testing.assert_array_equal(got.final_prewarm, oracle.final_prewarm,
+                                  err_msg=err)
+    np.testing.assert_array_equal(got.final_keep_alive,
+                                  oracle.final_keep_alive, err_msg=err)
+    if waste_exact:
+        np.testing.assert_array_equal(got.wasted_minutes,
+                                      oracle.wasted_minutes, err_msg=err)
+    else:
+        np.testing.assert_allclose(got.wasted_minutes, oracle.wasted_minutes,
+                                   rtol=1e-5, atol=1e-3, err_msg=err)
+
+
+def test_float32_engines_agree_exactly():
+    """The two float32 engines share the math AND the dtype: identical
+    results bit-for-bit, waste included."""
+    trace = coarse_twoweek()
+    a = simulate_hybrid_batch(trace, CFG48, use_pallas=True, app_chunk=16)
+    b = simulate_hybrid_batch_reference(trace, CFG48)
+    np.testing.assert_array_equal(a.cold, b.cold)
+    np.testing.assert_array_equal(a.final_prewarm, b.final_prewarm)
+    np.testing.assert_array_equal(a.final_keep_alive, b.final_keep_alive)
+    np.testing.assert_allclose(a.wasted_minutes, b.wasted_minutes, rtol=1e-6)
+
+
+def test_time_translation_invariance_batched():
+    """The property per-chunk rebasing relies on: shifting every timestamp
+    by a constant changes no verdict, window, or waste."""
+    base = coarse_twoweek(n_apps=16, seed=3)
+    shift = 4096.0 + 1.0 / 64.0   # on the trace grid, keeps times exact
+    shifted = type(base)(
+        specs=None, times=[t + shift for t in base.times],
+        duration_minutes=base.duration_minutes + shift)
+    for tr_a, tr_b in ((base, shifted),):
+        a = simulate_hybrid_batch(tr_a, CFG48, use_pallas=False,
+                                  include_trailing=False)
+        b = simulate_hybrid_batch(tr_b, CFG48, use_pallas=False,
+                                  include_trailing=False)
+        np.testing.assert_array_equal(a.cold, b.cold)
+        np.testing.assert_array_equal(a.wasted_minutes, b.wasted_minutes)
+        np.testing.assert_array_equal(a.final_prewarm, b.final_prewarm)
+        np.testing.assert_array_equal(a.final_keep_alive, b.final_keep_alive)
+
+
+def test_arima_postpass_override_consistency():
+    """With ARIMA enabled, OOB-heavy apps are re-simulated through the
+    scalar policy; the batched result (cold, waste, windows) must equal the
+    scalar oracle's for every app."""
+    trace = coarse_twoweek(n_apps=16, seed=13)
+    cfg = HybridConfig(histogram=CFG48.histogram, use_arima=True)
+    oracle = simulate_scalar(trace, HybridHistogramPolicy(cfg))
+    got = simulate_hybrid_batch(trace, cfg, use_pallas=False)
+    np.testing.assert_array_equal(got.cold, oracle.cold)
+    np.testing.assert_array_equal(got.final_prewarm, oracle.final_prewarm)
+    np.testing.assert_array_equal(got.final_keep_alive,
+                                  oracle.final_keep_alive)
+    np.testing.assert_allclose(got.wasted_minutes, oracle.wasted_minutes,
+                               rtol=1e-9)
+
+
+def test_subms_trace_actually_needs_rebasing():
+    """Sanity check on the showcase trace: its absolute timestamps do NOT
+    round-trip through float32 (the sub-ms structure is lost), while the
+    per-app rebased timestamps do — this is exactly the gap rebasing
+    closes."""
+    trace = bursty_subms_multiweek()
+    broken = exact = 0
+    for t in trace.times:
+        t = np.asarray(t)
+        if not np.array_equal(t.astype(np.float32).astype(np.float64), t):
+            broken += 1
+        reb = t - t[0]
+        if np.array_equal(reb.astype(np.float32).astype(np.float64), reb):
+            exact += 1
+    assert broken > 0, "trace no longer exercises float32-unrepresentable times"
+    assert exact == trace.n_apps

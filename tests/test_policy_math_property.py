@@ -1,0 +1,139 @@
+"""Hypothesis property tests for the single-source policy math.
+
+Gated on the ``hypothesis`` import exactly like ``tests/test_property.py``
+(requirements-dev.txt installs it in CI; absent locally these skip).
+
+Covered invariants:
+  * the scaled integer percentile threshold equals the exact rational
+    ``ceil(total * pct / 100)`` for every dtype-free input;
+  * the bisect (gather) and reduction (Pallas/numpy) forms of the
+    percentile-bin search agree, and the search is monotone in the
+    percentile — tail windows never undercut head windows;
+  * window values are well-ordered (0 <= load_at <= unload_at <= inflated
+    range);
+  * warm/cold verdicts and loaded-idle waste are invariant under time
+    translation — the property per-chunk rebasing relies on — checked
+    end-to-end through the scalar engine.
+"""
+import math
+from fractions import Fraction
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import policy_math  # noqa: E402
+from repro.core.histogram import HistogramConfig  # noqa: E402
+from repro.core.policy import (HybridConfig, HybridHistogramPolicy,  # noqa: E402
+                               PolicyWindows)
+from repro.core.simulator import simulate_scalar  # noqa: E402
+from repro.core.workload import Trace  # noqa: E402
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 200_000),
+       st.sampled_from([0.0, 1.0, 5.0, 25.0, 50.0, 75.0, 99.0, 99.5, 100.0]))
+def test_scaled_threshold_is_exact_ceil(total, pct):
+    thr = policy_math.percentile_threshold_scaled(total, pct)
+    exact = max(math.ceil(Fraction(total) * Fraction(policy_math.pct_numer(pct),
+                                                     policy_math.PCT_SCALE)), 1)
+    # cum hits the percentile iff cum*PCT_SCALE >= thr iff cum >= exact
+    for cum in (exact - 1, exact, exact + 1):
+        assert (cum * policy_math.PCT_SCALE >= int(thr)) == (cum >= exact)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(0, 50), min_size=2, max_size=64),
+       st.integers(1, 3000))
+def test_first_bin_search_forms_agree(counts, raw_thr):
+    cum = np.cumsum(np.asarray(counts, np.int64))[None, :]
+    thr = np.asarray([raw_thr * policy_math.PCT_SCALE])
+    want = policy_math.first_bin_ge_scaled(cum, thr, gather=False)  # numpy
+    got_bisect = policy_math.first_bin_ge_scaled(
+        jnp.asarray(cum, jnp.int32), jnp.asarray(thr, jnp.int32), gather=True)
+    got_reduce = policy_math.first_bin_ge_scaled(
+        jnp.asarray(cum, jnp.int32), jnp.asarray(thr, jnp.int32), gather=False)
+    naive = np.flatnonzero(cum[0] >= raw_thr)
+    naive = int(naive[0]) if len(naive) else cum.shape[-1]
+    assert int(want[0]) == int(got_bisect[0]) == int(got_reduce[0]) == naive
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(0, 20), min_size=2, max_size=64),
+       st.sampled_from([0.0, 5.0, 50.0, 99.0]),
+       st.sampled_from([5.0, 75.0, 99.0, 100.0]))
+def test_percentile_window_monotonicity(counts, pct_lo, pct_hi):
+    """Higher percentile -> later (or equal) bin; derived windows ordered."""
+    pct_lo, pct_hi = min(pct_lo, pct_hi), max(pct_lo, pct_hi)
+    cum = np.cumsum(np.asarray(counts, np.int64))[None, :]
+    total = int(cum[0, -1])
+    bin_lo = policy_math.first_bin_ge_scaled(
+        cum, policy_math.percentile_threshold_scaled(total, pct_lo),
+        gather=False)[0]
+    bin_hi = policy_math.first_bin_ge_scaled(
+        cum, policy_math.percentile_threshold_scaled(total, pct_hi),
+        gather=False)[0]
+    assert bin_lo <= bin_hi
+    load_at, unload_at = policy_math.window_values(
+        int(bin_lo), int(bin_hi) + 1, bin_minutes=1.0,
+        range_minutes=float(len(counts)), margin=0.10)
+    assert 0.0 <= float(load_at) <= float(unload_at)
+    assert float(unload_at) <= len(counts) * 1.1 + 1e-4
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(0.0, 500.0), st.floats(0.0, 500.0), st.floats(0.0, 1000.0))
+def test_bounds_verdicts_consistent(prewarm, keep, it):
+    load_at, unload_at = policy_math.window_bounds(prewarm, keep)
+    assert 0.0 <= float(load_at) <= float(unload_at)
+    waste = float(policy_math.idle_from_bounds(it, load_at, unload_at))
+    assert 0.0 <= waste <= keep + 1e-9
+    if policy_math.warm_from_bounds(it, load_at, unload_at):
+        assert waste <= it + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(1, 64 * 64), min_size=1, max_size=30),
+       st.integers(0, 10_000 * 64))
+def test_verdicts_invariant_under_time_translation(iat_units, shift_units):
+    """Shifting a whole trace by a constant changes no decision — the
+    property that makes per-chunk rebasing semantics-preserving."""
+    iats = np.asarray(iat_units, np.float64) / 64.0
+    shift = shift_units / 64.0
+    t = np.concatenate([[0.0], np.cumsum(iats)])
+    duration = float(t[-1] + 10.0)
+    cfg = HybridConfig(histogram=HistogramConfig(range_minutes=48.0),
+                       use_arima=False)
+
+    def run(offset, dur):
+        trace = Trace(specs=None, times=[t + offset], duration_minutes=dur)
+        return simulate_scalar(trace, HybridHistogramPolicy(cfg))
+
+    a = run(0.0, duration)
+    b = run(shift, duration + shift)
+    np.testing.assert_array_equal(a.cold, b.cold)
+    np.testing.assert_array_equal(a.wasted_minutes, b.wasted_minutes)
+    np.testing.assert_array_equal(a.final_prewarm, b.final_prewarm)
+    np.testing.assert_array_equal(a.final_keep_alive, b.final_keep_alive)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(0.0, 200.0, allow_nan=False), min_size=1,
+                max_size=50))
+def test_scalar_windows_reconstruct_float32_bounds(values):
+    """PolicyWindows(prewarm, keep) from the scalar path must reconstruct
+    the float32 unload bound exactly: prewarm + keep == float64(unload_f32).
+    This is what lets the float64 oracle agree with engines that carry the
+    bounds directly."""
+    p = HybridHistogramPolicy(HybridConfig(use_arima=False))
+    p.on_invocation("a", None)
+    w = PolicyWindows(0.0, 0.0)
+    for v in values:
+        w = p.on_invocation("a", float(v))
+    ub = np.float64(w.prewarm) + np.float64(w.keep_alive)
+    assert np.float32(w.prewarm) == np.float64(w.prewarm)
+    assert np.float32(ub) == ub

@@ -186,6 +186,63 @@ def test_synthesize_scaling_path():
     assert np.all(res.cold >= 1)
 
 
+def test_synthesize_rejects_invalid_chunking():
+    from repro.core.workload import Trace
+    with pytest.raises(ValueError, match="app_chunk"):
+        Trace.synthesize(n_apps=10, app_chunk=0)
+    with pytest.raises(ValueError, match="app_chunk"):
+        Trace.synthesize(n_apps=10, app_chunk=-5)
+    with pytest.raises(ValueError, match="n_apps"):
+        Trace.synthesize(n_apps=-1)
+    with pytest.raises(ValueError, match="max_events"):
+        Trace.synthesize(n_apps=4, max_events=0)
+
+
+def test_simulate_rejects_invalid_app_chunk(int_trace):
+    cfg = HybridConfig(use_arima=False)
+    with pytest.raises(ValueError, match="app_chunk"):
+        simulate_hybrid_batch(int_trace, cfg, app_chunk=-3)
+
+
+def test_synthesize_ragged_last_chunk():
+    """App counts that are NOT a multiple of app_chunk must produce a fully
+    populated trace — the last ragged chunk used to be easy to get wrong by
+    relying on callers to align n_apps."""
+    from repro.core.workload import Trace
+    t = Trace.synthesize(n_apps=1000, days=1.0, seed=2, max_events=24,
+                         app_chunk=384)   # chunks: 384, 384, 232 (ragged)
+    padded, counts = t.to_padded()
+    assert padded.shape == (1000, 24)
+    assert counts.min() >= 1
+    # the ragged tail chunk is as well-formed as the full ones
+    tail = padded[768:]
+    assert np.all(np.isfinite(tail[np.arange(24)[None, :] <
+                                   counts[768:, None]]))
+    for i in (767, 768, 999):
+        ev = t.events(i)
+        assert len(ev) == counts[i]
+        assert np.all(np.diff(ev) >= 0)
+        assert np.all(np.isinf(padded[i, counts[i]:]))
+
+
+def test_hybrid_ragged_chunk_parity():
+    """A bucket whose size is not a multiple of app_chunk (ragged last
+    chunk) must change nothing — including through the Pallas path, whose
+    kernel tiles and pads independently of the chunking."""
+    from repro.core.workload import Trace
+    t = Trace.synthesize(n_apps=23, days=0.5, seed=6, max_events=12)
+    cfg = HybridConfig(use_arima=False)
+    whole = simulate_hybrid_batch(t, cfg)
+    ragged = simulate_hybrid_batch(t, cfg, app_chunk=5)   # 5,5,5,5,3
+    np.testing.assert_array_equal(ragged.cold, whole.cold)
+    np.testing.assert_array_equal(ragged.wasted_minutes, whole.wasted_minutes)
+    pallas_ragged = simulate_hybrid_batch(t, cfg, app_chunk=5,
+                                          use_pallas=True)
+    np.testing.assert_array_equal(pallas_ragged.cold, whole.cold)
+    np.testing.assert_allclose(pallas_ragged.wasted_minutes,
+                               whole.wasted_minutes, rtol=1e-5, atol=1e-3)
+
+
 def test_hybrid_parity_power_of_two_bins():
     """Regression: the percentile binary search must cover the full [0,
     n_bins] answer space — with a power-of-two bin count an iteration-short
