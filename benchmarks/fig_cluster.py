@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.policy import FixedKeepAlivePolicy, HybridConfig, HybridHistogramPolicy
+from repro.core.experiment import FixedSpec, HybridSpec
 from repro.core.workload import Trace, generate_trace
 from repro.runtime.straggler import HedgePolicy
 from repro.serving.cluster_sim import ClusterConfig, ClusterSim
@@ -37,11 +37,11 @@ def run(seed: int = 5):
     reg = build_registry(len(trace.specs), seed, hbm_budget_bytes=16e9)
     rows = []
 
-    fixed = ClusterSim(reg, lambda: FixedKeepAlivePolicy(10.0),
+    hybrid_spec = HybridSpec(use_arima=False)
+    fixed = ClusterSim(reg, FixedSpec(10.0),
                        ClusterConfig(n_workers=18)).run(trace)
-    hyb = ClusterSim(reg, lambda: HybridHistogramPolicy(
-        HybridConfig(use_arima=False)),
-        ClusterConfig(n_workers=18)).run(trace)
+    hyb = ClusterSim(reg, hybrid_spec,
+                     ClusterConfig(n_workers=18)).run(trace)
 
     rows.append(("fig19_fixed10_cold_p75", fixed.cold_pct_p75, ""))
     rows.append(("fig19_hybrid_cold_p75", hyb.cold_pct_p75, ""))
@@ -54,18 +54,18 @@ def run(seed: int = 5):
     rows.append(("fig19_hybrid_lat_p99_s", hyb.latency_pct(99), ""))
 
     # straggler mitigation (beyond-paper, required at 1000+ node scale)
-    hedged = ClusterSim(reg, lambda: HybridHistogramPolicy(
-        HybridConfig(use_arima=False)),
-        ClusterConfig(n_workers=18, hedge=HedgePolicy())).run(trace)
-    unhedged = ClusterSim(reg, lambda: HybridHistogramPolicy(
-        HybridConfig(use_arima=False)),
+    hedged = ClusterSim(reg, hybrid_spec,
+                        ClusterConfig(n_workers=18,
+                                      hedge=HedgePolicy())).run(trace)
+    unhedged = ClusterSim(
+        reg, hybrid_spec,
         ClusterConfig(n_workers=18, hedge=HedgePolicy(enabled=False))).run(trace)
     rows.append(("straggler_hedged_lat_p99_s", hedged.latency_pct(99), ""))
     rows.append(("straggler_unhedged_lat_p99_s", unhedged.latency_pct(99), ""))
 
     # controller restart resilience (fault tolerance)
-    restart = ClusterSim(reg, lambda: HybridHistogramPolicy(
-        HybridConfig(use_arima=False)),
+    restart = ClusterSim(
+        reg, hybrid_spec,
         ClusterConfig(n_workers=18, checkpoint_at_minute=240.0)).run(trace)
     rows.append(("controller_restart_cold_p75", restart.cold_pct_p75, ""))
     rows.append(("controller_restart_mid_run",

@@ -1,18 +1,21 @@
 """Figures 14-18: the policy evaluation (the paper's core results).
 
 All simulations share one 7-day synthetic trace generated from the paper's
-published distributions. Wasted memory is normalized to the 10-minute fixed
+published distributions, and each figure is a declarative spec grid over
+``experiment.sweep`` — the whole figure's configurations are evaluated in
+one vectorized pass. Wasted memory is normalized to the 10-minute fixed
 keep-alive policy, exactly like Figure 15.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (FixedKeepAlivePolicy, HybridConfig, NoUnloadingPolicy,
-                        generate_trace, simulate)
-from repro.core.histogram import HistogramConfig
+from repro.core import generate_trace
+from repro.core.experiment import FixedSpec, HybridSpec, NoUnloadSpec, sweep
 
 _TRACE_CACHE = {}
+
+FIXED_KAS = (10, 20, 30, 60, 120, 240)
 
 
 def get_trace(n_apps=800, days=7.0, seed=42):
@@ -27,26 +30,25 @@ def run(n_apps: int = 800, seed: int = 42):
     rows = []
 
     # --- Fig 14: fixed keep-alive sweep --------------------------------------
-    fixed = {}
-    for ka in (10, 20, 30, 60, 120, 240):
-        res = simulate(trace, FixedKeepAlivePolicy(float(ka)))
-        fixed[ka] = res
+    fig14 = sweep(trace, [FixedSpec(float(ka)) for ka in FIXED_KAS]
+                  + [NoUnloadSpec()])
+    fixed = {ka: fig14.row(i) for i, ka in enumerate(FIXED_KAS)}
+    nou = fig14.row(len(FIXED_KAS))
+    for ka in FIXED_KAS:
         rows.append((f"fig14_fixed_{ka}m_cold_p75",
-                     res.cold_pct_percentile(75),
+                     fixed[ka].cold_pct_percentile(75),
                      {10: 50.3, 60: 25.0}.get(ka, "")))
-    nou = simulate(trace, NoUnloadingPolicy())
     rows.append(("fig14_no_unloading_always_cold_pct",
                  100.0 * nou.always_cold_fraction, 3.5))
 
     base_waste = fixed[10].total_wasted
 
     # --- Fig 15: hybrid Pareto vs fixed ---------------------------------------
-    hybrids = {}
-    for rng_min in (60, 120, 240, 480):
-        cfg = HybridConfig(histogram=HistogramConfig(range_minutes=float(rng_min)),
-                           use_arima=False)
-        res = simulate(trace, cfg)
-        hybrids[rng_min] = res
+    ranges = (60, 120, 240, 480)
+    fig15 = sweep(trace, [HybridSpec(range_minutes=float(r), use_arima=False)
+                          for r in ranges])
+    hybrids = {r: fig15.row(i) for i, r in enumerate(ranges)}
+    for rng_min, res in hybrids.items():
         rows.append((f"fig15_hybrid_{rng_min}m_cold_p75",
                      res.cold_pct_percentile(75), ""))
         rows.append((f"fig15_hybrid_{rng_min}m_rel_waste",
@@ -66,28 +68,31 @@ def run(n_apps: int = 800, seed: int = 42):
                  fixed[120].total_wasted / h4.total_wasted, 1.5))
 
     # --- Fig 16: cutoff percentiles -------------------------------------------
-    cut = simulate(trace, HybridConfig(
-        histogram=HistogramConfig(head_percentile=5, tail_percentile=99),
-        use_arima=False))
-    nocut = simulate(trace, HybridConfig(
-        histogram=HistogramConfig(head_percentile=0, tail_percentile=100),
-        use_arima=False))
+    fig16 = sweep(trace, [
+        HybridSpec(head_percentile=5, tail_percentile=99, use_arima=False),
+        HybridSpec(head_percentile=0, tail_percentile=100, use_arima=False),
+    ])
+    cut, nocut = fig16.row(0), fig16.row(1)
     rows.append(("fig16_waste_saving_5_99_vs_0_100_pct",
                  100.0 * (1 - cut.total_wasted / nocut.total_wasted), 15.0))
     rows.append(("fig16_cold_p75_5_99", cut.cold_pct_percentile(75), ""))
     rows.append(("fig16_cold_p75_0_100", nocut.cold_pct_percentile(75), ""))
 
     # --- Fig 17: CV threshold ---------------------------------------------------
-    for cv_t in (0.0, 1.0, 2.0, 4.0):
-        res = simulate(trace, HybridConfig(cv_threshold=cv_t, use_arima=False))
+    cv_ts = (0.0, 1.0, 2.0, 4.0)
+    fig17 = sweep(trace, [HybridSpec(cv_threshold=cv_t, use_arima=False)
+                          for cv_t in cv_ts])
+    for i, cv_t in enumerate(cv_ts):
+        res = fig17.row(i)
         rows.append((f"fig17_cv{cv_t:g}_cold_p75",
                      res.cold_pct_percentile(75), ""))
         rows.append((f"fig17_cv{cv_t:g}_rel_waste",
                      res.total_wasted / base_waste, ""))
 
     # --- Fig 18: ARIMA impact on always-cold apps ------------------------------
-    no_arima = simulate(trace, HybridConfig(use_arima=False))
-    with_arima = simulate(trace, HybridConfig(use_arima=True))
+    fig18 = sweep(trace, [HybridSpec(use_arima=False),
+                          HybridSpec(use_arima=True)])
+    no_arima, with_arima = fig18.row(0), fig18.row(1)
     multi = np.asarray(no_arima.invocations) > 1
     rows.append(("fig18_always_cold_pct_fixed240",
                  100.0 * fixed[240].always_cold_fraction, ""))

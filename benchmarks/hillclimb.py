@@ -1,8 +1,14 @@
-"""Perf hillclimbing driver (EXPERIMENTS.md §Perf).
+"""Perf hillclimbing driver for the training/serving roofline cells.
 
-Runs named experiment variants against the three chosen cells and reports
-the roofline terms before/after, so every hypothesis -> change -> measure
-cycle is one command:
+Runs named experiment variants against the chosen cells (the ``CELLS``
+table below: the most collective-bound dense model, the big-vocab
+memory-bound cell, the MoE dispatch cell, and the paper-representative
+decode cell) and reports the roofline terms before/after, so every
+hypothesis -> change -> measure cycle is one command. The ``VARIANTS``
+table is the experiment registry — each entry is (config overrides, lower
+kwargs), annotated inline with the cell it targets and the bandwidth
+arithmetic behind it; see also ``benchmarks/roofline.py`` for the cost
+model the terms come from.
 
   PYTHONPATH=src python -m benchmarks.hillclimb --cell A --variant baseline
   PYTHONPATH=src python -m benchmarks.hillclimb --cell A --variant bf16_comm

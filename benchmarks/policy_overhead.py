@@ -22,10 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.histogram import HistogramConfig
+from repro.core.experiment import HybridSpec, run as run_config
 from repro.core.policy import HybridConfig, HybridHistogramPolicy
-from repro.core.simulator import (simulate_hybrid_batch,
-                                  simulate_hybrid_batch_reference)
 from repro.core.workload import Trace
 from repro.kernels import ref as kref
 
@@ -98,14 +96,14 @@ def run(n_apps_compare: int = 100_000, n_apps_scale: int = 1_000_000,
     record["overhead_scalar_us_per_invocation"] = scalar_us
     record["overhead_batched_us_per_app"] = batched_us / n_apps
 
-    # ---- step-throughput: fused engine vs pre-PR batched engine ------------
-    hybrid = HybridConfig(use_arima=False)
+    # ---- step-throughput: fused engine vs pre-sweep batched engine ---------
+    spec = HybridSpec(use_arima=False)
     trace_c = Trace.synthesize(n_apps_compare, days=days, seed=0,
                                max_events=max_events)
     steps_c = _app_steps(trace_c)
 
-    t_ref = _time(lambda: simulate_hybrid_batch_reference(trace_c, hybrid))
-    t_fused = _time(lambda: simulate_hybrid_batch(trace_c, hybrid))
+    t_ref = _time(lambda: run_config(trace_c, spec, engine="reference"))
+    t_fused = _time(lambda: run_config(trace_c, spec, engine="fused"))
     ref_tput = steps_c / t_ref
     fused_tput = steps_c / t_fused
     speedup = t_ref / t_fused
@@ -129,7 +127,7 @@ def run(n_apps_compare: int = 100_000, n_apps_scale: int = 1_000_000,
                                max_events=max_events)
     steps_m = _app_steps(trace_m)
     t0 = time.perf_counter()
-    res = simulate_hybrid_batch(trace_m, hybrid)
+    res = run_config(trace_m, spec, engine="fused")
     t_scale = time.perf_counter() - t0
     rows.append((f"fused_{n_apps_scale}apps_seconds", t_scale, ""))
     rows.append((f"fused_{n_apps_scale}apps_step_throughput_per_s",

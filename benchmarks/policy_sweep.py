@@ -1,0 +1,158 @@
+"""Sweep-engine throughput: a whole policy grid in one device pass.
+
+The paper's Figs. 16-17 ablations are a grid over the histogram cutoff
+percentiles and the CV threshold. Before the sweep engine, each grid point
+was a separate Python-level ``simulate(trace, cfg)`` call that re-bucketed,
+re-transferred, and re-scanned the whole fleet; ``experiment.sweep`` stacks
+the grid into one traced config axis, shares the trace pass AND the
+per-group histogram update (this grid has ONE histogram shape), and pays
+per config only for the window/gate/accounting layers.
+
+Measured here, both cold (first call: jit compile + transfers included)
+and warm (second call: the steady-state configs/sec a design-space search
+actually sustains):
+
+  * baseline — the equivalent Python loop of single-config ``run()`` calls;
+  * sweep    — one ``sweep(trace, grid)`` call.
+
+Every sweep row is asserted bit-identical to its single-config run before
+any number is reported. Results are recorded to ``BENCH_policy_sweep.json``
+(repo root) so the speedup is tracked across PRs; reduced/--smoke runs do
+not clobber the canonical 100k-app record.
+
+  PYTHONPATH=src python -m benchmarks.policy_sweep [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.core.experiment import HybridSpec, run as run_config, sweep
+from repro.core.workload import Trace
+
+# Anchored to the repo root (not the CWD) so re-records always update the
+# tracked file.
+JSON_PATH = os.environ.get(
+    "BENCH_POLICY_SWEEP_JSON",
+    os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                 "BENCH_policy_sweep.json"))
+
+CUTS = ((0.0, 100.0), (5.0, 99.0), (10.0, 95.0), (15.0, 90.0))
+CVS = (0.5, 1.0, 2.0, 4.0)
+MARGINS = (0.10, 0.20)
+
+
+def make_grid(range_minutes: float = 60.0):
+    """32 hybrid configs: cutoffs x CV threshold x margin (Figs. 16-17)."""
+    return [
+        HybridSpec(range_minutes=range_minutes, head_percentile=h,
+                   tail_percentile=t, cv_threshold=cv, margin=m,
+                   use_arima=False,
+                   label=f"hyb-cut[{h:g},{t:g}]-cv{cv:g}-m{m:g}")
+        for m in MARGINS for cv in CVS for (h, t) in CUTS
+    ]
+
+
+def run(n_apps: int = 100_000, days: float = 14.0, max_events: int = 64,
+        smoke: bool = False):
+    if smoke:
+        n_apps, days, max_events = 2_000, 2.0, 16
+    grid = make_grid()
+    S = len(grid)
+    trace = Trace.synthesize(n_apps, days=days, seed=3, max_events=max_events)
+    trace.to_padded()          # shared trace construction out of both bills
+
+    def timed(fn):
+        t0 = time.perf_counter()
+        out = fn()
+        return out, time.perf_counter() - t0
+
+    do_loop = lambda: [run_config(trace, spec, engine="fused")
+                       for spec in grid]
+    do_sweep = lambda: sweep(trace, grid, engine="fused")
+    loop_rows, t_loop_cold = timed(do_loop)   # first call: compiles included
+    _, t_loop = timed(do_loop)                # steady state
+    swept, t_sweep_cold = timed(do_sweep)
+    _, t_sweep = timed(do_sweep)
+
+    # The contract before any throughput number: sweep rows are
+    # bit-identical to the single-config runs they replace.
+    for s in range(S):
+        np.testing.assert_array_equal(swept.cold[s], loop_rows[s].cold)
+        np.testing.assert_array_equal(swept.wasted_minutes[s],
+                                      loop_rows[s].wasted_minutes)
+        np.testing.assert_array_equal(swept.final_keep_alive[s],
+                                      loop_rows[s].final_keep_alive)
+
+    speedup = t_loop / t_sweep
+    rows = [
+        (f"sweep_{S}cfg_{n_apps}apps_seconds", t_sweep, ""),
+        (f"loop_{S}cfg_{n_apps}apps_seconds", t_loop, ""),
+        (f"sweep_{S}cfg_{n_apps}apps_cold_seconds", t_sweep_cold, ""),
+        (f"loop_{S}cfg_{n_apps}apps_cold_seconds", t_loop_cold, ""),
+        ("sweep_configs_per_sec", S / t_sweep, ""),
+        ("loop_configs_per_sec", S / t_loop, ""),
+        ("sweep_over_loop_speedup", speedup, ""),
+        ("sweep_over_loop_cold_speedup", t_loop_cold / t_sweep_cold, ""),
+    ]
+    record = {
+        "grid": {"size": S, "range_minutes": 60.0,
+                 "cut_percentiles": [list(c) for c in CUTS],
+                 "cv_thresholds": list(CVS), "margins": list(MARGINS)},
+        "n_apps": n_apps, "days": days, "max_events": max_events,
+        "timing": ("cold = first call (jit compile + transfers); "
+                   "warm = second call (steady-state design-space search)"),
+        "python_loop_seconds": t_loop,
+        "sweep_seconds": t_sweep,
+        "python_loop_cold_seconds": t_loop_cold,
+        "sweep_cold_seconds": t_sweep_cold,
+        "python_loop_configs_per_sec": S / t_loop,
+        "sweep_configs_per_sec": S / t_sweep,
+        "sweep_over_loop_speedup": speedup,
+        "sweep_over_loop_cold_speedup": t_loop_cold / t_sweep_cold,
+        "rows_bit_identical_to_single_runs": True,
+        "meta": {
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "platform": platform.platform(),
+            "jax": jax.__version__,
+            "recorded_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        },
+    }
+    # Only full-scale runs (or explicit env-var targets) touch the tracked
+    # record: reduced/smoke invocations must not clobber the canonical
+    # 100k-app measurement.
+    if n_apps >= 100_000 or "BENCH_POLICY_SWEEP_JSON" in os.environ:
+        try:
+            with open(JSON_PATH, "w") as f:
+                json.dump(record, f, indent=2, sort_keys=True)
+                f.write("\n")
+        except OSError as e:
+            print(f"# WARNING: could not record {JSON_PATH}: {e}",
+                  file=sys.stderr)
+    else:
+        print(f"# reduced run: not recording {JSON_PATH}", file=sys.stderr)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trace (CI): exercises the paths, not the "
+                         "throughput claim")
+    ap.add_argument("--apps", type=int, default=100_000)
+    args = ap.parse_args()
+    for key, value, ref in run(n_apps=args.apps, smoke=args.smoke):
+        v = f"{value:.6g}" if isinstance(value, float) else value
+        print(f"{key},{v},{ref}")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,13 +22,14 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (fig_cluster, fig_exec_mem, fig_policy, fig_workload,
-                   kernel_bench, policy_overhead, roofline)
+                   kernel_bench, policy_overhead, policy_sweep, roofline)
     modules = {
         "fig_workload": lambda: fig_workload.run(),
         "fig_exec_mem": lambda: fig_exec_mem.run(),
         "fig_policy": lambda: fig_policy.run(n_apps=args.apps),
         "fig_cluster": lambda: fig_cluster.run(),
         "policy_overhead": lambda: policy_overhead.run(),
+        "policy_sweep": lambda: policy_sweep.run(),
         "kernel_bench": lambda: kernel_bench.run(),
         "roofline": lambda: roofline.run(),
     }

@@ -2,6 +2,12 @@
 (histogram range, CV threshold, cutoff percentiles) and print the Pareto
 frontier — the tool you'd use to re-tune the policy for a new fleet.
 
+The whole design space is one declarative spec grid over
+``experiment.sweep``: the trace is prepared and scanned once for every
+configuration (grid points sharing a histogram shape also share its
+sufficient statistics), so adding a candidate policy costs a config row,
+not another simulation pass.
+
   PYTHONPATH=src python examples/policy_explorer.py [--apps 500]
 """
 import argparse
@@ -9,9 +15,22 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import (FixedKeepAlivePolicy, HybridConfig, evaluate,
-                        generate_trace, pareto_frontier, simulate)
-from repro.core.histogram import HistogramConfig
+from repro.core import generate_trace, pareto_frontier
+from repro.core.experiment import FixedSpec, HybridSpec, sweep
+
+
+def build_grid():
+    grid = [FixedSpec(float(ka)) for ka in (10, 30, 60, 120, 240)]
+    for rng in (60, 120, 240):
+        for cv in (0.5, 2.0, 4.0):
+            grid.append(HybridSpec(range_minutes=float(rng), cv_threshold=cv,
+                                   use_arima=False,
+                                   label=f"hyb-r{rng}-cv{cv:g}"))
+    for head, tail in ((0, 100), (5, 99), (10, 95)):
+        grid.append(HybridSpec(head_percentile=float(head),
+                               tail_percentile=float(tail), use_arima=False,
+                               label=f"hyb-cut[{head},{tail}]"))
+    return grid
 
 
 def main():
@@ -22,22 +41,7 @@ def main():
     args = ap.parse_args()
 
     trace = generate_trace(args.apps, days=args.days, seed=args.seed)
-    points = []
-    for ka in (10, 30, 60, 120, 240):
-        points.append(evaluate(f"fixed-{ka}m",
-                               simulate(trace, FixedKeepAlivePolicy(ka))))
-    for rng in (60, 120, 240):
-        for cv in (0.5, 2.0, 4.0):
-            cfg = HybridConfig(
-                histogram=HistogramConfig(range_minutes=float(rng)),
-                cv_threshold=cv, use_arima=False)
-            points.append(evaluate(f"hyb-r{rng}-cv{cv:g}",
-                                   simulate(trace, cfg)))
-    for head, tail in ((0, 100), (5, 99), (10, 95)):
-        cfg = HybridConfig(histogram=HistogramConfig(
-            head_percentile=head, tail_percentile=tail), use_arima=False)
-        points.append(evaluate(f"hyb-cut[{head},{tail}]",
-                               simulate(trace, cfg)))
+    points = sweep(trace, build_grid()).points()
 
     base = next(p for p in points if p.name == "fixed-10m").wasted_memory
     frontier = {p.name for p in pareto_frontier(points)}

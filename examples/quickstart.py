@@ -1,8 +1,9 @@
 """Quickstart: reproduce the paper's headline result in one minute.
 
 Generates an Azure-like FaaS trace from the paper's published distributions,
-then compares the fixed keep-alive policies against the hybrid histogram
-policy (Fig. 15's Pareto comparison).
+then evaluates the whole policy grid — fixed keep-alives, the hybrid
+histogram policy, and the no-unloading bound — with ONE ``sweep()`` call
+(Fig. 15's Pareto comparison in a single vectorized pass).
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,10 +11,8 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import (FixedKeepAlivePolicy, HybridConfig,
-                        NoUnloadingPolicy, evaluate, generate_trace,
-                        pareto_frontier, simulate)
-from repro.core.histogram import HistogramConfig
+from repro.core import generate_trace, pareto_frontier
+from repro.core.experiment import FixedSpec, HybridSpec, NoUnloadSpec, sweep
 
 
 def main():
@@ -22,15 +21,13 @@ def main():
     n_inv = sum(len(t) for t in trace.times)
     print(f"  {trace.n_apps} apps, {n_inv:,} invocations\n")
 
-    points = []
-    for ka in (10, 60, 120):
-        res = simulate(trace, FixedKeepAlivePolicy(ka))
-        points.append(evaluate(f"fixed-{ka}m", res))
-    for rng in (120, 240):
-        cfg = HybridConfig(histogram=HistogramConfig(range_minutes=rng),
-                           use_arima=False)
-        points.append(evaluate(f"hybrid-{rng}m", simulate(trace, cfg)))
-    points.append(evaluate("no-unloading", simulate(trace, NoUnloadingPolicy())))
+    grid = (
+        [FixedSpec(float(ka)) for ka in (10, 60, 120)]
+        + [HybridSpec(range_minutes=float(rng), use_arima=False)
+           for rng in (120, 240)]
+        + [NoUnloadSpec()]
+    )
+    points = sweep(trace, grid).points()
 
     base = points[0].wasted_memory
     print(f"{'policy':>14s} {'cold% (p75 app)':>16s} {'rel. memory':>12s}")

@@ -17,8 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get, reduced
-from repro.core.policy import (FixedKeepAlivePolicy, HybridConfig,
-                               HybridHistogramPolicy)
+from repro.core.experiment import FixedSpec, HybridSpec
 from repro.core.workload import generate_trace
 from repro.serving.engine import ServeEngine
 from repro.serving.registry import ModelEndpoint, Registry
@@ -27,9 +26,9 @@ from repro.serving.warmpool import WarmPool
 MIN = 60.0
 
 
-def drive(policy_name, make_policy, trace, registry, max_events=150):
+def drive(policy_spec, trace, registry, max_events=150):
     engine = ServeEngine(registry)
-    pool = WarmPool(registry, make_policy())
+    pool = WarmPool(registry, policy_spec)
     events = []
     for i, spec in enumerate(trace.specs):
         for t in trace.times[i]:
@@ -54,7 +53,7 @@ def drive(policy_name, make_policy, trace, registry, max_events=150):
             engine.unload(app)
     stats = pool.finalize(events[-1][0] if events else 0.0)
     total = stats.cold_starts + stats.warm_starts
-    print(f"[{policy_name}] requests={total} "
+    print(f"[{policy_spec.name}] requests={total} "
           f"cold={stats.cold_starts} ({100 * stats.cold_starts / total:.1f}%) "
           f"prewarms={stats.prewarms} "
           f"resident GB-min={stats.resident_byte_seconds / 1e9 / 60:.2f}")
@@ -98,10 +97,9 @@ def main():
 
     print(f"serving {args.apps} endpoints over {args.minutes:g} simulated "
           f"minutes (real model executions)\n")
-    hybrid = drive("hybrid", lambda: HybridHistogramPolicy(
-        HybridConfig(use_arima=False)), trace, registry)
-    fixed = drive("fixed-10m", lambda: FixedKeepAlivePolicy(10.0), trace,
-                  registry)
+    hybrid = drive(HybridSpec(use_arima=False, label="hybrid"), trace,
+                   registry)
+    fixed = drive(FixedSpec(10.0), trace, registry)
     saving = 100 * (1 - hybrid.resident_byte_seconds
                     / max(fixed.resident_byte_seconds, 1e-9))
     print(f"\nhybrid policy memory saving vs fixed-10m: {saving:.1f}% "

@@ -12,6 +12,9 @@ from .policy import (FixedKeepAlivePolicy, HybridConfig, HybridHistogramPolicy,
 from .simulator import (SimResult, simulate, simulate_fixed_batch,
                         simulate_hybrid_batch, simulate_hybrid_batch_reference,
                         simulate_scalar)
+from .experiment import (ENGINES, EngineOptions, FixedSpec, HybridSpec,
+                         NoUnloadSpec, PolicySpec, SweepResult, as_spec, run,
+                         sweep)
 from .workload import AppSpec, Trace, generate_trace, sample_apps
 from .metrics import PolicyPoint, evaluate, normalize_waste, pareto_frontier
 
@@ -22,7 +25,10 @@ __all__ = [
     "NoUnloadingPolicy", "Policy", "PolicyWindows", "is_warm",
     "loaded_idle_time", "SimResult", "simulate", "simulate_fixed_batch",
     "simulate_hybrid_batch", "simulate_hybrid_batch_reference",
-    "simulate_scalar", "AppSpec", "Trace",
+    "simulate_scalar",
+    "ENGINES", "EngineOptions", "FixedSpec", "HybridSpec", "NoUnloadSpec",
+    "PolicySpec", "SweepResult", "as_spec", "run", "sweep",
+    "AppSpec", "Trace",
     "generate_trace", "sample_apps", "PolicyPoint", "evaluate",
     "normalize_waste", "pareto_frontier",
 ]

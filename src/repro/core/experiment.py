@@ -1,0 +1,345 @@
+"""The experiment front door: declarative policy specs, one ``run()``, and
+a vectorized ``sweep()`` that computes a whole policy grid in one pass.
+
+The paper's core results (Figs. 14-18) are *sweeps* — fixed keep-alive x
+{10..240}m, histogram range x {60..480}m, CV-threshold and cutoff
+ablations. This module makes a configuration grid a first-class input:
+
+    from repro.core.experiment import FixedSpec, HybridSpec, sweep
+
+    grid = [FixedSpec(ka) for ka in (10, 20, 30, 60, 120, 240)]
+    result = sweep(trace, grid)               # Fig. 14 in one call
+    for spec, row in zip(result.specs, result):
+        print(spec.name, row.cold_pct_percentile(75), row.total_wasted)
+
+Specs are frozen dataclasses registered as JAX pytrees (they flatten into
+their numeric knobs), each ``.build()``-able into the stateful
+:class:`repro.core.policy.Policy` objects the scalar oracle and the serving
+layer consume. ``sweep`` stacks same-family specs into a traced config axis
+and drives the factored sweep engines in :mod:`repro.core.simulator`: the
+trace is bucketed, chunked, rebased, and scanned ONCE for all S configs
+instead of S times, with histogram sufficient statistics shared across
+configs that agree on the histogram shape (see
+:class:`repro.core.policy_math.HybridSweepBlock`).
+
+Engines (``engine=`` on both ``run`` and ``sweep``):
+
+  * ``"auto"``      — Pallas sweep kernel on TPU, float64 fused sweep
+    elsewhere (the default).
+  * ``"scalar"``    — the float64 event-driven oracle, one config at a
+    time (handles everything, including exotic ``Policy`` subclasses via
+    ``spec.build()``).
+  * ``"fused"``     — the float64 ``lax.scan`` sweep engine.
+  * ``"pallas"``    — the float32 TPU sweep kernel (interpret mode off
+    TPU), per-chunk time rebasing, SMEM config block via scalar prefetch.
+  * ``"reference"`` — the pre-sweep per-step-cumsum float32 engine, one
+    config at a time (the benchmark baseline).
+
+The fixed/no-unload family has no histogram state; its ``"pallas"`` and
+``"reference"`` engines alias the (already exact) float64 fused sweep.
+
+Every engine's rows are bit-identical on cold counts, invocations, and
+final windows to single-config ``run()`` and to the float64 scalar oracle
+— ``tests/test_experiment_api.py`` and the conformance/golden suites
+enforce it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Optional, Sequence, Union
+
+import jax
+import numpy as np
+
+from .histogram import HistogramConfig
+from .policy import (FixedKeepAlivePolicy, HybridConfig, HybridHistogramPolicy,
+                     NoUnloadingPolicy, Policy)
+from .simulator import (SimResult, _run_fixed_sweep, _run_hybrid_sweep,
+                        _simulate_hybrid_batch_reference, simulate_scalar)
+from .workload import Trace
+
+__all__ = [
+    "ENGINES", "PolicySpec", "FixedSpec", "NoUnloadSpec", "HybridSpec",
+    "EngineOptions", "SweepResult", "as_spec", "run", "sweep",
+]
+
+ENGINES = ("auto", "scalar", "fused", "pallas", "reference")
+
+
+def _register_pytree(cls, meta=()):
+    """Register a frozen spec dataclass as a JAX pytree.
+
+    Numeric knobs are leaves (so specs flow through ``tree_map``/``jit`` and
+    stack into config axes); fields in ``meta`` are auxiliary data (static:
+    they select python-level code paths, e.g. ``use_arima``).
+    """
+    names = [f.name for f in dataclasses.fields(cls)]
+    data = tuple(n for n in names if n not in meta)
+
+    def flatten(x):
+        return (tuple(getattr(x, n) for n in data),
+                tuple(getattr(x, n) for n in meta))
+
+    def unflatten(aux, leaves):
+        kw = dict(zip(data, leaves))
+        kw.update(dict(zip(meta, aux)))
+        return cls(**kw)
+
+    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+    return cls
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedSpec:
+    """The provider state of practice: ``prewarm=0``, constant keep-alive
+    (AWS 10 min / Azure 20 min / OpenWhisk 10 min)."""
+    keep_alive: float = 10.0
+    label: Optional[str] = None
+
+    @property
+    def name(self) -> str:
+        return self.label or f"fixed-{self.keep_alive:g}m"
+
+    def build(self) -> FixedKeepAlivePolicy:
+        return FixedKeepAlivePolicy(float(self.keep_alive))
+
+
+@dataclasses.dataclass(frozen=True)
+class NoUnloadSpec:
+    """Infinite keep-alive: lower bound on cold starts, upper bound on
+    waste (Fig. 14's right edge)."""
+    label: Optional[str] = None
+
+    @property
+    def keep_alive(self) -> float:
+        return float("inf")
+
+    @property
+    def name(self) -> str:
+        return self.label or "no-unloading"
+
+    def build(self) -> NoUnloadingPolicy:
+        return NoUnloadingPolicy()
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridSpec:
+    """The paper's hybrid histogram policy, flattened to its knobs.
+
+    Mirrors :class:`repro.core.policy.HybridConfig` /
+    :class:`repro.core.histogram.HistogramConfig` field-for-field (same
+    defaults, including ``use_arima=True``), but as a flat pytree whose
+    leaves are exactly the axes the paper sweeps.
+    """
+    bin_minutes: float = 1.0          # paper: 1-minute bins
+    range_minutes: float = 240.0      # paper: 4-hour default range
+    head_percentile: float = 5.0      # paper: 5th percentile -> pre-warm
+    tail_percentile: float = 99.0     # paper: 99th percentile -> keep-alive
+    margin: float = 0.10              # paper: 10% margin both sides
+    cv_threshold: float = 2.0         # paper: CV=2 default (Fig. 17)
+    min_samples: int = 5              # too few ITs -> standard keep-alive
+    oob_fraction_threshold: float = 0.5   # most ITs OOB -> ARIMA
+    arima_min_samples: int = 4
+    arima_margin: float = 0.15        # paper: 15% margin
+    use_arima: bool = True
+    label: Optional[str] = None
+
+    @property
+    def name(self) -> str:
+        return self.label or f"hybrid-{self.range_minutes:g}m"
+
+    def to_config(self) -> HybridConfig:
+        return HybridConfig(
+            histogram=HistogramConfig(
+                bin_minutes=float(self.bin_minutes),
+                range_minutes=float(self.range_minutes),
+                head_percentile=float(self.head_percentile),
+                tail_percentile=float(self.tail_percentile),
+                margin=float(self.margin)),
+            cv_threshold=float(self.cv_threshold),
+            min_samples=int(self.min_samples),
+            oob_fraction_threshold=float(self.oob_fraction_threshold),
+            arima_min_samples=int(self.arima_min_samples),
+            arima_margin=float(self.arima_margin),
+            use_arima=bool(self.use_arima))
+
+    @classmethod
+    def from_config(cls, cfg: HybridConfig,
+                    label: Optional[str] = None) -> "HybridSpec":
+        h = cfg.histogram
+        return cls(bin_minutes=h.bin_minutes, range_minutes=h.range_minutes,
+                   head_percentile=h.head_percentile,
+                   tail_percentile=h.tail_percentile, margin=h.margin,
+                   cv_threshold=cfg.cv_threshold,
+                   min_samples=cfg.min_samples,
+                   oob_fraction_threshold=cfg.oob_fraction_threshold,
+                   arima_min_samples=cfg.arima_min_samples,
+                   arima_margin=cfg.arima_margin, use_arima=cfg.use_arima,
+                   label=label)
+
+    def build(self) -> HybridHistogramPolicy:
+        return HybridHistogramPolicy(self.to_config())
+
+
+_register_pytree(FixedSpec, meta=("label",))
+_register_pytree(NoUnloadSpec, meta=("label",))
+_register_pytree(HybridSpec, meta=("use_arima", "label"))
+
+PolicySpec = Union[FixedSpec, NoUnloadSpec, HybridSpec]
+_SPEC_TYPES = (FixedSpec, NoUnloadSpec, HybridSpec)
+
+
+def as_spec(obj) -> PolicySpec:
+    """Coerce legacy policy objects/configs to the declarative spec form.
+
+    Accepts a ``PolicySpec`` (returned as-is), a ``HybridConfig``, or one of
+    the three built-in ``Policy`` classes. Raises ``TypeError`` for
+    arbitrary policies — those stay on the scalar oracle via
+    ``simulate_scalar(trace, policy)``.
+    """
+    if isinstance(obj, _SPEC_TYPES):
+        return obj
+    if isinstance(obj, HybridConfig):
+        return HybridSpec.from_config(obj)
+    if isinstance(obj, HybridHistogramPolicy):
+        return HybridSpec.from_config(obj.cfg)
+    if isinstance(obj, FixedKeepAlivePolicy):
+        return FixedSpec(obj.keep_alive)
+    if isinstance(obj, NoUnloadingPolicy):
+        return NoUnloadSpec()
+    raise TypeError(
+        f"cannot express {type(obj).__name__} as a PolicySpec; build a "
+        f"FixedSpec/NoUnloadSpec/HybridSpec, or use simulate_scalar for "
+        f"arbitrary Policy objects")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineOptions:
+    """Execution knobs shared by ``run`` and ``sweep`` (engine-semantic
+    knobs live on the spec; these only shape *how* the engines execute)."""
+    include_trailing: bool = True     # account waste after the last event
+    app_chunk: Optional[int] = None   # apps per device chunk (None: auto,
+    #                                   scaled down by the config-axis size)
+    tile_apps: int = 512              # Pallas kernel app-tile
+    interpret: Optional[bool] = None  # Pallas interpret (None: off-TPU only)
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """S policy configurations evaluated over one trace.
+
+    Row-major over the input spec order; ``row(s)`` materializes the
+    familiar :class:`~repro.core.simulator.SimResult` view of config ``s``
+    (the arrays are shared, not copied).
+    """
+    specs: List[PolicySpec]
+    engine: str                    # the engine that ran ("auto" resolved)
+    cold: np.ndarray               # [S, n_apps] int64
+    invocations: np.ndarray        # [n_apps] int64 (trace property)
+    wasted_minutes: np.ndarray     # [S, n_apps] float64
+    final_prewarm: np.ndarray      # [S, n_apps] float64
+    final_keep_alive: np.ndarray   # [S, n_apps] float64
+
+    def __len__(self) -> int:
+        return len(self.specs)
+
+    def row(self, s: int) -> SimResult:
+        return SimResult(self.cold[s], self.invocations,
+                         self.wasted_minutes[s], self.final_prewarm[s],
+                         self.final_keep_alive[s])
+
+    def __iter__(self) -> Iterator[SimResult]:
+        return (self.row(s) for s in range(len(self)))
+
+    def points(self):
+        """One :class:`~repro.core.metrics.PolicyPoint` per spec (named by
+        ``spec.name``/``label``) — plug straight into ``pareto_frontier``."""
+        from .metrics import evaluate
+        return [evaluate(spec.name, self.row(s))
+                for s, spec in enumerate(self.specs)]
+
+
+def _resolve_engine(engine: str) -> str:
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; expected one of "
+                         f"{ENGINES}")
+    if engine == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "fused"
+    return engine
+
+
+def sweep(trace: Trace, specs: Sequence, *, engine: str = "auto",
+          options: Optional[EngineOptions] = None) -> SweepResult:
+    """Evaluate S policy configurations over ``trace`` in one device pass.
+
+    ``specs`` may mix families (fixed / no-unload / hybrid); each family is
+    stacked into its own traced config axis and the trace is prepared once.
+    Rows come back in input order and are bit-identical (cold counts,
+    invocations, final windows) to the corresponding single-config
+    :func:`run`.
+    """
+    specs = [as_spec(s) for s in specs]
+    if not specs:
+        raise ValueError("sweep() needs at least one PolicySpec")
+    opts = options or EngineOptions()
+    eng = _resolve_engine(engine)
+
+    n = trace.n_apps
+    S = len(specs)
+    cold = np.zeros((S, n), np.int64)
+    waste = np.zeros((S, n), np.float64)
+    pre = np.zeros((S, n), np.float64)
+    keep = np.zeros((S, n), np.float64)
+    inv: Optional[np.ndarray] = None
+
+    def fill(rows, out):
+        nonlocal inv
+        if isinstance(out, SimResult):
+            out = dict(cold=out.cold, wasted_minutes=out.wasted_minutes,
+                       final_prewarm=out.final_prewarm,
+                       final_keep_alive=out.final_keep_alive,
+                       invocations=out.invocations)
+        cold[rows] = out["cold"]
+        waste[rows] = out["wasted_minutes"]
+        pre[rows] = out["final_prewarm"]
+        keep[rows] = out["final_keep_alive"]
+        inv = out["invocations"]
+
+    if eng == "scalar":
+        for s, spec in enumerate(specs):
+            fill([s], simulate_scalar(trace, spec.build(),
+                                      opts.include_trailing))
+        return SweepResult(specs, eng, cold, inv, waste, pre, keep)
+
+    window_idx = [s for s, sp in enumerate(specs)
+                  if isinstance(sp, (FixedSpec, NoUnloadSpec))]
+    hybrid_idx = [s for s, sp in enumerate(specs)
+                  if isinstance(sp, HybridSpec)]
+
+    if window_idx:
+        # No histogram state in this family — the float64 fused sweep is
+        # already oracle-exact, so "pallas"/"reference" alias it.
+        out = _run_fixed_sweep(trace, [specs[s].keep_alive
+                                       for s in window_idx],
+                               opts.include_trailing)
+        fill(window_idx, out)
+    if hybrid_idx:
+        cfgs = [specs[s].to_config() for s in hybrid_idx]
+        if eng == "reference":
+            for s, cfg in zip(hybrid_idx, cfgs):
+                fill([s], _simulate_hybrid_batch_reference(
+                    trace, cfg, opts.include_trailing))
+        else:
+            out = _run_hybrid_sweep(
+                trace, cfgs, opts.include_trailing,
+                app_chunk=opts.app_chunk, use_pallas=(eng == "pallas"),
+                interpret=opts.interpret, tile_apps=opts.tile_apps)
+            fill(hybrid_idx, out)
+    assert inv is not None  # every spec belongs to one of the two families
+    return SweepResult(specs, eng, cold, inv, waste, pre, keep)
+
+
+def run(trace: Trace, spec, *, engine: str = "auto",
+        options: Optional[EngineOptions] = None) -> SimResult:
+    """Evaluate one policy configuration (the S=1 sweep) over ``trace``."""
+    return sweep(trace, [spec], engine=engine, options=options).row(0)

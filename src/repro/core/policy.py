@@ -28,8 +28,10 @@ Policies implemented:
 
 All three expose the same scalar control-plane interface
 (``on_invocation(app_id, idle_time) -> windows for next gap``) used by the
-serving warm pool, plus the batched functional interface used by the
-vectorized simulator (`repro.core.simulator`).
+serving warm pool. The declarative counterparts — ``FixedSpec`` /
+``NoUnloadSpec`` / ``HybridSpec`` in :mod:`repro.core.experiment` — build
+these stateful objects via ``spec.build()`` and drive the vectorized sweep
+engines (`repro.core.simulator`) directly.
 """
 from __future__ import annotations
 

@@ -46,7 +46,7 @@ oracle):
     every engine.
   * The *time layer* (inter-arrival times, waste accumulation) stays in the
     engine's dtype. The float32 engines recover exact ITs via per-chunk
-    time rebasing (see ``simulator.simulate_hybrid_batch``).
+    time rebasing (see ``simulator._run_hybrid_sweep``).
   * Integer state must stay below 2**24 for the float32 casts to be exact
     and below 2**31 / PCT_SCALE for the scaled threshold compare; both hold
     for any trace this repo produces (per-app event counts are bounded by
@@ -58,11 +58,25 @@ scalar policy pays no jax dispatch overhead) and trace identically inside
 row-wise lookup take a ``gather`` flag: gathers are fast under XLA but not
 Mosaic-lowerable, so Pallas bodies use the reduction forms (both forms are
 asserted equivalent by the property suite).
+
+Config knobs are *data*, not trace constants: :class:`HybridStepConfig`
+packages one policy configuration into the exact dtypes the decision layer
+consumes (integer percentile numerators, float32 margin factors, ...). Its
+leaves may be python/numpy scalars (the scalar policy and single-config
+paths) or traced arrays broadcast against the app axis — which is what lets
+``repro.core.experiment.sweep`` stack S configurations into one traced
+config axis and scan the trace once for the whole grid.
+:func:`fused_hybrid_sweep_step_math` is that sweep step: the histogram
+sufficient statistics are carried once per *distinct histogram shape*
+(group layer), percentile windows once per distinct window variant, the
+CV/min-samples gate once per distinct gate variant, and each of the S
+configs just selects its (window, gate) pair — so a 16-point CV-threshold
+grid pays for one histogram update per step, not 16.
 """
 from __future__ import annotations
 
 import math
-from typing import Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -71,6 +85,7 @@ import numpy as np
 __all__ = [
     "PCT_SCALE",
     "pct_numer",
+    "margin_factors",
     "window_bounds",
     "warm_from_bounds",
     "idle_from_bounds",
@@ -80,13 +95,22 @@ __all__ = [
     "welford_update",
     "bin_count_cv",
     "percentile_threshold_scaled",
+    "percentile_threshold_scaled_numer",
     "first_bin_ge_scaled",
+    "first_bin_ge_scaled_grouped",
     "window_values",
+    "window_values_from_factors",
     "standard_window_bounds",
     "use_histogram_gate",
+    "use_histogram_gate_from_cv",
     "oob_heavy",
     "arima_window",
+    "HybridStepConfig",
+    "HybridSweepBlock",
+    "SweepIdentities",
     "fused_hybrid_step_math",
+    "hybrid_sweep_decide",
+    "fused_hybrid_sweep_step_math",
 ]
 
 # Percentiles are quantized to 1/100 of a percent and compared in exact
@@ -102,6 +126,25 @@ def _ns(*xs):
         if isinstance(x, (jax.Array, jax.core.Tracer)):
             return jnp
     return np
+
+
+def _f32(x):
+    """Exact float32 view of a config knob, host or traced.
+
+    Python/numpy scalars go through ``np.float32`` (the value every engine's
+    decision layer compares against); traced arrays are cast — equal values
+    by construction because config blocks are built host-side from the same
+    python floats."""
+    if isinstance(x, (jax.Array, jax.core.Tracer)):
+        return x.astype(jnp.float32)
+    return np.float32(x)
+
+
+def _i32(x):
+    """int32 view of a config knob, host or traced."""
+    if isinstance(x, (jax.Array, jax.core.Tracer)):
+        return x.astype(jnp.int32)
+    return np.int32(x)
 
 
 # --------------------------------------------------------------------------
@@ -186,11 +229,11 @@ def raw_count_at(cum, safe_bin, *, gather: bool):
     Both return the same int32 values.
     """
     if gather:
-        rows = jnp.arange(cum.shape[0])
-        cum_at = cum[rows, safe_bin].astype(jnp.int32)
-        cum_below = jnp.where(
-            safe_bin > 0,
-            cum[rows, jnp.maximum(safe_bin - 1, 0)].astype(jnp.int32), 0)
+        take = lambda idx: jnp.take_along_axis(
+            cum, idx[..., None], axis=-1)[..., 0].astype(jnp.int32)
+        cum_at = take(safe_bin)
+        cum_below = jnp.where(safe_bin > 0,
+                              take(jnp.maximum(safe_bin - 1, 0)), 0)
         return cum_at - cum_below
     iota = jax.lax.broadcasted_iota(jnp.int32, cum.shape, cum.ndim - 1)
     cum_at = jnp.sum(jnp.where(iota == safe_bin[..., None], cum, 0), axis=-1)
@@ -267,14 +310,19 @@ def percentile_threshold_scaled(total, pct: float):
     """Scaled percentile threshold: ``cum`` hits the pct-percentile iff
     ``cum * PCT_SCALE >= threshold`` (with the paper's floor of one
     sample). Pure integer math — dtype-invariant by construction."""
-    numer = pct_numer(pct)
-    if isinstance(total, int):
-        return max(total * numer, PCT_SCALE)
-    xp = _ns(total)
+    return percentile_threshold_scaled_numer(total, pct_numer(pct))
+
+
+def percentile_threshold_scaled_numer(total, numer):
+    """:func:`percentile_threshold_scaled` from a precomputed integer
+    numerator (``pct_numer``); ``numer`` may be a traced int32 per-config
+    knob — the sweep engine's percentile axis."""
+    if isinstance(total, int) and isinstance(numer, (int, np.integer)):
+        return max(total * int(numer), PCT_SCALE)
+    xp = _ns(total, numer)
     if xp is np:
         return np.maximum(np.int64(total) * numer, PCT_SCALE)
-    return jnp.maximum(total.astype(jnp.int32) * jnp.int32(numer),
-                       jnp.int32(PCT_SCALE))
+    return jnp.maximum(_i32(total) * _i32(numer), jnp.int32(PCT_SCALE))
 
 
 def first_bin_ge_scaled(cum, thr_scaled, *, gather: bool):
@@ -303,18 +351,53 @@ def first_bin_ge_scaled(cum, thr_scaled, *, gather: bool):
         hit = cum.astype(jnp.int32) * jnp.int32(PCT_SCALE) >= \
             thr_scaled[..., None]
         return jnp.min(jnp.where(hit, iota, n_bins), axis=-1)
-    n_apps = cum.shape[0]
-    rows = jnp.arange(n_apps)
-    lo = jnp.zeros((n_apps,), jnp.int32)
-    hi = jnp.full((n_apps,), n_bins, jnp.int32)
+    rows_shape = cum.shape[:-1]
+    lo = jnp.zeros(rows_shape, jnp.int32)
+    hi = jnp.full(rows_shape, n_bins, jnp.int32)
     # search space is [0, n_bins] — n_bins + 1 candidate answers
     for _ in range(int(np.ceil(np.log2(n_bins + 1)))):
         mid = (lo + hi) // 2
-        v = cum[rows, jnp.minimum(mid, n_bins - 1)].astype(jnp.int32)
+        v = jnp.take_along_axis(
+            cum, jnp.minimum(mid, n_bins - 1)[..., None],
+            axis=-1)[..., 0].astype(jnp.int32)
         ge = (v * jnp.int32(PCT_SCALE) >= thr_scaled) & (mid < n_bins)
         hi = jnp.where(ge, mid, hi)
         lo = jnp.where(ge, lo, jnp.minimum(mid + 1, hi))
     return hi
+
+
+def first_bin_ge_scaled_grouped(gcum, group, thr_scaled):
+    """Per-variant percentile search over *grouped* cumulative rows.
+
+    ``gcum`` is [G, n_apps, n_bins] — one histogram state per distinct
+    histogram shape; ``group`` [W] maps each window variant to its group;
+    ``thr_scaled`` is [W, n_apps]. Returns the same bins as
+    ``first_bin_ge_scaled(gcum[group], thr_scaled, gather=True)`` without
+    materializing the [W, n_apps, n_bins] gather: each binary-search probe
+    reads one [W, n_apps] slice straight out of the group state.
+    """
+    n_bins = gcum.shape[-1]
+    cols = jnp.arange(thr_scaled.shape[-1], dtype=jnp.int32)[None, :]
+    g = group[:, None].astype(jnp.int32)
+    lo = jnp.zeros(thr_scaled.shape, jnp.int32)
+    hi = jnp.full(thr_scaled.shape, n_bins, jnp.int32)
+    for _ in range(int(np.ceil(np.log2(n_bins + 1)))):
+        mid = (lo + hi) // 2
+        v = gcum[g, cols, jnp.minimum(mid, n_bins - 1)].astype(jnp.int32)
+        ge = (v * jnp.int32(PCT_SCALE) >= thr_scaled) & (mid < n_bins)
+        hi = jnp.where(ge, mid, hi)
+        lo = jnp.where(ge, lo, jnp.minimum(mid + 1, hi))
+    return hi
+
+
+def margin_factors(margin: float) -> Tuple[np.float32, np.float32]:
+    """The float32 margin factors the decision layer multiplies by.
+
+    Precomputed host-side (``1 ± margin`` rounds once, in float64, before
+    the float32 cast) so a traced per-config margin axis reproduces the
+    static path bit-for-bit.
+    """
+    return np.float32(1.0 - margin), np.float32(1.0 + margin)
 
 
 def window_values(head_bin, tail_bin, bin_minutes: float,
@@ -328,19 +411,28 @@ def window_values(head_bin, tail_bin, bin_minutes: float,
     and float32 keeps them identical across engines (they widen to float64
     exactly).
     """
-    xp = _ns(head_bin, tail_bin)
+    lo, hi = margin_factors(margin)
+    return window_values_from_factors(head_bin, tail_bin,
+                                      np.float32(bin_minutes),
+                                      np.float32(range_minutes), lo, hi)
+
+
+def window_values_from_factors(head_bin, tail_bin, bin_f32, range_f32,
+                               margin_lo, margin_hi):
+    """:func:`window_values` from precomputed float32 knobs; all four knobs
+    may be traced per-config arrays (the sweep window-variant axis)."""
+    xp = _ns(head_bin, tail_bin, bin_f32, margin_lo)
     f = np.float32
     head = xp.asarray(head_bin, f) if xp is np else head_bin.astype(f)
     tail = xp.asarray(tail_bin, f) if xp is np else tail_bin.astype(f)
-    load_at = head * f(bin_minutes) * f(1.0 - margin)
-    unload_at = xp.minimum(tail * f(bin_minutes), f(range_minutes)) \
-        * f(1.0 + margin)
+    load_at = head * bin_f32 * margin_lo
+    unload_at = xp.minimum(tail * bin_f32, range_f32) * margin_hi
     return load_at, xp.maximum(unload_at, load_at)
 
 
-def standard_window_bounds(standard_keep: float) -> Tuple[float, float]:
+def standard_window_bounds(standard_keep):
     """The fallback windows: never unload early, keep for the full range."""
-    return np.float32(0.0), np.float32(standard_keep)
+    return np.float32(0.0), _f32(standard_keep)
 
 
 # --------------------------------------------------------------------------
@@ -348,18 +440,17 @@ def standard_window_bounds(standard_keep: float) -> Tuple[float, float]:
 # --------------------------------------------------------------------------
 
 
-def oob_heavy(total, oob, oob_fraction_threshold: float):
+def oob_heavy(total, oob, oob_fraction_threshold):
     """Mostly-out-of-bounds check routing an app to the time-series path."""
     f = np.float32
     if isinstance(total, int):             # scalar control-plane fast path
         return bool(f(oob) > f(oob_fraction_threshold) * f(max(total + oob, 1)))
-    return oob.astype(f) > f(oob_fraction_threshold) * \
+    return oob.astype(f) > _f32(oob_fraction_threshold) * \
         jnp.maximum(total + oob, 1).astype(f)
 
 
-def use_histogram_gate(total, oob, cv_sum, cv_sum_sq, n_bins: int,
-                       min_samples: int, cv_threshold: float,
-                       oob_fraction_threshold: float):
+def use_histogram_gate(total, oob, cv_sum, cv_sum_sq, n_bins,
+                       min_samples, cv_threshold, oob_fraction_threshold):
     """Whether the histogram windows govern the next gap (else fall back to
     the standard keep-alive / time-series path). Evaluated in int/float32
     so every engine takes the same branch."""
@@ -370,8 +461,17 @@ def use_histogram_gate(total, oob, cv_sum, cv_sum_sq, n_bins: int,
             and bin_count_cv(float(cv_sum), float(cv_sum_sq), n_bins,
                              np.float32) >= np.float32(cv_threshold))
     cv = bin_count_cv(cv_sum, cv_sum_sq, n_bins, np.float32)
+    return use_histogram_gate_from_cv(total, oob, cv, min_samples,
+                                      cv_threshold, oob_fraction_threshold)
+
+
+def use_histogram_gate_from_cv(total, oob, cv, min_samples, cv_threshold,
+                               oob_fraction_threshold):
+    """Traced-path gate from a precomputed float32 CV — the sweep engine
+    computes CV once per histogram group and gates once per distinct
+    (min_samples, cv_threshold, oob_threshold) variant."""
     seen = total + oob
-    return (seen >= min_samples) & (cv >= np.float32(cv_threshold)) \
+    return (seen >= min_samples) & (cv >= _f32(cv_threshold)) \
         & (total > 0) & ~oob_heavy(total, oob, oob_fraction_threshold)
 
 
@@ -386,13 +486,49 @@ def arima_window(predicted_it: float, margin: float) -> Tuple[float, float]:
 # --------------------------------------------------------------------------
 
 
+class HybridStepConfig(NamedTuple):
+    """One hybrid-policy configuration, precomputed into the exact dtypes
+    the decision layer consumes.
+
+    Leaves may be python/numpy scalars (static single-config paths) or
+    traced scalars/arrays broadcastable against the app axis (the sweep
+    config axis; the Pallas sweep kernel reads them out of SMEM). Being a
+    NamedTuple, it is a pytree: it flows through ``jax.jit``/``lax.scan``
+    as data, so a new grid point never retraces an engine.
+    """
+    n_bins: object        # i32 — effective bin count (<= allocated bins)
+    head_numer: object    # i32 — head percentile numerator over PCT_SCALE
+    tail_numer: object    # i32 — tail percentile numerator over PCT_SCALE
+    margin_lo: object     # f32 — (1 - margin), rounded once on the host
+    margin_hi: object     # f32 — (1 + margin)
+    bin_minutes: object   # engine time dtype — IT binning divisor
+    bin_f32: object       # f32 — bin width as the window values consume it
+    range_f32: object     # f32 — histogram range for the window clamp
+    cv_threshold: object  # f32
+    min_samples: object   # i32
+    oob_threshold: object  # f32
+    standard_keep: object  # f32 — fallback keep-alive (== range)
+
+    @classmethod
+    def from_host(cls, *, n_bins: int, head_pct: float, tail_pct: float,
+                  margin: float, bin_minutes: float, range_minutes: float,
+                  cv_threshold: float, min_samples: int, oob_threshold: float,
+                  standard_keep: float) -> "HybridStepConfig":
+        lo, hi = margin_factors(margin)
+        return cls(
+            n_bins=int(n_bins), head_numer=pct_numer(head_pct),
+            tail_numer=pct_numer(tail_pct), margin_lo=lo, margin_hi=hi,
+            bin_minutes=float(bin_minutes), bin_f32=np.float32(bin_minutes),
+            range_f32=np.float32(range_minutes),
+            cv_threshold=np.float32(cv_threshold),
+            min_samples=int(min_samples),
+            oob_threshold=np.float32(oob_threshold),
+            standard_keep=np.float32(standard_keep))
+
+
 def fused_hybrid_step_math(t_now, prev_t, cum, oob, cv_sum, cv_sum_sq,
-                           prewarm, unload_at, cold, waste, *, n_bins: int,
-                           head_pct: float, tail_pct: float, margin: float,
-                           bin_minutes: float, range_minutes: float,
-                           cv_threshold: float, min_samples: int,
-                           oob_threshold: float, standard_keep: float,
-                           gather: bool):
+                           prewarm, unload_at, cold, waste, *,
+                           cfg: HybridStepConfig, gather: bool):
     """One fused hybrid-policy step: warm/cold + waste verdict under the
     previously decided windows, histogram suffix-add update, Welford CV
     accumulation, and the percentile-window decision for the next gap.
@@ -401,7 +537,8 @@ def fused_hybrid_step_math(t_now, prev_t, cum, oob, cv_sum, cv_sum_sq,
     — so no engine ever re-derives ``prewarm + keep`` in its own dtype.
     Works identically inside ``lax.scan`` bodies (``gather=True``) and
     Pallas kernel bodies (``gather=False``); the time dtype (float64 on
-    CPU, float32 on TPU) is taken from ``t_now``.
+    CPU, float32 on TPU) is taken from ``t_now``. ``cfg`` leaves may be
+    static scalars or traced values (per-config SMEM scalars on TPU).
     """
     wdtype = t_now.dtype
     valid = jnp.isfinite(t_now)
@@ -416,26 +553,29 @@ def fused_hybrid_step_math(t_now, prev_t, cum, oob, cv_sum, cv_sum_sq,
 
     # Histogram + CV update on the cumulative representation.
     rec = valid & ~first
-    safe, in_b, oob_hit = classify_idle_time(it, rec, bin_minutes, n_bins)
+    safe, in_b, oob_hit = classify_idle_time(it, rec, cfg.bin_minutes,
+                                             cfg.n_bins)
     old = raw_count_at(cum, safe, gather=gather)
     new_cum = suffix_add(cum, safe, in_b)
     # last prefix sum == total in-bounds count (cum is nondecreasing; the
     # reduction form avoids a lane slice inside Pallas)
-    total = (new_cum[:, -1] if gather else jnp.max(new_cum, axis=-1)) \
+    total = (new_cum[..., -1] if gather else jnp.max(new_cum, axis=-1)) \
         .astype(jnp.int32)
     oob = oob + oob_hit.astype(jnp.int32)
     cv_sum, cv_sum_sq = welford_update(cv_sum, cv_sum_sq, in_b, old)
 
     # Decision layer (int/float32 — dtype-invariant across engines).
-    head_thr = percentile_threshold_scaled(total, head_pct)
-    tail_thr = percentile_threshold_scaled(total, tail_pct)
+    head_thr = percentile_threshold_scaled_numer(total, cfg.head_numer)
+    tail_thr = percentile_threshold_scaled_numer(total, cfg.tail_numer)
     head_bin = first_bin_ge_scaled(new_cum, head_thr, gather=gather)
     tail_bin = first_bin_ge_scaled(new_cum, tail_thr, gather=gather) + 1
-    new_load, new_unload = window_values(head_bin, tail_bin, bin_minutes,
-                                         range_minutes, margin)
-    use_hist = use_histogram_gate(total, oob, cv_sum, cv_sum_sq, n_bins,
-                                  min_samples, cv_threshold, oob_threshold)
-    std_load, std_unload = standard_window_bounds(standard_keep)
+    new_load, new_unload = window_values_from_factors(
+        head_bin, tail_bin, cfg.bin_f32, cfg.range_f32, cfg.margin_lo,
+        cfg.margin_hi)
+    use_hist = use_histogram_gate(total, oob, cv_sum, cv_sum_sq, cfg.n_bins,
+                                  cfg.min_samples, cfg.cv_threshold,
+                                  cfg.oob_threshold)
+    std_load, std_unload = standard_window_bounds(cfg.standard_keep)
     new_load = jnp.where(use_hist, new_load, std_load).astype(wdtype)
     new_unload = jnp.where(use_hist, new_unload, std_unload).astype(wdtype)
 
@@ -444,4 +584,181 @@ def fused_hybrid_step_math(t_now, prev_t, cum, oob, cv_sum, cv_sum_sq,
     unload_at = jnp.where(valid, new_unload, unload_at)
     prev_t = jnp.where(valid, t_now, prev_t)
     return (prev_t, new_cum, oob, cv_sum, cv_sum_sq, prewarm, unload_at,
+            cold + is_cold, waste + gap_waste)
+
+
+# --------------------------------------------------------------------------
+# The sweep step: S configurations over one trace column, factored
+# --------------------------------------------------------------------------
+
+
+class HybridSweepBlock(NamedTuple):
+    """A whole hybrid-policy grid, factored into its distinct layers.
+
+    The S stacked configurations of one ``experiment.sweep`` call usually
+    differ in only one or two knobs (the paper's Figs. 15-17 sweep one knob
+    at a time), so the sweep step deduplicates shared work:
+
+      * group layer ``[G, ...]`` — distinct (bin_minutes, n_bins): the
+        histogram sufficient statistics (cumulative counts, OOB, Welford CV
+        accumulators) are carried and updated once per group;
+      * window layer ``[W, ...]`` — distinct (group, percentiles, margin,
+        range): percentile searches + window values once per variant;
+      * gate layer ``[T, ...]`` — distinct (group, min_samples,
+        cv_threshold, oob_threshold): the representativeness gate once per
+        variant;
+      * config layer ``[S, ...]`` — every config just *selects* its
+        (window, gate) pair; the only per-config scan state is cold counts
+        and waste (residency bounds are recomputed from group state, see
+        :func:`hybrid_sweep_decide`).
+
+    All index leaves are i32 arrays; knob leaves follow the same dtype
+    discipline as :class:`HybridStepConfig`, with shapes ``[layer, 1]`` so
+    they broadcast against ``[layer, n_apps]`` state.
+    """
+    # group layer
+    g_bin_minutes: object   # [G, 1] time dtype
+    g_n_bins: object        # [G, 1] i32 (effective bins; allocation is max)
+    # window-variant layer
+    w_group: object         # [W] i32 — variant -> group row
+    w_head_numer: object    # [W, 1] i32
+    w_tail_numer: object    # [W, 1] i32
+    w_bin_f32: object       # [W, 1] f32
+    w_range_f32: object     # [W, 1] f32
+    w_margin_lo: object     # [W, 1] f32
+    w_margin_hi: object     # [W, 1] f32
+    # gate-variant layer
+    t_group: object         # [T] i32 — variant -> group row
+    t_min_samples: object   # [T, 1] i32
+    t_cv_threshold: object  # [T, 1] f32
+    t_oob_threshold: object  # [T, 1] f32
+    # standard-keep layer (fallback windows, one per distinct keep-alive)
+    d_standard_keep: object  # [D, 1] f32
+    # config layer
+    c_window: object        # [S] i32 — config -> window variant
+    c_gate: object          # [S] i32 — config -> gate variant
+    c_std: object           # [S] i32 — config -> standard-keep row
+
+
+class SweepIdentities(NamedTuple):
+    """Static structure flags for a :class:`HybridSweepBlock`.
+
+    Each flag asserts that a selector index array is the identity mapping
+    (known host-side when the block is built), letting the traced decision
+    layers skip the corresponding gather — on CPU, per-step gathers cost
+    more than the whole verdict math they route, and for a single-config
+    run EVERY selector is the identity, so the S=1 path keeps the pre-sweep
+    engine's gather-free form. Results are identical either way.
+    """
+    w: bool = False        # window variant w reads group w
+    t: bool = False        # gate variant t reads group t
+    c_window: bool = False  # config s uses window variant s
+    c_gate: bool = False   # config s uses gate variant s
+    c_std: bool = False    # config s uses standard-keep row s
+
+
+def _sweep_decision_layers(gcum, goob, gcv_sum, gcv_sum_sq,
+                           blk: HybridSweepBlock, ids: SweepIdentities):
+    """The shared decision sub-layers from the current group state.
+
+    Returns (w_load, w_unload) [W, n] float32 window-variant bounds and
+    ``use_c`` [S, n] bool (per-config histogram-vs-standard gate verdict).
+
+      * window layer: percentile searches once per distinct window variant;
+      * gate layer: CV once per group, gate once per threshold tuple;
+      * config layer: a gather (elided where ``ids`` proves it identity).
+    """
+    gtotal = gcum[..., -1].astype(jnp.int32)
+    total_w = gtotal if ids.w else gtotal[blk.w_group]
+    head_thr = percentile_threshold_scaled_numer(total_w, blk.w_head_numer)
+    tail_thr = percentile_threshold_scaled_numer(total_w, blk.w_tail_numer)
+    if ids.w:
+        head_bin = first_bin_ge_scaled(gcum, head_thr, gather=True)
+        tail_bin = first_bin_ge_scaled(gcum, tail_thr, gather=True) + 1
+    else:
+        head_bin = first_bin_ge_scaled_grouped(gcum, blk.w_group, head_thr)
+        tail_bin = first_bin_ge_scaled_grouped(gcum, blk.w_group,
+                                               tail_thr) + 1
+    w_load, w_unload = window_values_from_factors(
+        head_bin, tail_bin, blk.w_bin_f32, blk.w_range_f32, blk.w_margin_lo,
+        blk.w_margin_hi)
+
+    gcv = bin_count_cv(gcv_sum, gcv_sum_sq, blk.g_n_bins, np.float32)
+    sel_t = (lambda x: x) if ids.t else (lambda x: x[blk.t_group])
+    use_hist = use_histogram_gate_from_cv(
+        sel_t(gtotal), sel_t(goob), sel_t(gcv),
+        blk.t_min_samples, blk.t_cv_threshold, blk.t_oob_threshold)
+    return w_load, w_unload, (use_hist if ids.c_gate
+                              else use_hist[blk.c_gate])
+
+
+def hybrid_sweep_decide(gcum, goob, gcv_sum, gcv_sum_sq,
+                        blk: HybridSweepBlock,
+                        ids: SweepIdentities = SweepIdentities()):
+    """Per-config residency bounds from the current group state.
+
+    Every decision input (cumulative counts, OOB, Welford accumulators)
+    only changes when an app sees an event, so the windows an app carries
+    between events are a *pure function* of group state — the sweep never
+    materializes per-config window carries. Returns float32
+    (load_at, unload_at), each [S, n_apps] (decision-layer dtype; widening
+    to the engine's time dtype is exact).
+    """
+    w_load, w_unload, use_c = _sweep_decision_layers(
+        gcum, goob, gcv_sum, gcv_sum_sq, blk, ids)
+    std_load, std_unload = standard_window_bounds(
+        blk.d_standard_keep if ids.c_std
+        else blk.d_standard_keep[blk.c_std])
+    load_c = jnp.where(use_c, w_load if ids.c_window
+                       else w_load[blk.c_window], std_load)
+    unload_c = jnp.where(use_c, w_unload if ids.c_window
+                         else w_unload[blk.c_window], std_unload)
+    return load_c, unload_c
+
+
+def fused_hybrid_sweep_step_math(t_now, prev_t, gcum, goob, gcv_sum,
+                                 gcv_sum_sq, cold, waste, *,
+                                 blk: HybridSweepBlock,
+                                 ids: SweepIdentities = SweepIdentities()):
+    """One sweep step: S configurations advance together over one trace
+    column, sharing the time layer and the per-group histogram update.
+
+    Shapes: ``t_now``/``prev_t`` [n]; group state [G, n(, n_bins)];
+    per-config state [S, n] — only cold counts and waste. The residency
+    bounds are recomputed from the PRE-update group state: exactly the
+    windows the single-config step decided (and carried) after each app's
+    previous event, because the state is untouched between an app's
+    events. Every value each config sees is, element for element, the same
+    primitive sequence the single-config step computes — the layers only
+    deduplicate and gather, so sweep rows are bit-identical to
+    single-config runs (asserted by ``tests/test_experiment_api.py``).
+    """
+    wdtype = t_now.dtype
+    valid = jnp.isfinite(t_now)        # [n] — shared across the whole grid
+    first = ~jnp.isfinite(prev_t)
+    it = t_now - prev_t
+    account = valid & ~first           # gaps that actually closed
+
+    # Verdict for the gap that just closed, under the windows decided after
+    # each app's previous event (== decide(pre-update state)). The verdict
+    # math itself stays per-config [S, n]: on CPU the alternative (verdicts
+    # per variant + per-config gathers) loses — XLA gathers cost more than
+    # the elementwise compare/min/max they would save.
+    load_c, unload_c = hybrid_sweep_decide(gcum, goob, gcv_sum, gcv_sum_sq,
+                                           blk, ids)
+    is_cold = valid & (first | ~warm_from_bounds(it, load_c, unload_c))
+    gap_waste = jnp.where(account,
+                          idle_from_bounds(it, load_c, unload_c),
+                          jnp.zeros((), wdtype))
+
+    # Group layer: one histogram + CV update per distinct histogram shape.
+    safe, in_b, oob_hit = classify_idle_time(it, account, blk.g_bin_minutes,
+                                             blk.g_n_bins)
+    old = raw_count_at(gcum, safe, gather=True)
+    new_gcum = suffix_add(gcum, safe, in_b)
+    new_goob = goob + oob_hit.astype(jnp.int32)
+    gcv_sum, gcv_sum_sq = welford_update(gcv_sum, gcv_sum_sq, in_b, old)
+
+    prev_t = jnp.where(valid, t_now, prev_t)
+    return (prev_t, new_gcum, new_goob, gcv_sum, gcv_sum_sq,
             cold + is_cold, waste + gap_waste)

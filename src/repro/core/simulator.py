@@ -1,6 +1,9 @@
-"""Trace-driven cold-start simulator (Section 5.1 of the paper).
+"""Trace-driven cold-start simulator engines (Section 5.1 of the paper).
 
-Four interchangeable engines, all computing their decisions through the
+The public front door lives in :mod:`repro.core.experiment` —
+``run(trace, spec)`` / ``sweep(trace, specs)`` over declarative
+:class:`~repro.core.experiment.PolicySpec` grids. This module holds the
+engines those drive, all computing their decisions through the
 single-source policy math in :mod:`repro.core.policy_math`:
 
   * :func:`simulate_scalar` — event-driven reference. Walks each app's
@@ -8,27 +11,34 @@ single-source policy math in :mod:`repro.core.policy_math`:
     (including the full hybrid policy with its ARIMA path). This is the
     float64 oracle and handles arbitrary policies.
 
-  * :func:`simulate_hybrid_batch` / :func:`simulate_fixed_batch` — vectorized
-    JAX engines: all apps advance together through a ``lax.scan`` over padded
-    event indices. The hybrid engine carries *cumulative* per-app bin counts
-    (``[n_apps, n_bins]``, narrowest integer dtype the bucket's event count
-    allows) so a step's histogram update is a suffix add and the head/tail
-    percentile decision is a binary search — no fleet-wide cumsum recompute
-    per step. Apps are bucketed by event count so a handful of very chatty
-    apps do not inflate the scan length for everyone, and each bucket is
-    further chunked over apps with double-buffered host→device transfer so
-    ~1M-app traces fit in device memory. ARIMA cannot run inside a scan;
-    apps whose out-of-bounds fraction crosses the threshold are re-simulated
-    through the scalar engine and their results overridden (the paper: these
-    are ~0.7% of invocations).
+  * the vectorized sweep engines (:func:`_run_fixed_sweep` /
+    :func:`_run_hybrid_sweep`): all apps advance together through a
+    ``lax.scan`` over padded event indices, and S stacked policy
+    configurations advance together along a *traced config axis* — the
+    trace is bucketed, chunked, rebased and scanned ONCE for the whole
+    grid. The hybrid scan is factored (see
+    :class:`repro.core.policy_math.HybridSweepBlock`): histogram
+    sufficient statistics are carried once per distinct histogram shape,
+    percentile windows / gates once per distinct variant, so a
+    CV-threshold grid pays one histogram update per step, not S. Apps are
+    bucketed by event count so a handful of very chatty apps do not
+    inflate the scan length for everyone, and each bucket is chunked over
+    apps with double-buffered host→device transfer so ~1M-app traces fit
+    in device memory. ARIMA cannot run inside a scan; apps whose
+    out-of-bounds fraction crosses the threshold are re-simulated through
+    the scalar engine per config and their results overridden (the paper:
+    these are ~0.7% of invocations).
 
-  * On TPU the fused step runs as a Pallas kernel
-    (:func:`repro.kernels.histogram.fused_hybrid_step_pallas`) in float32;
-    pass ``use_pallas=True`` to exercise it in interpret mode elsewhere.
+  * On TPU the sweep step runs as a Pallas kernel
+    (:func:`repro.kernels.histogram.fused_hybrid_sweep_step_pallas`) in
+    float32, with the per-config knobs delivered as an SMEM config block
+    via scalar prefetch; ``engine="pallas"`` exercises it in interpret
+    mode elsewhere.
 
   * ``simulate_hybrid_batch_reference`` — the pre-fused batched engine
     (per-step full-matrix cumsum), kept as the regression baseline for the
-    ``benchmarks/policy_overhead.py`` step-throughput comparison.
+    ``benchmarks/policy_overhead.py`` step-throughput comparison
+    (``engine="reference"``).
 
 Float32 exactness (the TPU story): TPUs have no float64, so the Pallas and
 reference engines carry float32 time state. Absolute timestamps on a
@@ -46,10 +56,15 @@ afterward in float64 from the un-rebased clock. The decision layer itself
 Exactly as in the paper, function execution time is simulated as 0 (so idle
 time == inter-arrival time) to account wasted memory time conservatively, and
 the first invocation of every app is a cold start.
+
+The module-level ``simulate*`` entry points are deprecated shims over the
+experiment API, kept one release for external callers; in-repo code calls
+``experiment.run``/``experiment.sweep`` directly.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Optional, Sequence
 
@@ -73,8 +88,10 @@ __all__ = [
 BUCKET_EDGES = (64, 512, 4096, 1 << 62)
 
 # Apps per device-resident chunk of the hybrid scan: bounds the cumulative
-# count state ([chunk, n_bins]) regardless of fleet size.
+# count state ([chunk, n_bins]) regardless of fleet size. Sweeps divide it
+# by the config-axis length so total device state stays bounded too.
 DEFAULT_APP_CHUNK = 131072
+_MIN_AUTO_CHUNK = 4096
 
 
 @dataclasses.dataclass
@@ -83,7 +100,7 @@ class SimResult:
     invocations: np.ndarray     # [n_apps] invocation counts
     wasted_minutes: np.ndarray  # [n_apps] loaded-but-idle memory time
     # Final per-app policy windows (None for engines/paths that predate the
-    # conformance harness; filled by all four engines here).
+    # conformance harness; filled by all engines here).
     final_prewarm: Optional[np.ndarray] = None     # [n_apps] float64
     final_keep_alive: Optional[np.ndarray] = None  # [n_apps] float64
 
@@ -145,10 +162,12 @@ def simulate_scalar(trace: Trace, policy: Policy,
 
 
 # --------------------------------------------------------------------------
-# Vectorized JAX engines
+# Vectorized JAX engines — fixed keep-alive family
 # --------------------------------------------------------------------------
 
 def _fixed_step(keep_alive, carry, t_now):
+    # ``keep_alive`` is [S, 1]: S stacked configs broadcast against the [n]
+    # time column; cold/waste carries are [S, n], the clock stays [n].
     prev_t, cold, waste = carry
     valid = jnp.isfinite(t_now)
     it = t_now - prev_t
@@ -164,10 +183,16 @@ def _fixed_step(keep_alive, carry, t_now):
 
 @partial(jax.jit, static_argnums=(3,))
 def _fixed_scan(times, keep_alive, duration, include_trailing: bool):
+    """Scan one event-count bucket for S stacked keep-alive values.
+
+    times: [n, width]; keep_alive: [S, 1] (traced — new grid points never
+    retrace). Returns (cold [S, n], waste [S, n]).
+    """
     n = times.shape[0]
+    S = keep_alive.shape[0]
     tdtype = times.dtype
     init = (jnp.full((n,), -jnp.inf, tdtype),
-            jnp.zeros((n,), jnp.int32), jnp.zeros((n,), tdtype))
+            jnp.zeros((S, n), jnp.int32), jnp.zeros((S, n), tdtype))
     (last_t, cold, waste), _ = jax.lax.scan(
         partial(_fixed_step, keep_alive), init, times.T)
     if include_trailing:
@@ -178,26 +203,31 @@ def _fixed_scan(times, keep_alive, duration, include_trailing: bool):
     return cold, waste
 
 
-def simulate_fixed_batch(trace: Trace, keep_alive_minutes: float,
-                         include_trailing: bool = True) -> SimResult:
+def _run_fixed_sweep(trace: Trace, keeps: Sequence[float],
+                     include_trailing: bool = True) -> dict:
+    """S fixed keep-alive configs in one pass (``inf`` == never unload).
+
+    float64 time state: two-week traces (t ~ 2e4 minutes) lose the
+    sub-millisecond IAT bits in float32, flipping warm/cold verdicts
+    exactly at the keep-alive boundary vs the scalar oracle.
+    """
     times, counts = trace.to_padded()
-    cold_parts = np.zeros(trace.n_apps, np.int64)
-    waste_parts = np.zeros(trace.n_apps, np.float64)
-    # float64 time state: two-week traces (t ~ 2e4 minutes) lose the
-    # sub-millisecond IAT bits in float32, flipping warm/cold verdicts
-    # exactly at the keep-alive boundary vs the scalar oracle.
+    S, n = len(keeps), trace.n_apps
+    cold = np.zeros((S, n), np.int64)
+    waste = np.zeros((S, n), np.float64)
     with enable_x64():
+        ks = jnp.asarray(np.asarray(keeps, np.float64)[:, None])
         for sel, sub in _buckets(times, counts):
-            cold, waste = _fixed_scan(jnp.asarray(sub, jnp.float64),
-                                      jnp.float64(keep_alive_minutes),
-                                      jnp.float64(trace.duration_minutes),
-                                      include_trailing)
-            cold_parts[sel] = np.asarray(cold)
-            waste_parts[sel] = np.asarray(waste)
-    n = trace.n_apps
-    return SimResult(cold_parts, counts.astype(np.int64), waste_parts,
-                     np.zeros(n, np.float64),
-                     np.full(n, float(keep_alive_minutes), np.float64))
+            c, w = _fixed_scan(jnp.asarray(sub, jnp.float64), ks,
+                               jnp.float64(trace.duration_minutes),
+                               include_trailing)
+            cold[:, sel] = np.asarray(c)
+            waste[:, sel] = np.asarray(w)
+    keep = np.broadcast_to(np.asarray(keeps, np.float64)[:, None],
+                           (S, n)).copy()
+    return dict(cold=cold, invocations=counts.astype(np.int64),
+                wasted_minutes=waste, final_prewarm=np.zeros((S, n)),
+                final_keep_alive=keep)
 
 
 def _buckets(times: np.ndarray, counts: np.ndarray):
@@ -239,7 +269,9 @@ def _check_scan_width(width: int) -> None:
             f"events per app)")
 
 
-# -- hybrid ------------------------------------------------------------------
+# --------------------------------------------------------------------------
+# Vectorized JAX engines — hybrid histogram family (the sweep engine)
+# --------------------------------------------------------------------------
 
 
 def _cum_dtype_for(width: int):
@@ -257,60 +289,157 @@ def _cum_dtype_for(width: int):
     return jnp.int32
 
 
-def _step_params(cfg: HistogramConfig, hybrid: HybridConfig, gather: bool):
-    return dict(
-        n_bins=cfg.n_bins, head_pct=cfg.head_percentile,
-        tail_pct=cfg.tail_percentile, margin=cfg.margin,
-        bin_minutes=cfg.bin_minutes, range_minutes=cfg.range_minutes,
-        cv_threshold=hybrid.cv_threshold, min_samples=hybrid.min_samples,
-        oob_threshold=hybrid.oob_fraction_threshold,
-        standard_keep=hybrid.standard_keep_alive, gather=gather)
+def _step_config_for(cfg: HybridConfig) -> policy_math.HybridStepConfig:
+    h = cfg.histogram
+    return policy_math.HybridStepConfig.from_host(
+        n_bins=h.n_bins, head_pct=h.head_percentile,
+        tail_pct=h.tail_percentile, margin=h.margin,
+        bin_minutes=h.bin_minutes, range_minutes=h.range_minutes,
+        cv_threshold=cfg.cv_threshold, min_samples=cfg.min_samples,
+        oob_threshold=cfg.oob_fraction_threshold,
+        standard_keep=cfg.standard_keep_alive)
 
 
-def _fused_hybrid_step(cfg: HistogramConfig, hybrid: HybridConfig, carry,
-                       t_now):
-    """Fused scan step — single-source math, XLA gather strategy (the Pallas
-    twin is ``repro.kernels.histogram.fused_hybrid_step_pallas``)."""
-    return policy_math.fused_hybrid_step_math(
-        t_now, *carry, **_step_params(cfg, hybrid, gather=True)), None
+def _build_sweep_block(cfgs: Sequence[HybridConfig],
+                       time_dtype) -> policy_math.HybridSweepBlock:
+    """Factor S hybrid configs into the group/window/gate/config layers.
+
+    All configs must share ``n_bins`` (the driver bands by it); within a
+    band the distinct (bin_minutes, n_bins) pairs become histogram groups,
+    distinct window/gate knob tuples become variants, and each config keeps
+    only selector indices — see ``policy_math.HybridSweepBlock``.
+    """
+    base = [_step_config_for(c) for c in cfgs]
+    groups, g_of = {}, []
+    for c in base:
+        key = (float(c.bin_minutes), int(c.n_bins))
+        g_of.append(groups.setdefault(key, len(groups)))
+    wvars, w_of = {}, []
+    for gi, c in zip(g_of, base):
+        key = (gi, int(c.head_numer), int(c.tail_numer), float(c.bin_f32),
+               float(c.range_f32), float(c.margin_lo), float(c.margin_hi))
+        w_of.append(wvars.setdefault(key, len(wvars)))
+    tvars, t_of = {}, []
+    for gi, c in zip(g_of, base):
+        key = (gi, int(c.min_samples), float(c.cv_threshold),
+               float(c.oob_threshold))
+        t_of.append(tvars.setdefault(key, len(tvars)))
+    dvars, d_of = {}, []
+    for c in base:
+        d_of.append(dvars.setdefault(float(c.standard_keep), len(dvars)))
+    col = lambda vals, dt: np.asarray(vals, dt)[:, None]
+    gk, wk, tk = list(groups), list(wvars), list(tvars)
+    return policy_math.HybridSweepBlock(
+        g_bin_minutes=col([k[0] for k in gk], time_dtype),
+        g_n_bins=col([k[1] for k in gk], np.int32),
+        w_group=np.asarray([k[0] for k in wk], np.int32),
+        w_head_numer=col([k[1] for k in wk], np.int32),
+        w_tail_numer=col([k[2] for k in wk], np.int32),
+        w_bin_f32=col([k[3] for k in wk], np.float32),
+        w_range_f32=col([k[4] for k in wk], np.float32),
+        w_margin_lo=col([k[5] for k in wk], np.float32),
+        w_margin_hi=col([k[6] for k in wk], np.float32),
+        t_group=np.asarray([k[0] for k in tk], np.int32),
+        t_min_samples=col([k[1] for k in tk], np.int32),
+        t_cv_threshold=col([k[2] for k in tk], np.float32),
+        t_oob_threshold=col([k[3] for k in tk], np.float32),
+        d_standard_keep=col(list(dvars), np.float32),
+        c_window=np.asarray(w_of, np.int32),
+        c_gate=np.asarray(t_of, np.int32),
+        c_std=np.asarray(d_of, np.int32),
+    )
 
 
-@partial(jax.jit, static_argnums=(1, 2, 3))
-def _hybrid_scan(times, cfg: HistogramConfig, hybrid: HybridConfig,
-                 cum_dtype=jnp.int32):
+def _build_pallas_cfg(cfgs: Sequence[HybridConfig]):
+    """Pack S configs into the (int32, float32) SMEM config blocks the
+    Pallas sweep kernel reads via scalar prefetch."""
+    rows_i, rows_f = [], []
+    for c in cfgs:
+        h = _step_config_for(c)
+        rows_i.append([h.n_bins, h.head_numer, h.tail_numer, h.min_samples])
+        rows_f.append([h.margin_lo, h.margin_hi, h.bin_f32, h.range_f32,
+                       h.cv_threshold, h.oob_threshold, h.standard_keep])
+    return np.asarray(rows_i, np.int32), np.asarray(rows_f, np.float32)
+
+
+def _sweep_identities(
+        blk: policy_math.HybridSweepBlock) -> policy_math.SweepIdentities:
+    """Static structure of a sweep block: which selector arrays are the
+    identity (all of them, for a single-config run), so the traced layers
+    skip those gathers — see ``policy_math.SweepIdentities``."""
+    ident = lambda idx, m: (idx.shape[0] == m
+                            and np.array_equal(np.asarray(idx), np.arange(m)))
+    G = blk.g_n_bins.shape[0]
+    W = blk.w_group.shape[0]
+    T = blk.t_group.shape[0]
+    D = blk.d_standard_keep.shape[0]
+    return policy_math.SweepIdentities(
+        w=ident(blk.w_group, G), t=ident(blk.t_group, G),
+        c_window=ident(blk.c_window, W), c_gate=ident(blk.c_gate, T),
+        c_std=ident(blk.c_std, D))
+
+
+@partial(jax.jit, static_argnums=(2, 3, 4))
+def _hybrid_sweep_scan(times, blk: policy_math.HybridSweepBlock,
+                       cum_dtype, n_bins: int,
+                       ids: policy_math.SweepIdentities =
+                       policy_math.SweepIdentities()):
+    """One factored sweep scan over a [n, width] chunk; S configs in one
+    pass, config knobs traced (a new grid point never recompiles). The
+    final residency bounds are recomputed from the final group state —
+    identical to the windows decided at each app's last event (the state
+    never changes between events)."""
     n = times.shape[0]
     tdtype = times.dtype
     _check_scan_width(times.shape[1])
+    if blk.g_n_bins.ndim == 0:
+        # Degenerate single-config block (scalar knob leaves): rank-2/1
+        # state, no config axis anywhere — the layers broadcast against
+        # scalars, reproducing the dedicated pre-sweep engine's program
+        # (leading unit axes measurably pessimize XLA:CPU).
+        layer = lambda *a: ()
+    else:
+        layer = lambda leaf: (leaf.shape[0],)
+    gd = layer(blk.g_n_bins)
+    sd = layer(blk.c_window)
     init = (
-        jnp.full((n,), -jnp.inf, tdtype),
-        jnp.zeros((n, cfg.n_bins), cum_dtype),
-        jnp.zeros((n,), jnp.int32),
-        jnp.zeros((n,), tdtype),                                      # cv_sum
-        jnp.zeros((n,), tdtype),                                      # cv_sum_sq
-        jnp.zeros((n,), tdtype),                                      # prewarm
-        jnp.full((n,), hybrid.standard_keep_alive, tdtype),           # unload_at
-        jnp.zeros((n,), jnp.int32),
-        jnp.zeros((n,), tdtype),
+        jnp.full((n,), -jnp.inf, tdtype),                  # shared clock
+        jnp.zeros(gd + (n, n_bins), cum_dtype),
+        jnp.zeros(gd + (n,), jnp.int32),
+        jnp.zeros(gd + (n,), tdtype),                      # cv_sum
+        jnp.zeros(gd + (n,), tdtype),                      # cv_sum_sq
+        jnp.zeros(sd + (n,), jnp.int32),                   # cold
+        jnp.zeros(sd + (n,), tdtype),                      # waste
     )
-    carry, _ = jax.lax.scan(partial(_fused_hybrid_step, cfg, hybrid), init,
-                            times.T)
-    (last_t, cum, oob, _, _, prewarm, unload_at, cold, waste) = carry
-    total = cum[:, -1].astype(jnp.int32)
-    oob_heavy = policy_math.oob_heavy(total, oob,
-                                      hybrid.oob_fraction_threshold)
-    return cold, waste, oob_heavy, last_t, prewarm, unload_at
+    step = lambda carry, t: (
+        policy_math.fused_hybrid_sweep_step_math(
+            t, *carry, blk=blk, ids=ids), None)
+    carry, _ = jax.lax.scan(step, init, times.T)
+    (last_t, gcum, goob, gcv_sum, gcv_sum_sq, cold, waste) = carry
+    prewarm, unload_at = policy_math.hybrid_sweep_decide(
+        gcum, goob, gcv_sum, gcv_sum_sq, blk, ids)
+    gtotal = gcum[..., -1].astype(jnp.int32)
+    sel_t = (lambda x: x) if ids.t else (lambda x: x[blk.t_group])
+    oobh = policy_math.oob_heavy(sel_t(gtotal), sel_t(goob),
+                                 blk.t_oob_threshold)
+    if not ids.c_gate:
+        oobh = oobh[blk.c_gate]
+    return cold, waste, oobh, last_t, prewarm, unload_at
 
 
-@partial(jax.jit, static_argnums=(1, 2, 3, 4))
-def _hybrid_scan_pallas(times, cfg: HistogramConfig, hybrid: HybridConfig,
-                        interpret: bool = True, tile_apps: int = 512):
-    """Same fused scan, stepping through the Pallas TPU kernel (float32;
-    the driver feeds per-chunk *rebased* times — see module docstring)."""
-    from ..kernels.histogram import fused_hybrid_step_pallas
+@partial(jax.jit, static_argnums=(3, 4, 5))
+def _hybrid_sweep_scan_pallas(times, cfg_i32, cfg_f32, n_bins: int,
+                              interpret: bool = True, tile_apps: int = 512):
+    """Same sweep, stepping through the Pallas TPU kernel (float32; the
+    driver feeds per-chunk *rebased* times — see module docstring). The
+    config block rides in SMEM via scalar prefetch; per-config state is
+    carried unfactored (grid (S, app tiles))."""
+    from ..kernels.histogram import fused_hybrid_sweep_step_pallas
 
+    S = cfg_i32.shape[0]
     # Pad the app dimension to the kernel tile ONCE, outside the scan —
     # otherwise the kernel wrapper re-pads and re-slices the whole carry
-    # (including [n, n_bins] cum) on every scan step. Padded rows carry
+    # (including [S, n, n_bins] cum) on every scan step. Padded rows carry
     # t = +inf and are never active.
     n_real = times.shape[0]
     pad = (-n_real) % min(tile_apps, n_real) if n_real else 0
@@ -319,37 +448,31 @@ def _hybrid_scan_pallas(times, cfg: HistogramConfig, hybrid: HybridConfig,
             [times, jnp.full((pad, times.shape[1]), jnp.inf, times.dtype)])
     n = times.shape[0]
     init = (
-        jnp.full((n,), -jnp.inf, jnp.float32),
-        jnp.zeros((n, cfg.n_bins), jnp.int32),
-        jnp.zeros((n,), jnp.int32),
-        jnp.zeros((n,), jnp.float32),
-        jnp.zeros((n,), jnp.float32),
-        jnp.zeros((n,), jnp.float32),                                 # prewarm
-        jnp.full((n,), jnp.float32(hybrid.standard_keep_alive)),      # unload_at
-        jnp.zeros((n,), jnp.int32),
-        jnp.zeros((n,), jnp.float32),
+        jnp.full((S, n), -jnp.inf, jnp.float32),
+        jnp.zeros((S, n, n_bins), jnp.int32),
+        jnp.zeros((S, n), jnp.int32),
+        jnp.zeros((S, n), jnp.float32),
+        jnp.zeros((S, n), jnp.float32),
+        jnp.zeros((S, n), jnp.float32),                    # prewarm
+        jnp.broadcast_to(cfg_f32[:, 6:7], (S, n)),         # unload_at
+        jnp.zeros((S, n), jnp.int32),
+        jnp.zeros((S, n), jnp.float32),
     )
 
     def step(carry, t_now):
-        out = fused_hybrid_step_pallas(
-            t_now, *carry,
-            head_pct=cfg.head_percentile, tail_pct=cfg.tail_percentile,
-            margin=cfg.margin, bin_minutes=cfg.bin_minutes,
-            range_minutes=cfg.range_minutes,
-            cv_threshold=hybrid.cv_threshold,
-            min_samples=hybrid.min_samples,
-            oob_threshold=hybrid.oob_fraction_threshold,
-            standard_keep=hybrid.standard_keep_alive,
-            tile_apps=tile_apps, interpret=interpret)
+        out = fused_hybrid_sweep_step_pallas(
+            t_now, *carry, cfg_i32, cfg_f32, tile_apps=tile_apps,
+            interpret=interpret)
         return out, None
 
     carry, _ = jax.lax.scan(step, init, times.T)
-    carry = tuple(c[:n_real] for c in carry)
-    (last_t, cum, oob, _, _, prewarm, unload_at, cold, waste) = carry
-    total = cum[:, -1]
-    oob_heavy = policy_math.oob_heavy(total, oob,
-                                      hybrid.oob_fraction_threshold)
-    return cold, waste, oob_heavy, last_t, prewarm, unload_at
+    carry = tuple(c[..., :n_real, :] if c.ndim == 3 else c[..., :n_real]
+                  for c in carry)
+    (prev_t, cum, oob, _, _, prewarm, unload_at, cold, waste) = carry
+    total = cum[..., -1]
+    oob_heavy = policy_math.oob_heavy(total, oob, cfg_f32[:, 5:6])
+    # the clock is config-independent: any row of prev_t is the last event
+    return cold, waste, oob_heavy, prev_t[0], prewarm, unload_at
 
 
 def _rebase_chunk(sub: np.ndarray):
@@ -372,7 +495,9 @@ def _absolute_results(waste, last_t, prewarm, unload_at, t0, duration,
 
     Trailing waste is computed on the host in float64 from the un-rebased
     last-event clock, so the float32 engines never difference the large
-    absolute timestamps. Returns (waste64, prewarm64, keep64).
+    absolute timestamps. Works for [n] rows and stacked [S, n] sweeps
+    (``last_t``/``t0`` broadcast along the config axis). Returns
+    (waste64, prewarm64, keep64).
     """
     pre = np.asarray(prewarm, np.float64)
     ub = np.asarray(unload_at, np.float64)
@@ -383,45 +508,84 @@ def _absolute_results(waste, last_t, prewarm, unload_at, t0, duration,
     return waste, pre, ub - pre
 
 
-def simulate_hybrid_batch(trace: Trace, hybrid: HybridConfig,
-                          include_trailing: bool = True, *,
-                          app_chunk: Optional[int] = None,
-                          use_pallas: Optional[bool] = None) -> SimResult:
-    """Vectorized hybrid simulation + scalar post-pass for ARIMA apps.
+def _run_hybrid_sweep(trace: Trace, hybrids: Sequence[HybridConfig],
+                      include_trailing: bool = True, *,
+                      app_chunk: Optional[int] = None,
+                      use_pallas: Optional[bool] = None,
+                      interpret: Optional[bool] = None,
+                      tile_apps: int = 512) -> dict:
+    """S hybrid configs over one bucketed/chunked/rebased trace pass.
 
-    Buckets apps by event count, chunks each bucket to ``app_chunk`` apps
-    (bounding device state), and streams chunks with the next host→device
-    transfer overlapping the current chunk's scan. ``use_pallas`` defaults
-    to True on TPU (float32 fused kernel) and False elsewhere (float64 jnp
-    fused step, always oracle-exact). The Pallas path rebases each chunk by
-    the per-app first event, which makes it reproduce the scalar oracle's
-    cold counts exactly whenever an app's own activity *span* is
-    representable on its time grid in float32 (see the module docstring) —
-    true for bursty/short-lived apps however deep into a multi-week trace
-    they sit, but an app spanning weeks of sub-minute-grid events still
-    exceeds float32; pass ``use_pallas=False`` when oracle-exact counts
-    matter more than throughput.
+    Configs are banded by bin count (so no config pays for another's wider
+    histogram), but the trace preparation, each chunk's host→device
+    transfer, and — within a band — the whole time layer and per-group
+    histogram update are shared across the grid. ``use_pallas`` defaults to
+    True on TPU (float32 sweep kernel, per-chunk time rebasing) and False
+    elsewhere (float64 jnp sweep, always oracle-exact). The scalar ARIMA
+    post-pass runs per config on its own OOB-heavy apps.
     """
+    S = len(hybrids)
     times, counts = trace.to_padded()
     n = trace.n_apps
-    cold_parts = np.zeros(n, np.int64)
-    waste_parts = np.zeros(n, np.float64)
-    pre_parts = np.zeros(n, np.float64)
-    keep_parts = np.full(n, hybrid.standard_keep_alive, np.float64)
-    oob_flags = np.zeros(n, bool)
+    cold = np.zeros((S, n), np.int64)
+    waste = np.zeros((S, n), np.float64)
+    pre = np.zeros((S, n), np.float64)
+    keep = np.empty((S, n), np.float64)
+    for s, h in enumerate(hybrids):
+        keep[s, :] = h.standard_keep_alive
+    oob_flags = np.zeros((S, n), bool)
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
-    chunk = DEFAULT_APP_CHUNK if app_chunk is None else int(app_chunk)
-    cfg = hybrid.histogram
+    if interpret is None:
+        from ..kernels import ops
+        interpret = ops.INTERPRET
     duration = float(trace.duration_minutes)
 
-    def run_all(run_dtype, scan_fn, rebase: bool):
+    # Band configs by bin count; one scan per band, shared trace prep.
+    band_of = {}
+    for s, h in enumerate(hybrids):
+        band_of.setdefault(h.histogram.n_bins, []).append(s)
+    if app_chunk is None:
+        # Bands run sequentially per chunk, so peak state scales with the
+        # LARGEST band, not the whole grid. The Pallas path carries
+        # per-config [S_band, chunk, n_bins] histogram state; the factored
+        # jnp path carries it per GROUP, so its chunks can stay near the
+        # single-config size (bigger chunks amortize per-op overhead
+        # measurably on CPU).
+        widest = max(len(idx) for idx in band_of.values())
+        denom = widest if use_pallas else max(-(-widest // 16), 1)
+        chunk = max(DEFAULT_APP_CHUNK // denom, _MIN_AUTO_CHUNK)
+    else:
+        chunk = int(app_chunk)
+    bands = []
+    for n_bins, idx in sorted(band_of.items()):
+        cfgs = [hybrids[s] for s in idx]
+        if use_pallas:
+            ci, cf = _build_pallas_cfg(cfgs)
+            fn = partial(_hybrid_sweep_scan_pallas, cfg_i32=ci, cfg_f32=cf,
+                         n_bins=n_bins, interpret=interpret,
+                         tile_apps=tile_apps)
+        else:
+            blk = _build_sweep_block(cfgs, np.float64)
+            ids = _sweep_identities(blk)
+            if len(cfgs) == 1:
+                # scalar knob leaves -> the scan drops the config axis
+                # entirely (see _hybrid_sweep_scan)
+                blk = policy_math.HybridSweepBlock(
+                    *(np.asarray(x).reshape(()) for x in blk))
+            fn = lambda cur, blk=blk, nb=n_bins, ids=ids: _hybrid_sweep_scan(
+                cur, blk, _cum_dtype_for(cur.shape[1]), nb, ids)
+        bands.append((np.asarray(idx), fn))
+
+    run_dtype = np.float32 if use_pallas else np.float64
+
+    def run_all():
         # Streaming with a one-chunk lookahead: at most two chunk copies are
         # alive at once (the one scanning and the one whose host->device
         # transfer is enqueued ahead of blocking on the current result).
         def prep(sel_sub):
             sel, sub = sel_sub
-            if rebase:
+            if use_pallas:
                 sub, t0 = _rebase_chunk(sub)
             else:
                 t0 = np.zeros(len(sel), np.float64)
@@ -437,40 +601,37 @@ def simulate_hybrid_batch(trace: Trace, hybrid: HybridConfig,
             sel, cur, t0 = pending
             nxt = next(work, None)
             pending = None if nxt is None else prep(nxt)
-            cold, waste, oobh, last_t, prewarm, unload_at = scan_fn(cur)
-            cold_parts[sel] = np.asarray(cold)
-            oob_flags[sel] = np.asarray(oobh)
-            waste_parts[sel], pre_parts[sel], keep_parts[sel] = \
-                _absolute_results(waste, last_t, prewarm, unload_at, t0,
-                                  duration, include_trailing)
+            for idx, fn in bands:
+                c, w, oobh, last_t, pw, ub = fn(cur)
+                at = np.ix_(idx, sel)
+                cold[at] = np.asarray(c)
+                oob_flags[at] = np.asarray(oobh)
+                waste[at], pre[at], keep[at] = _absolute_results(
+                    w, last_t, pw, ub, t0, duration, include_trailing)
 
     if use_pallas:
-        from ..kernels import ops
-        run_all(np.float32,
-                lambda cur: _hybrid_scan_pallas(cur, cfg, hybrid,
-                                                ops.INTERPRET),
-                rebase=True)
+        run_all()
     else:
         with enable_x64():
-            run_all(np.float64,
-                    lambda cur: _hybrid_scan(cur, cfg, hybrid,
-                                             _cum_dtype_for(cur.shape[1])),
-                    rebase=False)
-    result = SimResult(cold_parts, counts.astype(np.int64), waste_parts,
-                       pre_parts, keep_parts)
-    if hybrid.use_arima and oob_flags.any():
-        # Re-simulate OOB-heavy apps with the full scalar policy (ARIMA path).
-        policy = HybridHistogramPolicy(hybrid)
-        arima_idx = np.where(oob_flags)[0]
-        scalar = simulate_scalar(trace, policy, include_trailing, arima_idx)
-        result.cold[arima_idx] = scalar.cold[arima_idx]
-        result.wasted_minutes[arima_idx] = scalar.wasted_minutes[arima_idx]
-        result.final_prewarm[arima_idx] = scalar.final_prewarm[arima_idx]
-        result.final_keep_alive[arima_idx] = scalar.final_keep_alive[arima_idx]
-    return result
+            run_all()
+
+    # ARIMA post-pass: re-simulate each config's OOB-heavy apps with the
+    # full scalar policy (the time-series path cannot run inside a scan).
+    for s, h in enumerate(hybrids):
+        if h.use_arima and oob_flags[s].any():
+            policy = HybridHistogramPolicy(h)
+            aidx = np.where(oob_flags[s])[0]
+            scalar = simulate_scalar(trace, policy, include_trailing, aidx)
+            cold[s, aidx] = scalar.cold[aidx]
+            waste[s, aidx] = scalar.wasted_minutes[aidx]
+            pre[s, aidx] = scalar.final_prewarm[aidx]
+            keep[s, aidx] = scalar.final_keep_alive[aidx]
+    return dict(cold=cold, invocations=counts.astype(np.int64),
+                wasted_minutes=waste, final_prewarm=pre,
+                final_keep_alive=keep)
 
 
-# -- pre-PR batched engine (benchmark/regression baseline) -------------------
+# -- pre-sweep batched engine (benchmark/regression baseline) ----------------
 
 
 def _hybrid_step_reference(cfg: HistogramConfig, hybrid: HybridConfig, carry,
@@ -552,9 +713,10 @@ def _hybrid_scan_reference(times, cfg: HistogramConfig, hybrid: HybridConfig):
     return cold, waste, oob_heavy, last_t, prewarm, unload_at
 
 
-def simulate_hybrid_batch_reference(trace: Trace, hybrid: HybridConfig,
-                                    include_trailing: bool = True) -> SimResult:
-    """Pre-fused batched hybrid engine (float32, per-step cumsum recompute,
+def _simulate_hybrid_batch_reference(trace: Trace, hybrid: HybridConfig,
+                                     include_trailing: bool = True
+                                     ) -> SimResult:
+    """Pre-sweep batched hybrid engine (float32, per-step cumsum recompute,
     per-chunk time rebasing like the Pallas path)."""
     times, counts = trace.to_padded()
     n = trace.n_apps
@@ -588,12 +750,58 @@ def simulate_hybrid_batch_reference(trace: Trace, hybrid: HybridConfig,
     return result
 
 
+# --------------------------------------------------------------------------
+# Deprecated shims over the experiment API (zero in-repo callers)
+# --------------------------------------------------------------------------
+
+
+def _warn_deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.core.simulator.{old} is deprecated; use "
+        f"repro.core.experiment.{new} instead", DeprecationWarning,
+        stacklevel=3)
+
+
+def simulate_fixed_batch(trace: Trace, keep_alive_minutes: float,
+                         include_trailing: bool = True) -> SimResult:
+    """Deprecated: use ``experiment.run(trace, FixedSpec(keep_alive))``."""
+    _warn_deprecated("simulate_fixed_batch", "run(trace, FixedSpec(...))")
+    from .experiment import EngineOptions, FixedSpec, run
+    return run(trace, FixedSpec(float(keep_alive_minutes)), engine="fused",
+               options=EngineOptions(include_trailing=include_trailing))
+
+
+def simulate_hybrid_batch(trace: Trace, hybrid: HybridConfig,
+                          include_trailing: bool = True, *,
+                          app_chunk: Optional[int] = None,
+                          use_pallas: Optional[bool] = None) -> SimResult:
+    """Deprecated: use ``experiment.run(trace, HybridSpec(...))`` (or
+    ``experiment.sweep`` for grids — the whole point of the new API)."""
+    _warn_deprecated("simulate_hybrid_batch", "run(trace, HybridSpec(...))")
+    from .experiment import EngineOptions, HybridSpec, run
+    engine = ("auto" if use_pallas is None
+              else "pallas" if use_pallas else "fused")
+    return run(trace, HybridSpec.from_config(hybrid), engine=engine,
+               options=EngineOptions(include_trailing=include_trailing,
+                                     app_chunk=app_chunk))
+
+
+def simulate_hybrid_batch_reference(trace: Trace, hybrid: HybridConfig,
+                                    include_trailing: bool = True) -> SimResult:
+    """Deprecated: use ``experiment.run(..., engine="reference")``."""
+    _warn_deprecated("simulate_hybrid_batch_reference",
+                     'run(..., engine="reference")')
+    return _simulate_hybrid_batch_reference(trace, hybrid, include_trailing)
+
+
 def simulate(trace: Trace, policy, include_trailing: bool = True) -> SimResult:
-    """Dispatch: vectorized engines for the known policies, scalar otherwise."""
-    if isinstance(policy, FixedKeepAlivePolicy):
-        return simulate_fixed_batch(trace, policy.keep_alive, include_trailing)
-    if isinstance(policy, HybridHistogramPolicy):
-        return simulate_hybrid_batch(trace, policy.cfg, include_trailing)
-    if isinstance(policy, HybridConfig):
-        return simulate_hybrid_batch(trace, policy, include_trailing)
-    return simulate_scalar(trace, policy, include_trailing)
+    """Deprecated dispatch: use ``experiment.run(trace, spec)``; arbitrary
+    ``Policy`` objects still fall back to the scalar engine."""
+    _warn_deprecated("simulate", "run(trace, spec)")
+    from .experiment import EngineOptions, as_spec, run
+    try:
+        spec = as_spec(policy)
+    except TypeError:
+        return simulate_scalar(trace, policy, include_trailing)
+    return run(trace, spec,
+               options=EngineOptions(include_trailing=include_trailing))

@@ -18,7 +18,14 @@ in :mod:`repro.core.policy_math` with ``gather=False`` (masked-reduction
 forms — compare-against-iota instead of row gathers), which trace inside
 Pallas identically to the ``lax.scan`` engines.
 
-Grid: (n_apps / TA,) — fully parallel over app tiles.
+Two kernels:
+
+  * :func:`policy_update_pallas` — one scheduling tick of the control
+    plane (grid (n_apps / TA,), fully parallel over app tiles);
+  * :func:`fused_hybrid_sweep_step_pallas` — one simulator scan step for S
+    stacked policy configurations (grid (S, n_apps / TA)); the per-config
+    knobs arrive as a scalar-prefetched SMEM config block, so a new grid
+    point is a new SMEM row, not a recompile.
 """
 from __future__ import annotations
 
@@ -27,6 +34,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from ..core import policy_math
 from . import compat
@@ -144,29 +152,113 @@ def policy_update_pallas(counts, oob, total, cv_sum, cv_sum_sq, bins, active,
 
 
 # ---------------------------------------------------------------------------
-# Fused simulator step: bin-update + CV + percentile decision + warm/cold
-# accounting, one pass per scan step over the whole fleet.
+# Fused simulator sweep step: bin-update + CV + percentile decision +
+# warm/cold accounting for S stacked policy configurations, one pass per
+# scan step over the whole fleet. The per-config knobs ride in SMEM as a
+# scalar-prefetched config block — adding a grid point changes data, not
+# the kernel.
 # ---------------------------------------------------------------------------
 
+# Column layout of the scalar-prefetched config blocks (see
+# ``repro.core.simulator._build_pallas_cfg``).
+CFG_I32_COLS = ("n_bins", "head_numer", "tail_numer", "min_samples")
+CFG_F32_COLS = ("margin_lo", "margin_hi", "bin_minutes", "range_f32",
+                "cv_threshold", "oob_threshold", "standard_keep")
 
-def _fused_step_kernel(t_ref, prev_ref, cum_ref, oob_ref, cvs_ref, cvss_ref,
-                       pre_ref, unload_ref, cold_ref, waste_ref,
+
+def _sweep_step_kernel(cfg_i_ref, cfg_f_ref, t_ref, prev_ref, cum_ref,
+                       oob_ref, cvs_ref, cvss_ref, pre_ref, unload_ref,
+                       cold_ref, waste_ref,
                        nprev_ref, ncum_ref, noob_ref, ncvs_ref, ncvss_ref,
-                       npre_ref, nunload_ref, ncold_ref, nwaste_ref, **params):
-    """One hybrid-policy scan step for a tile of TA apps.
+                       npre_ref, nunload_ref, ncold_ref, nwaste_ref):
+    """One hybrid-policy scan step for (config s, tile of TA apps).
 
-    Carries *cumulative* bin counts (``cum``) and the residency bounds
-    (prewarm, unload_at). The body is exactly the single-source step in
+    ``cfg_i_ref``/``cfg_f_ref`` are the scalar-prefetched [S, k] config
+    blocks living in SMEM; program_id(0) selects this instance's row. The
+    body is exactly the single-source step in
     ``policy_math.fused_hybrid_step_math`` with the Pallas-lowerable
-    ``gather=False`` lookup strategy.
+    ``gather=False`` lookup strategy and *traced* config scalars.
     """
+    s = pl.program_id(0)
+    cfg = policy_math.HybridStepConfig(
+        n_bins=cfg_i_ref[s, 0], head_numer=cfg_i_ref[s, 1],
+        tail_numer=cfg_i_ref[s, 2], min_samples=cfg_i_ref[s, 3],
+        margin_lo=cfg_f_ref[s, 0], margin_hi=cfg_f_ref[s, 1],
+        bin_minutes=cfg_f_ref[s, 2], bin_f32=cfg_f_ref[s, 2],
+        range_f32=cfg_f_ref[s, 3], cv_threshold=cfg_f_ref[s, 4],
+        oob_threshold=cfg_f_ref[s, 5], standard_keep=cfg_f_ref[s, 6])
     out = policy_math.fused_hybrid_step_math(
-        t_ref[...], prev_ref[...], cum_ref[...], oob_ref[...], cvs_ref[...],
-        cvss_ref[...], pre_ref[...], unload_ref[...], cold_ref[...],
-        waste_ref[...], gather=False, **params)
-    (nprev_ref[...], ncum_ref[...], noob_ref[...], ncvs_ref[...],
-     ncvss_ref[...], npre_ref[...], nunload_ref[...], ncold_ref[...],
-     nwaste_ref[...]) = out
+        t_ref[...], prev_ref[0], cum_ref[0], oob_ref[0], cvs_ref[0],
+        cvss_ref[0], pre_ref[0], unload_ref[0], cold_ref[0], waste_ref[0],
+        cfg=cfg, gather=False)
+    (nprev_ref[0], ncum_ref[0], noob_ref[0], ncvs_ref[0], ncvss_ref[0],
+     npre_ref[0], nunload_ref[0], ncold_ref[0], nwaste_ref[0]) = out
+
+
+def fused_hybrid_sweep_step_pallas(t_now, prev_t, cum, oob, cv_sum,
+                                   cv_sum_sq, prewarm, unload_at, cold,
+                                   waste, cfg_i32, cfg_f32, *,
+                                   tile_apps: int = 512,
+                                   interpret: bool = True):
+    """One fused hybrid-simulator scan step for S configs x the whole fleet.
+
+    ``t_now`` is [n_apps] (the trace column, shared by every config);
+    per-config state is stacked [S, n_apps] (``cum`` is [S, n_apps, n_bins]
+    i32 *cumulative* in-bounds counts; (``prewarm``, ``unload_at``) are the
+    residency bounds decided after each app's previous event). ``cfg_i32``
+    [S, 4] / ``cfg_f32`` [S, 7] are the per-config knob blocks (column
+    layout ``CFG_I32_COLS``/``CFG_F32_COLS``), delivered to SMEM via scalar
+    prefetch. Grid: (S, n_apps / TA) — fully parallel. Returns the updated
+    (prev_t, cum, oob, cv_sum, cv_sum_sq, prewarm, unload_at, cold, waste).
+    Designed to sit inside ``jax.lax.scan`` over padded event columns.
+    """
+    S, n_apps, n_bins = cum.shape
+    if n_apps == 0 or S == 0:
+        return (prev_t, cum, oob, cv_sum, cv_sum_sq, prewarm, unload_at,
+                cold, waste)
+    TA = min(tile_apps, n_apps)
+    pad = (-n_apps) % TA
+    if pad:
+        pv = lambda x, fill=0: jnp.concatenate(
+            [x, jnp.full(x.shape[:-1] + (pad,), fill, x.dtype)], axis=-1)
+        t_now = pv(t_now, jnp.inf)        # padded rows are never active
+        prev_t = pv(prev_t)
+        cum = jnp.concatenate(
+            [cum, jnp.zeros((S, pad, n_bins), cum.dtype)], axis=1)
+        oob, cv_sum, cv_sum_sq = pv(oob), pv(cv_sum), pv(cv_sum_sq)
+        prewarm, unload_at = pv(prewarm), pv(unload_at)
+        cold, waste = pv(cold), pv(waste)
+        n_apps += pad
+    grid = (S, n_apps // TA)
+
+    tvec = pl.BlockSpec((TA,), lambda s, i, *refs: (i,))
+    vec = pl.BlockSpec((1, TA), lambda s, i, *refs: (s, i))
+    mat = pl.BlockSpec((1, TA, n_bins), lambda s, i, *refs: (s, i, 0))
+    f32v = jax.ShapeDtypeStruct((S, n_apps), jnp.float32)
+    i32v = jax.ShapeDtypeStruct((S, n_apps), jnp.int32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[tvec, vec, mat, vec, vec, vec, vec, vec, vec, vec],
+        out_specs=[vec, mat, vec, vec, vec, vec, vec, vec, vec],
+    )
+    outs = pl.pallas_call(
+        _sweep_step_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            f32v,
+            jax.ShapeDtypeStruct((S, n_apps, n_bins), jnp.int32),
+            i32v, f32v, f32v, f32v, f32v, i32v, f32v,
+        ],
+        compiler_params=compat.compiler_params(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(cfg_i32, cfg_f32, t_now, prev_t, cum, oob, cv_sum, cv_sum_sq, prewarm,
+      unload_at, cold, waste)
+    if pad:
+        outs = tuple(o[:, :-pad] if o.ndim == 2 else o[:, :-pad, :]
+                     for o in outs)
+    return outs
 
 
 def fused_hybrid_step_pallas(t_now, prev_t, cum, oob, cv_sum, cv_sum_sq,
@@ -176,56 +268,29 @@ def fused_hybrid_step_pallas(t_now, prev_t, cum, oob, cv_sum, cv_sum_sq,
                              cv_threshold=2.0, min_samples=5,
                              oob_threshold=0.5, standard_keep=240.0,
                              tile_apps: int = 512, interpret: bool = True):
-    """One fused hybrid-simulator scan step for the whole fleet.
+    """Single-config fused scan step: the S=1 slice of the sweep kernel.
 
-    All vectors are [n_apps]; ``cum`` is [n_apps, n_bins] i32 *cumulative*
-    in-bounds counts; (``prewarm``, ``unload_at``) are the residency bounds
-    decided after each app's previous event. Returns the updated
-    (prev_t, cum, oob, cv_sum, cv_sum_sq, prewarm, unload_at, cold, waste).
-    Designed to sit inside ``jax.lax.scan`` over padded event columns.
+    Kept as the scalar-parity/benchmark surface (``ops.fused_hybrid_step``);
+    the knobs are packed into a one-row SMEM config block exactly as the
+    sweep driver would (``HybridStepConfig.from_host`` owns the rounding).
     """
     n_apps, n_bins = cum.shape
     if n_apps == 0:
         return (prev_t, cum, oob, cv_sum, cv_sum_sq, prewarm, unload_at,
                 cold, waste)
-    TA = min(tile_apps, n_apps)
-    pad = (-n_apps) % TA
-    if pad:
-        pv = lambda x, fill=0: jnp.concatenate(
-            [x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)])
-        t_now = pv(t_now, jnp.inf)        # padded rows are never active
-        prev_t, cum, oob = pv(prev_t), pv(cum), pv(oob)
-        cv_sum, cv_sum_sq = pv(cv_sum), pv(cv_sum_sq)
-        prewarm, unload_at = pv(prewarm), pv(unload_at)
-        cold, waste = pv(cold), pv(waste)
-        n_apps += pad
-    grid = (n_apps // TA,)
-    kernel = functools.partial(
-        _fused_step_kernel, n_bins=n_bins, head_pct=head_pct,
-        tail_pct=tail_pct, margin=margin, bin_minutes=bin_minutes,
-        range_minutes=range_minutes, cv_threshold=cv_threshold,
-        min_samples=min_samples, oob_threshold=oob_threshold,
-        standard_keep=standard_keep)
-
-    vec = pl.BlockSpec((TA,), lambda i: (i,))
-    mat = pl.BlockSpec((TA, n_bins), lambda i: (i, 0))
-    f32v = jax.ShapeDtypeStruct((n_apps,), jnp.float32)
-    i32v = jax.ShapeDtypeStruct((n_apps,), jnp.int32)
-    outs = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[vec, vec, mat, vec, vec, vec, vec, vec, vec, vec],
-        out_specs=[vec, mat, vec, vec, vec, vec, vec, vec, vec],
-        out_shape=[
-            f32v,
-            jax.ShapeDtypeStruct((n_apps, n_bins), jnp.int32),
-            i32v, f32v, f32v, f32v, f32v, i32v, f32v,
-        ],
-        compiler_params=compat.compiler_params(
-            dimension_semantics=("parallel",)),
-        interpret=interpret,
-    )(t_now, prev_t, cum, oob, cv_sum, cv_sum_sq, prewarm, unload_at, cold,
-      waste)
-    if pad:
-        outs = tuple(o[:-pad] for o in outs)
-    return outs
+    c = policy_math.HybridStepConfig.from_host(
+        n_bins=n_bins, head_pct=head_pct, tail_pct=tail_pct, margin=margin,
+        bin_minutes=bin_minutes, range_minutes=range_minutes,
+        cv_threshold=cv_threshold, min_samples=min_samples,
+        oob_threshold=oob_threshold, standard_keep=standard_keep)
+    cfg_i32 = jnp.asarray(
+        [[c.n_bins, c.head_numer, c.tail_numer, c.min_samples]], jnp.int32)
+    cfg_f32 = jnp.asarray(
+        [[c.margin_lo, c.margin_hi, c.bin_f32, c.range_f32, c.cv_threshold,
+          c.oob_threshold, c.standard_keep]], jnp.float32)
+    outs = fused_hybrid_sweep_step_pallas(
+        t_now, prev_t[None], cum[None], oob[None], cv_sum[None],
+        cv_sum_sq[None], prewarm[None], unload_at[None], cold[None],
+        waste[None], cfg_i32, cfg_f32, tile_apps=tile_apps,
+        interpret=interpret)
+    return tuple(o[0] for o in outs)

@@ -52,11 +52,17 @@ class ClusterResult:
 
 
 class ClusterSim:
-    """Controller + N invoker workers, each with its own warm pool."""
+    """Controller + N invoker workers, each with its own warm pool.
 
-    def __init__(self, registry: Registry, make_policy, cfg: ClusterConfig):
+    ``policy`` is a declarative PolicySpec (repro.core.experiment) — every
+    worker builds its own stateful policy from it — or, for backward
+    compatibility, a zero-arg factory returning ``Policy`` objects.
+    """
+
+    def __init__(self, registry: Registry, policy, cfg: ClusterConfig):
         self.registry = registry
         self.cfg = cfg
+        make_policy = policy if callable(policy) else policy.build
         self.pools = [WarmPool(registry, make_policy(),
                                budget_bytes=cfg.hbm_budget_bytes)
                       for _ in range(cfg.n_workers)]

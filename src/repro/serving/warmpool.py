@@ -54,8 +54,12 @@ class PoolStats:
 
 
 class WarmPool:
-    def __init__(self, registry: Registry, policy: Policy,
+    def __init__(self, registry: Registry, policy,
                  budget_bytes: float = float("inf")):
+        # ``policy`` may be a stateful Policy or a declarative PolicySpec
+        # (repro.core.experiment) — the same specs the simulators sweep.
+        if not isinstance(policy, Policy) and hasattr(policy, "build"):
+            policy = policy.build()
         self.registry = registry
         self.policy = policy
         self.budget = budget_bytes

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core.dataset_export import export, load_invocations
-from repro.core.policy import FixedKeepAlivePolicy, HybridConfig, HybridHistogramPolicy
+from repro.core.experiment import FixedSpec, HybridSpec
 from repro.core.workload import generate_trace
 from repro.serving.registry import ModelEndpoint, Registry
 from repro.serving.scheduler import Scheduler, SchedulerConfig
@@ -55,7 +55,7 @@ def _mk_pool(policy):
 
 
 def test_scheduler_batches_bursts():
-    pool = _mk_pool(FixedKeepAlivePolicy(10.0))
+    pool = _mk_pool(FixedSpec(10.0))
     sched = Scheduler(pool, SchedulerConfig(max_batch=4))
     # 8 simultaneous requests to one endpoint -> 2 batches
     events = [(1.0, "app-000000", 0.1)] * 8
@@ -70,7 +70,7 @@ def test_scheduler_batches_bursts():
 
 
 def test_scheduler_warm_after_first_batch():
-    pool = _mk_pool(FixedKeepAlivePolicy(10.0))
+    pool = _mk_pool(FixedSpec(10.0))
     sched = Scheduler(pool, SchedulerConfig(max_batch=2))
     sched.run([(0.0, "app-000001", 0.05)])
     first = sched.completed[0]
@@ -83,7 +83,7 @@ def test_scheduler_warm_after_first_batch():
 
 
 def test_scheduler_latency_accounting():
-    pool = _mk_pool(HybridHistogramPolicy(HybridConfig(use_arima=False)))
+    pool = _mk_pool(HybridSpec(use_arima=False))
     sched = Scheduler(pool)
     done = sched.run([(0.0, "app-000002", 0.2), (100.0, "app-000002", 0.2)])
     for r in done:

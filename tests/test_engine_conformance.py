@@ -1,13 +1,13 @@
 """Differential conformance harness across the four hybrid-policy engines.
 
-Engines under test (all routed through ``repro.core.policy_math``):
+Engines under test (all routed through ``repro.core.policy_math`` and the
+``repro.core.experiment.run`` front door):
 
-  * ``simulate_scalar``                     — float64 event-driven oracle
-  * ``simulate_hybrid_batch`` (jnp)         — float64 fused lax.scan engine
-  * ``simulate_hybrid_batch`` (Pallas)      — float32 fused TPU kernel
-                                              (interpret mode on CPU)
-  * ``simulate_hybrid_batch_reference``     — float32 legacy per-step-cumsum
-                                              engine
+  * ``engine="scalar"``     — float64 event-driven oracle
+  * ``engine="fused"``      — float64 factored lax.scan sweep engine
+  * ``engine="pallas"``     — float32 sweep TPU kernel (interpret on CPU),
+                              SMEM config block via scalar prefetch
+  * ``engine="reference"``  — float32 legacy per-step-cumsum engine
 
 Assertions: exact cold-count, invocation, and final-window parity for every
 engine; waste is bit-exact for the float64 engine (same accumulation order
@@ -24,24 +24,27 @@ TPU's float64-free numerics.
 import numpy as np
 import pytest
 
+from repro.core.experiment import EngineOptions, HybridSpec, run
 from repro.core.policy import HybridConfig, HybridHistogramPolicy
-from repro.core.simulator import (simulate_hybrid_batch,
-                                  simulate_hybrid_batch_reference,
-                                  simulate_scalar)
+from repro.core.simulator import simulate_scalar
 
 from golden_traces import (CFG48, bursty_subms_multiweek, coarse_twoweek,
                            synthesized_small, GOLDEN_TRACES)
 
+
+def _run(t, cfg, engine, **opts):
+    return run(t, HybridSpec.from_config(cfg), engine=engine,
+               options=EngineOptions(**opts))
+
+
 # name -> (runner, waste is bit-exact vs the float64 oracle)
 ENGINES = {
-    "jnp_f64": (lambda t, cfg: simulate_hybrid_batch(t, cfg,
-                                                     use_pallas=False), True),
-    "jnp_f64_chunked": (lambda t, cfg: simulate_hybrid_batch(
-        t, cfg, use_pallas=False, app_chunk=7), True),
-    "pallas_f32": (lambda t, cfg: simulate_hybrid_batch(
-        t, cfg, use_pallas=True, app_chunk=16), False),
-    "reference_f32": (lambda t, cfg: simulate_hybrid_batch_reference(t, cfg),
-                      False),
+    "jnp_f64": (lambda t, cfg: _run(t, cfg, "fused"), True),
+    "jnp_f64_chunked": (lambda t, cfg: _run(t, cfg, "fused", app_chunk=7),
+                        True),
+    "pallas_f32": (lambda t, cfg: _run(t, cfg, "pallas", app_chunk=16),
+                   False),
+    "reference_f32": (lambda t, cfg: _run(t, cfg, "reference"), False),
 }
 
 TRACES = {
@@ -86,8 +89,8 @@ def test_float32_engines_agree_exactly():
     """The two float32 engines share the math AND the dtype: identical
     results bit-for-bit, waste included."""
     trace = coarse_twoweek()
-    a = simulate_hybrid_batch(trace, CFG48, use_pallas=True, app_chunk=16)
-    b = simulate_hybrid_batch_reference(trace, CFG48)
+    a = _run(trace, CFG48, "pallas", app_chunk=16)
+    b = _run(trace, CFG48, "reference")
     np.testing.assert_array_equal(a.cold, b.cold)
     np.testing.assert_array_equal(a.final_prewarm, b.final_prewarm)
     np.testing.assert_array_equal(a.final_keep_alive, b.final_keep_alive)
@@ -103,10 +106,8 @@ def test_time_translation_invariance_batched():
         specs=None, times=[t + shift for t in base.times],
         duration_minutes=base.duration_minutes + shift)
     for tr_a, tr_b in ((base, shifted),):
-        a = simulate_hybrid_batch(tr_a, CFG48, use_pallas=False,
-                                  include_trailing=False)
-        b = simulate_hybrid_batch(tr_b, CFG48, use_pallas=False,
-                                  include_trailing=False)
+        a = _run(tr_a, CFG48, "fused", include_trailing=False)
+        b = _run(tr_b, CFG48, "fused", include_trailing=False)
         np.testing.assert_array_equal(a.cold, b.cold)
         np.testing.assert_array_equal(a.wasted_minutes, b.wasted_minutes)
         np.testing.assert_array_equal(a.final_prewarm, b.final_prewarm)
@@ -120,7 +121,7 @@ def test_arima_postpass_override_consistency():
     trace = coarse_twoweek(n_apps=16, seed=13)
     cfg = HybridConfig(histogram=CFG48.histogram, use_arima=True)
     oracle = simulate_scalar(trace, HybridHistogramPolicy(cfg))
-    got = simulate_hybrid_batch(trace, cfg, use_pallas=False)
+    got = _run(trace, cfg, "fused")
     np.testing.assert_array_equal(got.cold, oracle.cold)
     np.testing.assert_array_equal(got.final_prewarm, oracle.final_prewarm)
     np.testing.assert_array_equal(got.final_keep_alive,

@@ -12,10 +12,7 @@ import os
 import numpy as np
 import pytest
 
-from repro.core.policy import HybridHistogramPolicy
-from repro.core.simulator import (simulate_hybrid_batch,
-                                  simulate_hybrid_batch_reference,
-                                  simulate_scalar)
+from repro.core.experiment import HybridSpec, run
 
 from golden_traces import GOLDEN_TRACES
 
@@ -23,11 +20,14 @@ GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                           "golden")
 
 ENGINES = {
-    "scalar": lambda t, cfg: simulate_scalar(t, HybridHistogramPolicy(cfg)),
-    "jnp_f64": lambda t, cfg: simulate_hybrid_batch(t, cfg, use_pallas=False),
-    "pallas_f32": lambda t, cfg: simulate_hybrid_batch(t, cfg,
-                                                       use_pallas=True),
-    "reference_f32": lambda t, cfg: simulate_hybrid_batch_reference(t, cfg),
+    "scalar": lambda t, cfg: run(t, HybridSpec.from_config(cfg),
+                                 engine="scalar"),
+    "jnp_f64": lambda t, cfg: run(t, HybridSpec.from_config(cfg),
+                                  engine="fused"),
+    "pallas_f32": lambda t, cfg: run(t, HybridSpec.from_config(cfg),
+                                     engine="pallas"),
+    "reference_f32": lambda t, cfg: run(t, HybridSpec.from_config(cfg),
+                                        engine="reference"),
 }
 
 

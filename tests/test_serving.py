@@ -4,8 +4,8 @@ import numpy as np
 import pytest
 
 from repro.configs import get, reduced
-from repro.core.policy import (FixedKeepAlivePolicy, HybridConfig,
-                               HybridHistogramPolicy)
+from repro.core.experiment import FixedSpec, HybridSpec
+from repro.core.policy import FixedKeepAlivePolicy
 from repro.core.workload import AppSpec, Trace, generate_trace
 from repro.runtime.straggler import HedgePolicy
 from repro.serving.cluster_sim import ClusterConfig, ClusterSim
@@ -27,6 +27,7 @@ def tiny_registry(n=4, weight_bytes=int(1e9)):
 
 def test_warmpool_fixed_keepalive():
     reg = tiny_registry()
+    # legacy stateful Policy objects are still accepted alongside PolicySpec
     pool = WarmPool(reg, FixedKeepAlivePolicy(10.0))
     cold, _ = pool.on_request("app-000000", 0.0)
     assert cold
@@ -44,7 +45,7 @@ def test_warmpool_prewarm_hits():
     """Once the histogram learns a 30-min period, arrivals are warm AND the
     image is not resident for the whole gap (memory saved)."""
     reg = tiny_registry()
-    pool = WarmPool(reg, HybridHistogramPolicy(HybridConfig(use_arima=False)))
+    pool = WarmPool(reg, HybridSpec(use_arima=False))
     t = 0.0
     colds = []
     for i in range(40):
@@ -65,7 +66,7 @@ def test_warmpool_prewarm_hits():
 
 def test_warmpool_budget_eviction():
     reg = tiny_registry(n=4, weight_bytes=int(1e9))
-    pool = WarmPool(reg, FixedKeepAlivePolicy(240.0), budget_bytes=2.5e9)
+    pool = WarmPool(reg, FixedSpec(240.0), budget_bytes=2.5e9)
     for i, t in [(0, 0.0), (1, 60.0), (2, 120.0)]:
         pool.on_request(f"app-{i:06d}", t)
         pool.on_request_end(f"app-{i:06d}", t + 1)
@@ -81,7 +82,7 @@ def test_warmpool_tick_expires_before_prewarming():
     evicted an app whose keep-alive had already lapsed — a spurious eviction
     plus mid-iteration mutation of the states being looped over."""
     reg = tiny_registry(n=2, weight_bytes=int(1e9))
-    pool = WarmPool(reg, FixedKeepAlivePolicy(10.0), budget_bytes=1e9)
+    pool = WarmPool(reg, FixedSpec(10.0), budget_bytes=1e9)
     # app 1 first in dict order, with a due pre-warm
     st_b = pool._st("app-000001")
     # app 0 loaded, keep-alive expiring before the tick time
@@ -104,7 +105,7 @@ def test_warmpool_tick_prewarms_fire_in_time_order():
     processed last, so it wins the single slot (deterministically, not in
     dict insertion order)."""
     reg = tiny_registry(n=2, weight_bytes=int(1e9))
-    pool = WarmPool(reg, FixedKeepAlivePolicy(10.0), budget_bytes=1e9)
+    pool = WarmPool(reg, FixedSpec(10.0), budget_bytes=1e9)
     # insert app 1 first so dict order disagrees with schedule order
     st_b = pool._st("app-000001")
     st_a = pool._st("app-000000")
@@ -119,14 +120,14 @@ def test_warmpool_tick_prewarms_fire_in_time_order():
 
 def test_warmpool_state_roundtrip():
     reg = tiny_registry()
-    pool = WarmPool(reg, HybridHistogramPolicy(HybridConfig(use_arima=False)))
+    pool = WarmPool(reg, HybridSpec(use_arima=False))
     t = 0.0
     for _ in range(20):
         pool.on_request("app-000000", t)
         pool.on_request_end("app-000000", t + 1.0)
         t += 15 * MIN
     sd = pool.state_dict()
-    pool2 = WarmPool(reg, HybridHistogramPolicy(HybridConfig(use_arima=False)))
+    pool2 = WarmPool(reg, HybridSpec(use_arima=False))
     pool2.load_state_dict(sd)
     # the learned windows survive the controller restart
     assert pool2.state["app-000000"].windows == pool.state["app-000000"].windows
@@ -150,11 +151,10 @@ def _periodic_trace(n_apps=6, period=20.0, days=0.5):
 def test_cluster_sim_hybrid_beats_fixed_on_memory():
     trace = _periodic_trace()
     reg = tiny_registry(n=6)
-    fixed = ClusterSim(reg, lambda: FixedKeepAlivePolicy(10.0),
+    fixed = ClusterSim(reg, FixedSpec(10.0),
                        ClusterConfig(n_workers=3)).run(trace)
-    hyb = ClusterSim(reg, lambda: HybridHistogramPolicy(
-        HybridConfig(use_arima=False)),
-        ClusterConfig(n_workers=3)).run(trace)
+    hyb = ClusterSim(reg, HybridSpec(use_arima=False),
+                     ClusterConfig(n_workers=3)).run(trace)
     assert hyb.cold_pct_p75 <= fixed.cold_pct_p75 + 1e-9
     assert hyb.wasted_gb_minutes < fixed.wasted_gb_minutes
 
@@ -162,9 +162,9 @@ def test_cluster_sim_hybrid_beats_fixed_on_memory():
 def test_cluster_sim_controller_restart_mid_run():
     trace = _periodic_trace()
     reg = tiny_registry(n=6)
-    res = ClusterSim(reg, lambda: HybridHistogramPolicy(
-        HybridConfig(use_arima=False)),
-        ClusterConfig(n_workers=3, checkpoint_at_minute=300.0)).run(trace)
+    res = ClusterSim(reg, HybridSpec(use_arima=False),
+                     ClusterConfig(n_workers=3,
+                                   checkpoint_at_minute=300.0)).run(trace)
     assert res.restored_mid_run
     # restart must not blow up cold starts (windows were persisted)
     assert res.cold_pct_p75 < 30.0

@@ -3,10 +3,9 @@ reproduction of the paper's headline policy comparisons (trend-level)."""
 import numpy as np
 import pytest
 
-from repro.core import (FixedKeepAlivePolicy, HybridConfig,
-                        HybridHistogramPolicy, NoUnloadingPolicy,
-                        generate_trace, simulate, simulate_fixed_batch,
-                        simulate_hybrid_batch, simulate_scalar)
+from repro.core import (EngineOptions, FixedKeepAlivePolicy, FixedSpec,
+                        HybridConfig, HybridHistogramPolicy, HybridSpec,
+                        NoUnloadSpec, generate_trace, run, simulate_scalar)
 from repro.core.workload import sample_apps
 
 
@@ -24,7 +23,7 @@ def int_trace():
 
 
 def test_fixed_batch_matches_scalar(int_trace):
-    fb = simulate_fixed_batch(int_trace, 10.0)
+    fb = run(int_trace, FixedSpec(10.0), engine="fused")
     fs = simulate_scalar(int_trace, FixedKeepAlivePolicy(10.0))
     np.testing.assert_array_equal(fb.cold, fs.cold)
     np.testing.assert_allclose(fb.wasted_minutes, fs.wasted_minutes,
@@ -33,7 +32,7 @@ def test_fixed_batch_matches_scalar(int_trace):
 
 def test_hybrid_batch_matches_scalar(int_trace):
     cfg = HybridConfig(use_arima=False)
-    hb = simulate_hybrid_batch(int_trace, cfg)
+    hb = run(int_trace, HybridSpec.from_config(cfg))
     hs = simulate_scalar(int_trace, HybridHistogramPolicy(cfg))
     np.testing.assert_array_equal(hb.cold, hs.cold)
     np.testing.assert_allclose(hb.wasted_minutes, hs.wasted_minutes,
@@ -41,21 +40,21 @@ def test_hybrid_batch_matches_scalar(int_trace):
 
 
 def test_first_invocation_always_cold(trace):
-    res = simulate(trace, NoUnloadingPolicy())
+    res = run(trace, NoUnloadSpec())
     assert np.all(res.cold >= 1)
 
 
 def test_no_unloading_is_lower_bound(trace):
-    nou = simulate(trace, NoUnloadingPolicy())
-    f10 = simulate(trace, FixedKeepAlivePolicy(10.0))
+    nou = run(trace, NoUnloadSpec())
+    f10 = run(trace, FixedSpec(10.0))
     assert np.all(nou.cold <= f10.cold)
     # no-unloading: exactly one cold start per app
     assert np.all(nou.cold == 1)
 
 
 def test_longer_keepalive_fewer_colds_more_waste(trace):
-    f10 = simulate(trace, FixedKeepAlivePolicy(10.0))
-    f120 = simulate(trace, FixedKeepAlivePolicy(120.0))
+    f10 = run(trace, FixedSpec(10.0))
+    f120 = run(trace, FixedSpec(120.0))
     assert f120.cold.sum() < f10.cold.sum()
     assert f120.total_wasted > f10.total_wasted
     assert f120.cold_pct_percentile(75) < f10.cold_pct_percentile(75)
@@ -64,8 +63,8 @@ def test_longer_keepalive_fewer_colds_more_waste(trace):
 def test_hybrid_pareto_dominates_fixed(trace):
     """The paper's headline (Fig. 15): hybrid gives fewer cold starts than
     the 10-minute fixed policy while using LESS memory."""
-    f10 = simulate(trace, FixedKeepAlivePolicy(10.0))
-    hyb = simulate(trace, HybridConfig(use_arima=False))
+    f10 = run(trace, FixedSpec(10.0))
+    hyb = run(trace, HybridSpec(use_arima=False))
     assert hyb.cold_pct_percentile(75) < f10.cold_pct_percentile(75) / 1.5
     assert hyb.total_wasted < 1.15 * f10.total_wasted
 
@@ -73,12 +72,10 @@ def test_hybrid_pareto_dominates_fixed(trace):
 def test_cutoffs_reduce_waste(trace):
     """Fig. 16: [5,99] cutoffs cut memory vs [0,100] without hurting colds."""
     from repro.core.histogram import HistogramConfig
-    h_cut = simulate(trace, HybridConfig(
-        histogram=HistogramConfig(head_percentile=5, tail_percentile=99),
-        use_arima=False))
-    h_all = simulate(trace, HybridConfig(
-        histogram=HistogramConfig(head_percentile=0, tail_percentile=100),
-        use_arima=False))
+    h_cut = run(trace, HybridSpec(head_percentile=5, tail_percentile=99,
+                                  use_arima=False))
+    h_all = run(trace, HybridSpec(head_percentile=0, tail_percentile=100,
+                                  use_arima=False))
     assert h_cut.total_wasted <= h_all.total_wasted
 
 
@@ -100,8 +97,8 @@ def test_arima_reduces_always_cold():
                              period_minutes=period, exec_time_s=1.0,
                              memory_mb=100.0, n_functions=1, triggers=("timer",)))
     trace = Trace(specs=specs, times=times, duration_minutes=7 * 1440.0)
-    no_arima = simulate(trace, HybridConfig(use_arima=False))
-    with_arima = simulate(trace, HybridConfig(use_arima=True))
+    no_arima = run(trace, HybridSpec(use_arima=False))
+    with_arima = run(trace, HybridSpec(use_arima=True))
     assert with_arima.cold.sum() < 0.6 * no_arima.cold.sum()
 
 
@@ -118,7 +115,7 @@ def test_fixed_batch_float64_boundary_parity():
                    period_minutes=10.0, exec_time_s=1.0, memory_mb=100.0,
                    n_functions=1, triggers=("timer",))
     trace = Trace(specs=[spec], times=[times], duration_minutes=20160.0)
-    fb = simulate_fixed_batch(trace, 10.0)
+    fb = run(trace, FixedSpec(10.0), engine="fused")
     fs = simulate_scalar(trace, FixedKeepAlivePolicy(10.0))
     np.testing.assert_array_equal(fb.cold, fs.cold)
     np.testing.assert_allclose(fb.wasted_minutes, fs.wasted_minutes, rtol=1e-9)
@@ -131,7 +128,7 @@ def test_hybrid_fused_exact_parity_two_week_trace():
     t = generate_trace(n_apps=40, days=14.0, seed=11)
     cfg = HybridConfig(use_arima=False)
     hs = simulate_scalar(t, HybridHistogramPolicy(cfg))
-    hb = simulate_hybrid_batch(t, cfg)
+    hb = run(t, HybridSpec.from_config(cfg))
     np.testing.assert_array_equal(hb.cold, hs.cold)
     np.testing.assert_allclose(hb.wasted_minutes, hs.wasted_minutes,
                                rtol=1e-9, atol=1e-6)
@@ -139,8 +136,9 @@ def test_hybrid_fused_exact_parity_two_week_trace():
 
 def test_hybrid_chunked_matches_unchunked(int_trace):
     cfg = HybridConfig(use_arima=False)
-    whole = simulate_hybrid_batch(int_trace, cfg)
-    chunked = simulate_hybrid_batch(int_trace, cfg, app_chunk=7)
+    whole = run(int_trace, HybridSpec.from_config(cfg))
+    chunked = run(int_trace, HybridSpec.from_config(cfg),
+                  options=EngineOptions(app_chunk=7))
     np.testing.assert_array_equal(chunked.cold, whole.cold)
     np.testing.assert_allclose(chunked.wasted_minutes, whole.wasted_minutes)
 
@@ -157,7 +155,8 @@ def test_hybrid_pallas_path_matches_scalar():
               _padded=(np.floor(padded), counts))
     cfg = HybridConfig(use_arima=False)
     hs = simulate_scalar(t, HybridHistogramPolicy(cfg))
-    hp = simulate_hybrid_batch(t, cfg, use_pallas=True, app_chunk=16)
+    hp = run(t, HybridSpec.from_config(cfg), engine="pallas",
+             options=EngineOptions(app_chunk=16))
     np.testing.assert_array_equal(hp.cold, hs.cold)
     np.testing.assert_allclose(hp.wasted_minutes, hs.wasted_minutes,
                                rtol=1e-4, atol=0.5)
@@ -180,8 +179,8 @@ def test_synthesize_scaling_path():
         assert np.all(np.isinf(padded[i, counts[i]:]))
     assert t.app_id(3) == "app-000003"
     # the padded-only trace runs through both engines
-    res = simulate_hybrid_batch(t, HybridConfig(use_arima=False),
-                                app_chunk=2048)
+    res = run(t, HybridSpec(use_arima=False),
+              options=EngineOptions(app_chunk=2048))
     assert res.invocations.sum() == counts.sum()
     assert np.all(res.cold >= 1)
 
@@ -201,7 +200,8 @@ def test_synthesize_rejects_invalid_chunking():
 def test_simulate_rejects_invalid_app_chunk(int_trace):
     cfg = HybridConfig(use_arima=False)
     with pytest.raises(ValueError, match="app_chunk"):
-        simulate_hybrid_batch(int_trace, cfg, app_chunk=-3)
+        run(int_trace, HybridSpec.from_config(cfg),
+            options=EngineOptions(app_chunk=-3))
 
 
 def test_synthesize_ragged_last_chunk():
@@ -232,12 +232,13 @@ def test_hybrid_ragged_chunk_parity():
     from repro.core.workload import Trace
     t = Trace.synthesize(n_apps=23, days=0.5, seed=6, max_events=12)
     cfg = HybridConfig(use_arima=False)
-    whole = simulate_hybrid_batch(t, cfg)
-    ragged = simulate_hybrid_batch(t, cfg, app_chunk=5)   # 5,5,5,5,3
+    whole = run(t, HybridSpec.from_config(cfg))
+    ragged = run(t, HybridSpec.from_config(cfg),
+                 options=EngineOptions(app_chunk=5))   # 5,5,5,5,3
     np.testing.assert_array_equal(ragged.cold, whole.cold)
     np.testing.assert_array_equal(ragged.wasted_minutes, whole.wasted_minutes)
-    pallas_ragged = simulate_hybrid_batch(t, cfg, app_chunk=5,
-                                          use_pallas=True)
+    pallas_ragged = run(t, HybridSpec.from_config(cfg), engine="pallas",
+                        options=EngineOptions(app_chunk=5))
     np.testing.assert_array_equal(pallas_ragged.cold, whole.cold)
     np.testing.assert_allclose(pallas_ragged.wasted_minutes,
                                whole.wasted_minutes, rtol=1e-5, atol=1e-3)
@@ -253,7 +254,7 @@ def test_hybrid_parity_power_of_two_bins():
     cfg = HybridConfig(histogram=HistogramConfig(range_minutes=128.0),
                        use_arima=False)
     hs = simulate_scalar(t, HybridHistogramPolicy(cfg))
-    hb = simulate_hybrid_batch(t, cfg)
+    hb = run(t, HybridSpec.from_config(cfg))
     np.testing.assert_array_equal(hb.cold, hs.cold)
     np.testing.assert_allclose(hb.wasted_minutes, hs.wasted_minutes,
                                rtol=1e-6, atol=1e-6)
@@ -279,7 +280,7 @@ def test_synthesize_parity_small():
     t = Trace.synthesize(n_apps=64, days=1.0, seed=21, max_events=32)
     cfg = HybridConfig(use_arima=False)
     hs = simulate_scalar(t, HybridHistogramPolicy(cfg))
-    hb = simulate_hybrid_batch(t, cfg)
+    hb = run(t, HybridSpec.from_config(cfg))
     np.testing.assert_array_equal(hb.cold, hs.cold)
     np.testing.assert_allclose(hb.wasted_minutes, hs.wasted_minutes,
                                rtol=1e-6, atol=1e-6)
