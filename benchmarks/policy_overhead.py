@@ -25,6 +25,7 @@ import numpy as np
 from repro.core.experiment import HybridSpec, run as run_config
 from repro.core.policy import HybridConfig, HybridHistogramPolicy
 from repro.core.workload import Trace
+from repro.core.workload_spec import WorkloadSpec
 from repro.kernels import ref as kref
 
 # Anchored to the repo root (not the CWD) so re-records always update the
@@ -98,8 +99,9 @@ def run(n_apps_compare: int = 100_000, n_apps_scale: int = 1_000_000,
 
     # ---- step-throughput: fused engine vs pre-sweep batched engine ---------
     spec = HybridSpec(use_arima=False)
-    trace_c = Trace.synthesize(n_apps_compare, days=days, seed=0,
-                               max_events=max_events)
+    trace_c = WorkloadSpec.uniform(n_apps_compare, days=days, seed=0,
+                                   max_events=max_events,
+                                   min_events=1).materialize()
     steps_c = _app_steps(trace_c)
 
     t_ref = _time(lambda: run_config(trace_c, spec, engine="reference"))
@@ -123,8 +125,9 @@ def run(n_apps_compare: int = 100_000, n_apps_scale: int = 1_000_000,
     }
 
     # ---- ~1M-app synthetic trace through the chunked fused driver ----------
-    trace_m = Trace.synthesize(n_apps_scale, days=days, seed=1,
-                               max_events=max_events)
+    trace_m = WorkloadSpec.uniform(n_apps_scale, days=days, seed=1,
+                                   max_events=max_events,
+                                   min_events=1).materialize()
     steps_m = _app_steps(trace_m)
     t0 = time.perf_counter()
     res = run_config(trace_m, spec, engine="fused")

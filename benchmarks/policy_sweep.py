@@ -35,7 +35,7 @@ import jax
 import numpy as np
 
 from repro.core.experiment import HybridSpec, run as run_config, sweep
-from repro.core.workload import Trace
+from repro.core.workload_spec import WorkloadSpec
 
 # Anchored to the repo root (not the CWD) so re-records always update the
 # tracked file.
@@ -66,7 +66,11 @@ def run(n_apps: int = 100_000, days: float = 14.0, max_events: int = 64,
         n_apps, days, max_events = 2_000, 2.0, 16
     grid = make_grid()
     S = len(grid)
-    trace = Trace.synthesize(n_apps, days=days, seed=3, max_events=max_events)
+    # min_events=1 keeps the record comparable with pre-spec measurements
+    # (the legacy synthesize clamped counts to >= 1)
+    trace = WorkloadSpec.uniform(n_apps, days=days, seed=3,
+                                 max_events=max_events,
+                                 min_events=1).materialize()
     trace.to_padded()          # shared trace construction out of both bills
 
     def timed(fn):

@@ -22,7 +22,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (fig_cluster, fig_exec_mem, fig_policy, fig_workload,
-                   kernel_bench, policy_overhead, policy_sweep, roofline)
+                   kernel_bench, policy_overhead, policy_sweep, roofline,
+                   trace_gen)
     modules = {
         "fig_workload": lambda: fig_workload.run(),
         "fig_exec_mem": lambda: fig_exec_mem.run(),
@@ -30,6 +31,7 @@ def main() -> None:
         "fig_cluster": lambda: fig_cluster.run(),
         "policy_overhead": lambda: policy_overhead.run(),
         "policy_sweep": lambda: policy_sweep.run(),
+        "trace_gen": lambda: trace_gen.run(),
         "kernel_bench": lambda: kernel_bench.run(),
         "roofline": lambda: roofline.run(),
     }

@@ -6,9 +6,13 @@ The whole design space is one declarative spec grid over
 ``experiment.sweep``: the trace is prepared and scanned once for every
 configuration (grid points sharing a histogram shape also share its
 sufficient statistics), so adding a candidate policy costs a config row,
-not another simulation pass.
+not another simulation pass. ``--scenario`` swaps the workload regime the
+frontier is tuned against (any name in ``workload_spec.SCENARIOS``);
+``--scenario all`` explores every regime in one trace x policy sweep.
 
   PYTHONPATH=src python examples/policy_explorer.py [--apps 500]
+  PYTHONPATH=src python examples/policy_explorer.py --scenario bursty
+  PYTHONPATH=src python examples/policy_explorer.py --scenario all
 """
 import argparse
 import sys
@@ -17,6 +21,7 @@ sys.path.insert(0, "src")
 
 from repro.core import generate_trace, pareto_frontier
 from repro.core.experiment import FixedSpec, HybridSpec, sweep
+from repro.core.workload_spec import SCENARIOS
 
 
 def build_grid():
@@ -33,23 +38,39 @@ def build_grid():
     return grid
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--apps", type=int, default=500)
-    ap.add_argument("--days", type=float, default=7.0)
-    ap.add_argument("--seed", type=int, default=1)
-    args = ap.parse_args()
-
-    trace = generate_trace(args.apps, days=args.days, seed=args.seed)
-    points = sweep(trace, build_grid()).points()
-
+def show_frontier(points, title):
     base = next(p for p in points if p.name == "fixed-10m").wasted_memory
     frontier = {p.name for p in pareto_frontier(points)}
+    print(f"-- {title}")
     print(f"{'policy':>18s} {'cold% p75':>10s} {'rel.mem':>8s}  pareto")
     for p in sorted(points, key=lambda p: p.wasted_memory):
         star = "  *" if p.name in frontier else ""
         print(f"{p.name:>18s} {p.cold_pct_p75:>9.1f}% "
               f"{p.wasted_memory / base:>7.2f}x{star}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--apps", type=int, default=500)
+    ap.add_argument("--days", type=float, default=7.0)
+    ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--scenario", default=None,
+                    choices=sorted(SCENARIOS) + ["all"],
+                    help="workload regime (default: the eager azure-like "
+                         "generate_trace); 'all' sweeps every scenario")
+    args = ap.parse_args()
+
+    grid = build_grid()
+    if args.scenario is None:
+        trace = generate_trace(args.apps, days=args.days, seed=args.seed)
+        show_frontier(sweep(trace, grid).points(), "generate_trace")
+        return
+    names = sorted(SCENARIOS) if args.scenario == "all" else [args.scenario]
+    specs = [SCENARIOS[n](args.apps, days=args.days, seed=args.seed,
+                          max_events=64) for n in names]
+    res = sweep(traces=specs, specs=grid)      # (T, S) in one call
+    for t, pts in enumerate(res.points()):
+        show_frontier(pts, res.trace_name(t))
 
 
 if __name__ == "__main__":

@@ -2,20 +2,25 @@
 
 All decision formulas are single-sourced in :mod:`repro.core.policy_math`;
 everything else (scalar policy, batched engines, Pallas kernels, serving
-warm pool) is representation-specific glue around those helpers.
+warm pool) is representation-specific glue around those helpers. The
+experiment front door is declarative on BOTH axes: policies are
+``PolicySpec`` grids and workloads are ``WorkloadSpec`` scenarios, driven
+through ``run()``/``sweep()`` (``sweep(traces=..., specs=...)`` for the
+(T, S) grid).
 """
 from . import policy_math
 from .histogram import AppHistogram, HistogramConfig, HistogramState, init_state
 from .policy import (FixedKeepAlivePolicy, HybridConfig, HybridHistogramPolicy,
                      NoUnloadingPolicy, Policy, PolicyWindows, is_warm,
                      loaded_idle_time)
-from .simulator import (SimResult, simulate, simulate_fixed_batch,
-                        simulate_hybrid_batch, simulate_hybrid_batch_reference,
-                        simulate_scalar)
-from .experiment import (ENGINES, EngineOptions, FixedSpec, HybridSpec,
-                         NoUnloadSpec, PolicySpec, SweepResult, as_spec, run,
-                         sweep)
+from .simulator import SimResult, simulate_scalar
 from .workload import AppSpec, Trace, generate_trace, sample_apps
+from .workload_spec import (SCENARIOS, Cohort, WorkloadSpec, azure_like,
+                            bursty, diurnal, flash_crowd, scenario,
+                            timer_heavy, weekend_dip)
+from .experiment import (ENGINES, EngineOptions, FixedSpec, HybridSpec,
+                         NoUnloadSpec, PolicySpec, SweepGrid, SweepResult,
+                         as_spec, as_trace, run, sweep)
 from .metrics import PolicyPoint, evaluate, normalize_waste, pareto_frontier
 
 __all__ = [
@@ -23,12 +28,24 @@ __all__ = [
     "AppHistogram", "HistogramConfig", "HistogramState", "init_state",
     "FixedKeepAlivePolicy", "HybridConfig", "HybridHistogramPolicy",
     "NoUnloadingPolicy", "Policy", "PolicyWindows", "is_warm",
-    "loaded_idle_time", "SimResult", "simulate", "simulate_fixed_batch",
-    "simulate_hybrid_batch", "simulate_hybrid_batch_reference",
-    "simulate_scalar",
+    "loaded_idle_time", "SimResult", "simulate_scalar",
     "ENGINES", "EngineOptions", "FixedSpec", "HybridSpec", "NoUnloadSpec",
-    "PolicySpec", "SweepResult", "as_spec", "run", "sweep",
-    "AppSpec", "Trace",
-    "generate_trace", "sample_apps", "PolicyPoint", "evaluate",
-    "normalize_waste", "pareto_frontier",
+    "PolicySpec", "SweepGrid", "SweepResult", "as_spec", "as_trace", "run",
+    "sweep",
+    "AppSpec", "Trace", "generate_trace", "sample_apps",
+    "SCENARIOS", "Cohort", "WorkloadSpec", "azure_like", "bursty", "diurnal",
+    "flash_crowd", "scenario", "timer_heavy", "weekend_dip",
+    "PolicyPoint", "evaluate", "normalize_waste", "pareto_frontier",
 ]
+
+_REMOVED_SIMULATE = ("simulate", "simulate_fixed_batch",
+                     "simulate_hybrid_batch",
+                     "simulate_hybrid_batch_reference")
+
+
+def __getattr__(name: str):
+    if name in _REMOVED_SIMULATE:
+        # Defer to the simulator module's message (points at experiment.run).
+        from . import simulator
+        return getattr(simulator, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -35,7 +35,16 @@ def _hash(s: str) -> str:
 
 
 def export(trace: Trace, out_dir: str, owner: str = "repro") -> List[str]:
-    """Write the three dataset files; returns the paths."""
+    """Write the three dataset files; returns the paths.
+
+    Requires an eager trace (``AppSpec`` metadata feeds the trigger,
+    duration, and memory columns): ``generate_trace(...)`` or
+    ``WorkloadSpec.materialize(eager=True)``.
+    """
+    if trace.specs is None:
+        raise ValueError(
+            "dataset export needs an eager trace with AppSpecs; use "
+            "generate_trace(...) or spec.materialize(eager=True)")
     os.makedirs(out_dir, exist_ok=True)
     paths = []
     n_days = max(int(np.ceil(trace.duration_minutes / MINUTES_PER_DAY)), 1)
@@ -50,7 +59,7 @@ def export(trace: Trace, out_dir: str, owner: str = "repro") -> List[str]:
                        + [str(i) for i in range(1, 1441)])
             lo = day * MINUTES_PER_DAY
             for i, spec in enumerate(trace.specs):
-                t = trace.times[i]
+                t = trace.events(i)
                 in_day = t[(t >= lo) & (t < lo + MINUTES_PER_DAY)] - lo
                 counts = np.bincount(in_day.astype(int),
                                      minlength=1440)[:1440]
@@ -70,7 +79,7 @@ def export(trace: Trace, out_dir: str, owner: str = "repro") -> List[str]:
                     "Count", "Minimum", "Maximum"]
                    + [f"percentile_Average_{p}" for p in _PCT_DUR])
         for i, spec in enumerate(trace.specs):
-            n = max(len(trace.times[i]), 1)
+            n = max(len(trace.events(i)), 1)
             # per-invocation durations ~ lognormal around the app average
             samples = spec.exec_time_s * np.exp(rng.normal(0, 0.4, min(n, 256)))
             ms = samples * 1e3
@@ -90,7 +99,7 @@ def export(trace: Trace, out_dir: str, owner: str = "repro") -> List[str]:
                     "AverageAllocatedMb"]
                    + [f"AverageAllocatedMb_pct{p}" for p in _PCT_MEM])
         for i, spec in enumerate(trace.specs):
-            n = max(len(trace.times[i]), 1)
+            n = max(len(trace.events(i)), 1)
             samples = spec.memory_mb * np.exp(rng.normal(0, 0.15, 64))
             w.writerow([_hash(owner), _hash(spec.app_id), n,
                         round(float(samples.mean()), 2)]

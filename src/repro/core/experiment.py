@@ -12,6 +12,23 @@ ablations. This module makes a configuration grid a first-class input:
     for spec, row in zip(result.specs, result):
         print(spec.name, row.cold_pct_percentile(75), row.total_wasted)
 
+Workloads are specs too: everywhere a :class:`~repro.core.workload.Trace`
+is accepted, a declarative :class:`~repro.core.workload_spec.WorkloadSpec`
+(scenario) is accepted and materialized on entry — and ``sweep`` has a
+*trace axis*, making "Fig. 14 across five workload regimes" one call:
+
+    from repro.core.workload_spec import azure_like, bursty, timer_heavy
+
+    grid_2d = sweep(traces=[azure_like(10_000), bursty(10_000),
+                            timer_heavy(10_000)], specs=grid)
+    for t, res in enumerate(grid_2d):          # (T, S) SweepGrid
+        print(grid_2d.trace_name(t), res.row(0).cold_pct_percentile(75))
+
+Each trace is bucketed/chunked/rebased ONCE (``to_padded`` hoisted out of
+the per-family engines) and reused across every policy configuration; rows
+of the (T, S) grid are bit-identical to the corresponding single-trace
+``run()`` calls on every engine.
+
 Specs are frozen dataclasses registered as JAX pytrees (they flatten into
 their numeric knobs), each ``.build()``-able into the stateful
 :class:`repro.core.policy.Policy` objects the scalar oracle and the serving
@@ -57,37 +74,19 @@ from .policy import (FixedKeepAlivePolicy, HybridConfig, HybridHistogramPolicy,
 from .simulator import (SimResult, _run_fixed_sweep, _run_hybrid_sweep,
                         _simulate_hybrid_batch_reference, simulate_scalar)
 from .workload import Trace
+from .workload_spec import WorkloadSpec, _register_pytree
 
 __all__ = [
     "ENGINES", "PolicySpec", "FixedSpec", "NoUnloadSpec", "HybridSpec",
-    "EngineOptions", "SweepResult", "as_spec", "run", "sweep",
+    "EngineOptions", "SweepResult", "SweepGrid", "as_spec", "as_trace",
+    "run", "sweep",
 ]
 
 ENGINES = ("auto", "scalar", "fused", "pallas", "reference")
 
 
-def _register_pytree(cls, meta=()):
-    """Register a frozen spec dataclass as a JAX pytree.
-
-    Numeric knobs are leaves (so specs flow through ``tree_map``/``jit`` and
-    stack into config axes); fields in ``meta`` are auxiliary data (static:
-    they select python-level code paths, e.g. ``use_arima``).
-    """
-    names = [f.name for f in dataclasses.fields(cls)]
-    data = tuple(n for n in names if n not in meta)
-
-    def flatten(x):
-        return (tuple(getattr(x, n) for n in data),
-                tuple(getattr(x, n) for n in meta))
-
-    def unflatten(aux, leaves):
-        kw = dict(zip(data, leaves))
-        kw.update(dict(zip(meta, aux)))
-        return cls(**kw)
-
-    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
-    return cls
-
+# PolicySpec and WorkloadSpec families share one pytree-registration
+# contract — the helper lives in workload_spec (the import direction).
 
 @dataclasses.dataclass(frozen=True)
 class FixedSpec:
@@ -259,6 +258,47 @@ class SweepResult:
                 for s, spec in enumerate(self.specs)]
 
 
+@dataclasses.dataclass
+class SweepGrid:
+    """A (T, S) grid: S policy configurations over T workloads.
+
+    ``results[t]`` is the full :class:`SweepResult` of trace ``t`` (rows
+    bit-identical to single-trace ``sweep``/``run``); ``row(t, s)`` is the
+    (t, s) cell as a :class:`~repro.core.simulator.SimResult`. ``traces``
+    keeps the inputs as given (``Trace`` or ``WorkloadSpec``)."""
+    traces: List[object]
+    results: List[SweepResult]
+
+    @property
+    def shape(self):
+        return (len(self.results),
+                len(self.results[0]) if self.results else 0)
+
+    @property
+    def specs(self) -> List[PolicySpec]:
+        return self.results[0].specs if self.results else []
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    def __getitem__(self, t: int) -> SweepResult:
+        return self.results[t]
+
+    def __iter__(self) -> Iterator[SweepResult]:
+        return iter(self.results)
+
+    def row(self, t: int, s: int) -> SimResult:
+        return self.results[t].row(s)
+
+    def trace_name(self, t: int) -> str:
+        obj = self.traces[t]
+        return obj.name if isinstance(obj, WorkloadSpec) else f"trace-{t}"
+
+    def points(self):
+        """``points()[t]`` — the per-trace PolicyPoint lists."""
+        return [res.points() for res in self.results]
+
+
 def _resolve_engine(engine: str) -> str:
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; expected one of "
@@ -268,22 +308,19 @@ def _resolve_engine(engine: str) -> str:
     return engine
 
 
-def sweep(trace: Trace, specs: Sequence, *, engine: str = "auto",
-          options: Optional[EngineOptions] = None) -> SweepResult:
-    """Evaluate S policy configurations over ``trace`` in one device pass.
+def as_trace(obj) -> Trace:
+    """Coerce the workload argument: a ``Trace`` passes through, a
+    declarative ``WorkloadSpec`` is materialized by the vectorized engine."""
+    if isinstance(obj, Trace):
+        return obj
+    if isinstance(obj, WorkloadSpec):
+        return obj.materialize()
+    raise TypeError(
+        f"expected a Trace or WorkloadSpec, got {type(obj).__name__}")
 
-    ``specs`` may mix families (fixed / no-unload / hybrid); each family is
-    stacked into its own traced config axis and the trace is prepared once.
-    Rows come back in input order and are bit-identical (cold counts,
-    invocations, final windows) to the corresponding single-config
-    :func:`run`.
-    """
-    specs = [as_spec(s) for s in specs]
-    if not specs:
-        raise ValueError("sweep() needs at least one PolicySpec")
-    opts = options or EngineOptions()
-    eng = _resolve_engine(engine)
 
+def _sweep_one(trace: Trace, specs: Sequence, eng: str,
+               opts: EngineOptions) -> SweepResult:
     n = trace.n_apps
     S = len(specs)
     cold = np.zeros((S, n), np.int64)
@@ -316,30 +353,71 @@ def sweep(trace: Trace, specs: Sequence, *, engine: str = "auto",
     hybrid_idx = [s for s, sp in enumerate(specs)
                   if isinstance(sp, HybridSpec)]
 
+    # The trace is padded ONCE for every family and config (list-backed
+    # traces rebuild the padded arrays on each to_padded call).
+    padded = trace.to_padded()
     if window_idx:
         # No histogram state in this family — the float64 fused sweep is
         # already oracle-exact, so "pallas"/"reference" alias it.
         out = _run_fixed_sweep(trace, [specs[s].keep_alive
                                        for s in window_idx],
-                               opts.include_trailing)
+                               opts.include_trailing, padded=padded)
         fill(window_idx, out)
     if hybrid_idx:
         cfgs = [specs[s].to_config() for s in hybrid_idx]
         if eng == "reference":
             for s, cfg in zip(hybrid_idx, cfgs):
                 fill([s], _simulate_hybrid_batch_reference(
-                    trace, cfg, opts.include_trailing))
+                    trace, cfg, opts.include_trailing, padded=padded))
         else:
             out = _run_hybrid_sweep(
                 trace, cfgs, opts.include_trailing,
                 app_chunk=opts.app_chunk, use_pallas=(eng == "pallas"),
-                interpret=opts.interpret, tile_apps=opts.tile_apps)
+                interpret=opts.interpret, tile_apps=opts.tile_apps,
+                padded=padded)
             fill(hybrid_idx, out)
     assert inv is not None  # every spec belongs to one of the two families
     return SweepResult(specs, eng, cold, inv, waste, pre, keep)
 
 
-def run(trace: Trace, spec, *, engine: str = "auto",
+def sweep(trace=None, specs: Sequence = None, *, traces=None,
+          engine: str = "auto", options: Optional[EngineOptions] = None):
+    """Evaluate a policy grid over one workload — or a (T, S) grid.
+
+    ``sweep(trace, specs)`` evaluates S policy configurations over one
+    workload (a ``Trace`` or a ``WorkloadSpec``) in one device pass:
+    ``specs`` may mix families (fixed / no-unload / hybrid); each family is
+    stacked into its own traced config axis and the trace is prepared once.
+    Rows come back in input order and are bit-identical (cold counts,
+    invocations, final windows) to the corresponding single-config
+    :func:`run`. Returns a :class:`SweepResult`.
+
+    ``sweep(traces=[...], specs=[...])`` adds the trace axis: every
+    workload (again ``Trace`` or ``WorkloadSpec``, freely mixed) is
+    materialized and prepared once, swept over the whole policy grid, and
+    the T :class:`SweepResult` rows come back as a :class:`SweepGrid`.
+    """
+    if specs is None:
+        raise TypeError("sweep() requires specs (a list of PolicySpec)")
+    specs = [as_spec(s) for s in specs]
+    if not specs:
+        raise ValueError("sweep() needs at least one PolicySpec")
+    if (trace is None) == (traces is None):
+        raise TypeError("pass exactly one of trace= or traces=")
+    opts = options or EngineOptions()
+    eng = _resolve_engine(engine)
+    if traces is None:
+        return _sweep_one(as_trace(trace), specs, eng, opts)
+    traces = list(traces)
+    if not traces:
+        raise ValueError("sweep() needs at least one trace")
+    return SweepGrid(traces=traces,
+                     results=[_sweep_one(as_trace(t), specs, eng, opts)
+                              for t in traces])
+
+
+def run(trace, spec, *, engine: str = "auto",
         options: Optional[EngineOptions] = None) -> SimResult:
-    """Evaluate one policy configuration (the S=1 sweep) over ``trace``."""
+    """Evaluate one policy configuration (the S=1 sweep) over one workload
+    (``Trace`` or ``WorkloadSpec``)."""
     return sweep(trace, [spec], engine=engine, options=options).row(0)

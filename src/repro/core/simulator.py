@@ -57,14 +57,13 @@ Exactly as in the paper, function execution time is simulated as 0 (so idle
 time == inter-arrival time) to account wasted memory time conservatively, and
 the first invocation of every app is a cold start.
 
-The module-level ``simulate*`` entry points are deprecated shims over the
-experiment API, kept one release for external callers; in-repo code calls
-``experiment.run``/``experiment.sweep`` directly.
+The legacy module-level ``simulate*`` entry points were removed after their
+deprecation cycle (they raise an ``AttributeError`` pointing at
+``experiment.run``); all code goes through ``experiment.run``/``sweep``.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from functools import partial
 from typing import Optional, Sequence
 
@@ -80,9 +79,7 @@ from .policy import (FixedKeepAlivePolicy, HybridConfig, HybridHistogramPolicy,
 from .workload import Trace
 
 __all__ = [
-    "SimResult", "simulate_scalar", "simulate_fixed_batch",
-    "simulate_hybrid_batch", "simulate_hybrid_batch_reference", "simulate",
-    "BUCKET_EDGES", "DEFAULT_APP_CHUNK",
+    "SimResult", "simulate_scalar", "BUCKET_EDGES", "DEFAULT_APP_CHUNK",
 ]
 
 BUCKET_EDGES = (64, 512, 4096, 1 << 62)
@@ -204,14 +201,18 @@ def _fixed_scan(times, keep_alive, duration, include_trailing: bool):
 
 
 def _run_fixed_sweep(trace: Trace, keeps: Sequence[float],
-                     include_trailing: bool = True) -> dict:
+                     include_trailing: bool = True, *,
+                     padded=None) -> dict:
     """S fixed keep-alive configs in one pass (``inf`` == never unload).
 
     float64 time state: two-week traces (t ~ 2e4 minutes) lose the
     sub-millisecond IAT bits in float32, flipping warm/cold verdicts
     exactly at the keep-alive boundary vs the scalar oracle.
+    ``padded`` is the trace's precomputed ``to_padded()`` pair — the
+    experiment layer prepares each trace once and reuses it across every
+    policy family and config (and, in a trace-axis sweep, the whole grid).
     """
-    times, counts = trace.to_padded()
+    times, counts = padded if padded is not None else trace.to_padded()
     S, n = len(keeps), trace.n_apps
     cold = np.zeros((S, n), np.int64)
     waste = np.zeros((S, n), np.float64)
@@ -513,19 +514,21 @@ def _run_hybrid_sweep(trace: Trace, hybrids: Sequence[HybridConfig],
                       app_chunk: Optional[int] = None,
                       use_pallas: Optional[bool] = None,
                       interpret: Optional[bool] = None,
-                      tile_apps: int = 512) -> dict:
+                      tile_apps: int = 512,
+                      padded=None) -> dict:
     """S hybrid configs over one bucketed/chunked/rebased trace pass.
 
     Configs are banded by bin count (so no config pays for another's wider
-    histogram), but the trace preparation, each chunk's host→device
-    transfer, and — within a band — the whole time layer and per-group
-    histogram update are shared across the grid. ``use_pallas`` defaults to
-    True on TPU (float32 sweep kernel, per-chunk time rebasing) and False
-    elsewhere (float64 jnp sweep, always oracle-exact). The scalar ARIMA
-    post-pass runs per config on its own OOB-heavy apps.
+    histogram), but the trace preparation (``padded`` arrives precomputed
+    from the experiment layer), each chunk's host→device transfer, and —
+    within a band — the whole time layer and per-group histogram update are
+    shared across the grid. ``use_pallas`` defaults to True on TPU (float32
+    sweep kernel, per-chunk time rebasing) and False elsewhere (float64 jnp
+    sweep, always oracle-exact). The scalar ARIMA post-pass runs per config
+    on its own OOB-heavy apps.
     """
     S = len(hybrids)
-    times, counts = trace.to_padded()
+    times, counts = padded if padded is not None else trace.to_padded()
     n = trace.n_apps
     cold = np.zeros((S, n), np.int64)
     waste = np.zeros((S, n), np.float64)
@@ -714,11 +717,11 @@ def _hybrid_scan_reference(times, cfg: HistogramConfig, hybrid: HybridConfig):
 
 
 def _simulate_hybrid_batch_reference(trace: Trace, hybrid: HybridConfig,
-                                     include_trailing: bool = True
-                                     ) -> SimResult:
+                                     include_trailing: bool = True,
+                                     padded=None) -> SimResult:
     """Pre-sweep batched hybrid engine (float32, per-step cumsum recompute,
     per-chunk time rebasing like the Pallas path)."""
-    times, counts = trace.to_padded()
+    times, counts = padded if padded is not None else trace.to_padded()
     n = trace.n_apps
     cold_parts = np.zeros(n, np.int64)
     waste_parts = np.zeros(n, np.float64)
@@ -751,57 +754,21 @@ def _simulate_hybrid_batch_reference(trace: Trace, hybrid: HybridConfig,
 
 
 # --------------------------------------------------------------------------
-# Deprecated shims over the experiment API (zero in-repo callers)
+# Removed entry points (deprecation cycle completed in PR 3 -> PR 5)
 # --------------------------------------------------------------------------
 
-
-def _warn_deprecated(old: str, new: str) -> None:
-    warnings.warn(
-        f"repro.core.simulator.{old} is deprecated; use "
-        f"repro.core.experiment.{new} instead", DeprecationWarning,
-        stacklevel=3)
-
-
-def simulate_fixed_batch(trace: Trace, keep_alive_minutes: float,
-                         include_trailing: bool = True) -> SimResult:
-    """Deprecated: use ``experiment.run(trace, FixedSpec(keep_alive))``."""
-    _warn_deprecated("simulate_fixed_batch", "run(trace, FixedSpec(...))")
-    from .experiment import EngineOptions, FixedSpec, run
-    return run(trace, FixedSpec(float(keep_alive_minutes)), engine="fused",
-               options=EngineOptions(include_trailing=include_trailing))
+_REMOVED = {
+    "simulate": "run(trace, spec)",
+    "simulate_fixed_batch": "run(trace, FixedSpec(keep_alive))",
+    "simulate_hybrid_batch": "run(trace, HybridSpec(...))",
+    "simulate_hybrid_batch_reference": 'run(trace, spec, engine="reference")',
+}
 
 
-def simulate_hybrid_batch(trace: Trace, hybrid: HybridConfig,
-                          include_trailing: bool = True, *,
-                          app_chunk: Optional[int] = None,
-                          use_pallas: Optional[bool] = None) -> SimResult:
-    """Deprecated: use ``experiment.run(trace, HybridSpec(...))`` (or
-    ``experiment.sweep`` for grids — the whole point of the new API)."""
-    _warn_deprecated("simulate_hybrid_batch", "run(trace, HybridSpec(...))")
-    from .experiment import EngineOptions, HybridSpec, run
-    engine = ("auto" if use_pallas is None
-              else "pallas" if use_pallas else "fused")
-    return run(trace, HybridSpec.from_config(hybrid), engine=engine,
-               options=EngineOptions(include_trailing=include_trailing,
-                                     app_chunk=app_chunk))
-
-
-def simulate_hybrid_batch_reference(trace: Trace, hybrid: HybridConfig,
-                                    include_trailing: bool = True) -> SimResult:
-    """Deprecated: use ``experiment.run(..., engine="reference")``."""
-    _warn_deprecated("simulate_hybrid_batch_reference",
-                     'run(..., engine="reference")')
-    return _simulate_hybrid_batch_reference(trace, hybrid, include_trailing)
-
-
-def simulate(trace: Trace, policy, include_trailing: bool = True) -> SimResult:
-    """Deprecated dispatch: use ``experiment.run(trace, spec)``; arbitrary
-    ``Policy`` objects still fall back to the scalar engine."""
-    _warn_deprecated("simulate", "run(trace, spec)")
-    from .experiment import EngineOptions, as_spec, run
-    try:
-        spec = as_spec(policy)
-    except TypeError:
-        return simulate_scalar(trace, policy, include_trailing)
-    return run(trace, spec,
-               options=EngineOptions(include_trailing=include_trailing))
+def __getattr__(name: str):
+    if name in _REMOVED:
+        raise AttributeError(
+            f"repro.core.simulator.{name} was removed after its deprecation "
+            f"cycle; use repro.core.experiment.{_REMOVED[name]} instead "
+            f"(arbitrary Policy objects still run via simulate_scalar)")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -26,6 +26,7 @@ while bounding trace size.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -157,47 +158,28 @@ class Trace:
     @classmethod
     def synthesize(cls, n_apps: int, days: float = 1.0, seed: int = 0,
                    max_events: int = 64, app_chunk: int = 262144) -> "Trace":
-        """Fleet-scale synthetic trace (~1M apps) in padded form directly.
+        """Deprecated shim: use ``WorkloadSpec.uniform(...).materialize()``.
 
-        A vectorized scaling path for throughput benchmarking of the batched
-        simulators: per-app rates come from the paper's Fig. 5(a) CDF, event
-        counts are Poisson in the daily rate (clamped to ``max_events`` so
-        device memory stays bounded), and invocation times are sorted
-        uniforms over the trace window. No per-app AppSpec/ndarray objects
-        are materialized, so a 1M-app trace costs one [n_apps, max_events]
-        float32 array instead of millions of python objects. The result is
-        padded-only (``specs``/``times`` are None): consumers that need
-        per-app specs — dataset export, the cluster sim, the workload
-        figures — require :func:`generate_trace` traces; the simulators go
-        through ``to_padded``/``events``/``app_id`` and handle both forms.
+        The fleet-scale scaling path now lives in the one vectorized engine
+        behind :class:`repro.core.workload_spec.WorkloadSpec`; this wrapper
+        keeps the legacy signature and the legacy >=1-events-per-app clamp
+        (the spec engine's default allows zero-event apps). ``app_chunk``
+        is validated for backward compatibility but no longer affects the
+        result: generation is chunk-size-invariant by construction.
         """
-        if n_apps < 0:
-            raise ValueError(f"n_apps must be >= 0, got {n_apps}")
+        warnings.warn(
+            "Trace.synthesize is deprecated; use "
+            "repro.core.workload_spec.WorkloadSpec.uniform(...).materialize() "
+            "instead", DeprecationWarning, stacklevel=2)
         if app_chunk < 1:
             raise ValueError(
                 "app_chunk must be a positive app count (it is a generation "
                 f"batch size; n_apps need not be a multiple of it), got "
                 f"{app_chunk}")
-        if max_events < 1:
-            raise ValueError(f"max_events must be >= 1, got {max_events}")
-        duration = days * MINUTES_PER_DAY
-        rng = np.random.default_rng(seed)
-        max_ev = int(max_events)
-        padded = np.full((n_apps, max_ev), np.inf, np.float32)
-        counts = np.empty(n_apps, np.int32)
-        for lo in range(0, n_apps, app_chunk):
-            hi = min(lo + app_chunk, n_apps)
-            m = hi - lo
-            rates = _sample_rates(rng, m)
-            lam = np.minimum(rates * days, float(max_ev))
-            cnt = np.clip(rng.poisson(lam), 1, max_ev).astype(np.int32)
-            t = rng.uniform(0.0, duration, (m, max_ev)).astype(np.float32)
-            t[np.arange(max_ev)[None, :] >= cnt[:, None]] = np.inf
-            t.sort(axis=1)
-            padded[lo:hi] = t
-            counts[lo:hi] = cnt
-        return cls(specs=None, times=None, duration_minutes=duration,
-                   _padded=(padded, counts))
+        from .workload_spec import WorkloadSpec
+        return WorkloadSpec.uniform(n_apps, days=days, seed=seed,
+                                    max_events=max_events,
+                                    min_events=1).materialize()
 
 
 def _inv_cdf(anchors: np.ndarray, u: np.ndarray) -> np.ndarray:
@@ -364,13 +346,28 @@ def generate_invocations(spec: AppSpec, duration_minutes: float,
 
 def generate_trace(n_apps: int, days: float = 7.0, seed: int = 0,
                    specs: Optional[Sequence[AppSpec]] = None) -> Trace:
+    """Eager §3-faithful trace: ``AppSpec`` objects + per-app float64 times.
+
+    A thin wrapper over the vectorized scenario engine
+    (:func:`repro.core.workload_spec.azure_like` in eager mode) — one
+    sampling pass per cohort block, no per-app generation loop. The paper's
+    dataset guarantees every app at least one invocation, so ``min_events=1``
+    and the event budget is left uncapped (minute-bin bound).
+
+    Passing explicit ``specs`` keeps the legacy per-app path: arbitrary
+    ``AppSpec`` lists are honored app-by-app via
+    :func:`generate_invocations` (the callers that build custom specs are
+    small-n tests and the cluster sim).
+    """
     duration = days * MINUTES_PER_DAY
-    if specs is None:
-        specs = sample_apps(n_apps, seed)
-    rng = np.random.default_rng(seed + 1)
-    times = [generate_invocations(s, duration, rng) for s in specs]
-    # Paper: every app in the dataset has at least one invocation.
-    for i, t in enumerate(times):
-        if len(t) == 0:
-            times[i] = np.array([rng.uniform(0.0, duration)])
-    return Trace(specs=list(specs), times=times, duration_minutes=duration)
+    if specs is not None:
+        rng = np.random.default_rng(seed + 1)
+        times = [generate_invocations(s, duration, rng) for s in specs]
+        # Paper: every app in the dataset has at least one invocation.
+        for i, t in enumerate(times):
+            if len(t) == 0:
+                times[i] = np.array([rng.uniform(0.0, duration)])
+        return Trace(specs=list(specs), times=times, duration_minutes=duration)
+    from .workload_spec import azure_like
+    return azure_like(n_apps, days=days, seed=seed, max_events=None,
+                      min_events=1).materialize(eager=True)

@@ -77,12 +77,22 @@ class ClusterSim:
             self._assign[app_id] = int(np.argmin(loads))
         return self._assign[app_id]
 
-    def run(self, trace: Trace, exec_time_s: Optional[Dict[str, float]] = None
+    def run(self, trace, exec_time_s: Optional[Dict[str, float]] = None
             ) -> ClusterResult:
+        # Declarative workloads are materialized eagerly: the cluster sim
+        # needs per-app AppSpecs (exec times, app ids) alongside the events.
+        from ..core.workload_spec import WorkloadSpec
+        if isinstance(trace, WorkloadSpec):
+            trace = trace.materialize(eager=True)
+        if trace.specs is None:
+            raise ValueError(
+                "ClusterSim needs an eager trace with AppSpecs; use "
+                "generate_trace(...) or spec.materialize(eager=True) "
+                "(padded-only fleet traces carry no per-app metadata)")
         # Merge all app invocation streams into one global event queue.
         events: List[Tuple[float, int, str]] = []
         for i, spec in enumerate(trace.specs):
-            for t in trace.times[i]:
+            for t in trace.events(i):
                 events.append((float(t) * MINUTE, i, spec.app_id))
         events.sort()
 

@@ -12,6 +12,7 @@ import numpy as np
 from repro.core.histogram import HistogramConfig
 from repro.core.policy import HybridConfig
 from repro.core.workload import Trace
+from repro.core.workload_spec import WorkloadSpec
 
 MINUTES_14D = 14 * 1440.0
 
@@ -102,9 +103,11 @@ def coarse_twoweek(n_apps: int = 32, seed: int = 9) -> Trace:
 
 
 def synthesized_small(n_apps: int = 64, seed: int = 7) -> Trace:
-    """Padded-only ``Trace.synthesize`` trace (native float32 timestamps —
-    trivially exact in every engine). Pair with CFG240."""
-    return Trace.synthesize(n_apps, days=3.0, seed=seed, max_events=16)
+    """Padded-only ``WorkloadSpec.uniform`` trace (native float32
+    timestamps — trivially exact in every engine; ``min_events=1`` keeps the
+    legacy every-app-invoked guarantee). Pair with CFG240."""
+    return WorkloadSpec.uniform(n_apps, days=3.0, seed=seed, max_events=16,
+                                min_events=1).materialize()
 
 
 GOLDEN_TRACES = {

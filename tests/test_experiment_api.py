@@ -1,16 +1,16 @@
-"""The experiment front door: PolicySpec pytrees, run()/sweep() parity,
-and the deprecation shims.
+"""The experiment front door: PolicySpec pytrees, run()/sweep() parity on
+both axes (policy grid AND trace axis), and the removed-shim contract.
 
 The load-bearing guarantee: every row of a ``sweep()`` is bit-identical
 (cold counts, invocations, final windows; waste too, engine-for-engine) to
 the corresponding single-config ``run()`` on EVERY engine, including the
 golden traces — stacking configurations into a traced config axis must
-change nothing but wall-clock.
+change nothing but wall-clock. The same holds along the trace axis:
+``sweep(traces=[...], specs=[...])`` cells equal the single-trace calls.
 """
 import dataclasses
 import json
 import os
-import warnings
 
 import numpy as np
 import pytest
@@ -18,15 +18,14 @@ import pytest
 import jax.tree_util as tree_util
 
 from repro.core.experiment import (ENGINES, EngineOptions, FixedSpec,
-                                   HybridSpec, NoUnloadSpec, as_spec, run,
-                                   sweep)
+                                   HybridSpec, NoUnloadSpec, as_spec,
+                                   as_trace, run, sweep)
 from repro.core.histogram import HistogramConfig
 from repro.core.policy import (FixedKeepAlivePolicy, HybridConfig,
                                HybridHistogramPolicy, NoUnloadingPolicy)
-from repro.core.simulator import (simulate, simulate_fixed_batch,
-                                  simulate_hybrid_batch,
-                                  simulate_hybrid_batch_reference,
-                                  simulate_scalar)
+from repro.core.simulator import simulate_scalar
+from repro.core.workload import Trace
+from repro.core.workload_spec import WorkloadSpec, azure_like, bursty
 
 from golden_traces import CFG48, GOLDEN_TRACES, coarse_twoweek
 
@@ -150,58 +149,74 @@ def test_sweep_rejects_bad_inputs(trace):
         sweep(trace, [FixedSpec(10.0)], engine="warp")
     with pytest.raises(TypeError, match="PolicySpec"):
         as_spec(object())
+    with pytest.raises(TypeError, match="Trace or WorkloadSpec"):
+        as_trace(object())
+    with pytest.raises(TypeError, match="exactly one"):
+        sweep(trace, [FixedSpec(10.0)], traces=[trace])
+    with pytest.raises(TypeError, match="exactly one"):
+        sweep(specs=[FixedSpec(10.0)])
+    with pytest.raises(ValueError, match="at least one trace"):
+        sweep(traces=[], specs=[FixedSpec(10.0)])
 
 
-# --- deprecation shims -------------------------------------------------------
+# --- the trace axis: sweep(traces=[...], specs=[...]) ------------------------
 
 
-def test_shims_warn_once_per_call_and_agree(trace):
-    cfg = CFG48
-    want_hybrid = run(trace, HybridSpec.from_config(cfg), engine="fused")
-    want_fixed = run(trace, FixedSpec(10.0), engine="fused")
-    want_ref = run(trace, HybridSpec.from_config(cfg), engine="reference")
+@pytest.mark.parametrize("engine", sorted(ENGINES))
+def test_trace_axis_cells_equal_single_trace_runs(trace, engine):
+    """Every (t, s) cell of a trace x policy grid is bit-identical to the
+    corresponding single-trace run() — the acceptance bar for the axis."""
+    spec_b = bursty(24, days=3.0, seed=5, max_events=24, min_events=1)
+    traces = [trace, spec_b]
+    grid = sweep(traces=traces, specs=GRID, engine=engine, options=OPTS)
+    assert grid.shape == (2, len(GRID))
+    assert len(list(iter(grid))) == 2
+    materialized = [trace, spec_b.materialize()]
+    for t, tr in enumerate(materialized):
+        for s, spec in enumerate(GRID):
+            one = run(tr, spec, engine=engine, options=OPTS)
+            err = f"engine={engine} t={t} s={s} ({spec.name})"
+            cell = grid.row(t, s)
+            np.testing.assert_array_equal(cell.cold, one.cold, err_msg=err)
+            np.testing.assert_array_equal(cell.invocations, one.invocations,
+                                          err_msg=err)
+            np.testing.assert_array_equal(cell.wasted_minutes,
+                                          one.wasted_minutes, err_msg=err)
+            np.testing.assert_array_equal(cell.final_prewarm,
+                                          one.final_prewarm, err_msg=err)
+            np.testing.assert_array_equal(cell.final_keep_alive,
+                                          one.final_keep_alive, err_msg=err)
 
-    for fn, want in (
-            (lambda: simulate_hybrid_batch(trace, cfg, use_pallas=False),
-             want_hybrid),
-            (lambda: simulate_fixed_batch(trace, 10.0), want_fixed),
-            (lambda: simulate_hybrid_batch_reference(trace, cfg), want_ref),
-            (lambda: simulate(trace, HybridHistogramPolicy(cfg)),
-             want_hybrid),
-            (lambda: simulate(trace, FixedKeepAlivePolicy(10.0)),
-             want_fixed)):
-        with warnings.catch_warnings(record=True) as rec:
-            warnings.simplefilter("always")
-            got = fn()
-        dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
-        assert len(dep) == 1, [str(w.message) for w in rec]
-        assert "repro.core.experiment" in str(dep[0].message)
-        np.testing.assert_array_equal(got.cold, want.cold)
-        np.testing.assert_array_equal(got.wasted_minutes,
-                                      want.wasted_minutes)
+
+def test_workload_specs_accepted_everywhere(trace):
+    """run()/sweep() take WorkloadSpec wherever they take Trace, and the
+    spec materializes deterministically to the same trace each time."""
+    wspec = azure_like(40, days=2.0, seed=3, max_events=16)
+    via_spec = run(wspec, FixedSpec(10.0))
+    via_trace = run(wspec.materialize(), FixedSpec(10.0))
+    np.testing.assert_array_equal(via_spec.cold, via_trace.cold)
+    np.testing.assert_array_equal(via_spec.wasted_minutes,
+                                  via_trace.wasted_minutes)
+    grid = sweep(traces=[wspec, trace], specs=[FixedSpec(10.0)])
+    assert grid.trace_name(0) == wspec.name
+    assert grid.trace_name(1) == "trace-1"
+    np.testing.assert_array_equal(grid.row(0, 0).cold, via_spec.cold)
 
 
-def test_simulate_shim_falls_back_to_scalar_for_custom_policy(trace):
-    class Weird(NoUnloadingPolicy):
-        pass
+# --- removed deprecation shims ----------------------------------------------
 
-    with pytest.deprecated_call():
-        got = simulate(trace, Weird())
-    # Weird is a NoUnloadingPolicy subclass -> coerced; a truly foreign
-    # policy goes through the scalar engine
-    from repro.core.policy import Policy, PolicyWindows
 
-    class Constant(Policy):
-        def windows(self, app_id):
-            return PolicyWindows(0.0, 7.0)
-
-        def on_invocation(self, app_id, idle_time):
-            return self.windows(app_id)
-
-    with pytest.deprecated_call():
-        got = simulate(trace, Constant())
-    want = simulate_scalar(trace, Constant())
-    np.testing.assert_array_equal(got.cold, want.cold)
+def test_removed_shims_raise_with_pointer():
+    import repro.core
+    import repro.core.simulator as sim
+    for name in ("simulate", "simulate_fixed_batch", "simulate_hybrid_batch",
+                 "simulate_hybrid_batch_reference"):
+        for mod in (sim, repro.core):
+            with pytest.raises(AttributeError,
+                               match="repro.core.experiment"):
+                getattr(mod, name)
+    with pytest.raises(AttributeError, match="no attribute"):
+        sim.definitely_not_a_thing
 
 
 # --- PolicySpec pytree + build() properties ----------------------------------

@@ -1,5 +1,7 @@
 """Simulator + workload generator tests, including engine equivalence and
 reproduction of the paper's headline policy comparisons (trend-level)."""
+import warnings
+
 import numpy as np
 import pytest
 
@@ -7,6 +9,14 @@ from repro.core import (EngineOptions, FixedKeepAlivePolicy, FixedSpec,
                         HybridConfig, HybridHistogramPolicy, HybridSpec,
                         NoUnloadSpec, generate_trace, run, simulate_scalar)
 from repro.core.workload import sample_apps
+from repro.core.workload_spec import WorkloadSpec
+
+
+def uniform_trace(n_apps, days, seed, max_events):
+    """Legacy-equivalent scaling trace (the old ``Trace.synthesize``)."""
+    return WorkloadSpec.uniform(n_apps, days=days, seed=seed,
+                                max_events=max_events,
+                                min_events=1).materialize()
 
 
 @pytest.fixture(scope="module")
@@ -147,7 +157,7 @@ def test_hybrid_pallas_path_matches_scalar():
     """The fused Pallas kernel path (interpret mode here, TPU in prod) must
     agree with the scalar oracle on a small integer-time trace."""
     from repro.core.workload import Trace
-    base = Trace.synthesize(n_apps=48, days=0.5, seed=4, max_events=24)
+    base = uniform_trace(n_apps=48, days=0.5, seed=4, max_events=24)
     padded, counts = base.to_padded()
     # integer minutes (exact in float32), in a fresh trace — to_padded's
     # cached arrays are shared and must not be mutated
@@ -164,8 +174,12 @@ def test_hybrid_pallas_path_matches_scalar():
 
 def test_synthesize_scaling_path():
     from repro.core.workload import Trace
-    t = Trace.synthesize(n_apps=5000, days=2.0, seed=9, max_events=48,
-                         app_chunk=1024)
+    with pytest.deprecated_call(match="WorkloadSpec.uniform"):
+        t = Trace.synthesize(n_apps=5000, days=2.0, seed=9, max_events=48,
+                             app_chunk=1024)
+    # the deprecated shim is exactly the uniform spec with the legacy clamp
+    direct = uniform_trace(5000, days=2.0, seed=9, max_events=48)
+    np.testing.assert_array_equal(t.to_padded()[0], direct.to_padded()[0])
     assert t.n_apps == 5000
     padded, counts = t.to_padded()
     assert padded.shape == (5000, 48)
@@ -187,14 +201,22 @@ def test_synthesize_scaling_path():
 
 def test_synthesize_rejects_invalid_chunking():
     from repro.core.workload import Trace
-    with pytest.raises(ValueError, match="app_chunk"):
-        Trace.synthesize(n_apps=10, app_chunk=0)
-    with pytest.raises(ValueError, match="app_chunk"):
-        Trace.synthesize(n_apps=10, app_chunk=-5)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        with pytest.raises(ValueError, match="app_chunk"):
+            Trace.synthesize(n_apps=10, app_chunk=0)
+        with pytest.raises(ValueError, match="app_chunk"):
+            Trace.synthesize(n_apps=10, app_chunk=-5)
+        with pytest.raises(ValueError, match="n_apps"):
+            Trace.synthesize(n_apps=-1)
+        with pytest.raises(ValueError, match="max_events"):
+            Trace.synthesize(n_apps=4, max_events=0)
     with pytest.raises(ValueError, match="n_apps"):
-        Trace.synthesize(n_apps=-1)
+        WorkloadSpec.uniform(-1).materialize()
     with pytest.raises(ValueError, match="max_events"):
-        Trace.synthesize(n_apps=4, max_events=0)
+        WorkloadSpec.uniform(4, max_events=0).materialize()
+    with pytest.raises(ValueError, match="min_events"):
+        WorkloadSpec.uniform(4, min_events=3).materialize()
 
 
 def test_simulate_rejects_invalid_app_chunk(int_trace):
@@ -205,32 +227,40 @@ def test_simulate_rejects_invalid_app_chunk(int_trace):
 
 
 def test_synthesize_ragged_last_chunk():
-    """App counts that are NOT a multiple of app_chunk must produce a fully
-    populated trace — the last ragged chunk used to be easy to get wrong by
-    relying on callers to align n_apps."""
+    """App counts that are NOT a multiple of the generation block must
+    produce a fully populated trace — and chunk sizing must never change
+    the result (generation is block-aligned and chunk-size-invariant)."""
     from repro.core.workload import Trace
-    t = Trace.synthesize(n_apps=1000, days=1.0, seed=2, max_events=24,
-                         app_chunk=384)   # chunks: 384, 384, 232 (ragged)
+    t = uniform_trace(1000, days=1.0, seed=2, max_events=24)
     padded, counts = t.to_padded()
-    assert padded.shape == (1000, 24)
+    assert padded.shape[0] == 1000 and padded.shape[1] <= 24
     assert counts.min() >= 1
-    # the ragged tail chunk is as well-formed as the full ones
+    # the ragged tail is as well-formed as the rest
+    width = padded.shape[1]
     tail = padded[768:]
-    assert np.all(np.isfinite(tail[np.arange(24)[None, :] <
+    assert np.all(np.isfinite(tail[np.arange(width)[None, :] <
                                    counts[768:, None]]))
     for i in (767, 768, 999):
         ev = t.events(i)
         assert len(ev) == counts[i]
         assert np.all(np.diff(ev) >= 0)
         assert np.all(np.isinf(padded[i, counts[i]:]))
+    # legacy app_chunk values are accepted and cannot change the trace
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        a = Trace.synthesize(n_apps=1000, days=1.0, seed=2, max_events=24,
+                             app_chunk=384)
+        b = Trace.synthesize(n_apps=1000, days=1.0, seed=2, max_events=24,
+                             app_chunk=10 ** 9)
+    np.testing.assert_array_equal(a.to_padded()[0], b.to_padded()[0])
+    np.testing.assert_array_equal(a.to_padded()[0], padded)
 
 
 def test_hybrid_ragged_chunk_parity():
     """A bucket whose size is not a multiple of app_chunk (ragged last
     chunk) must change nothing — including through the Pallas path, whose
     kernel tiles and pads independently of the chunking."""
-    from repro.core.workload import Trace
-    t = Trace.synthesize(n_apps=23, days=0.5, seed=6, max_events=12)
+    t = uniform_trace(23, days=0.5, seed=6, max_events=12)
     cfg = HybridConfig(use_arima=False)
     whole = run(t, HybridSpec.from_config(cfg))
     ragged = run(t, HybridSpec.from_config(cfg),
@@ -249,8 +279,7 @@ def test_hybrid_parity_power_of_two_bins():
     n_bins] answer space — with a power-of-two bin count an iteration-short
     search returns the wrong head bin and flips windows vs the oracle."""
     from repro.core.histogram import HistogramConfig
-    from repro.core.workload import Trace
-    t = Trace.synthesize(n_apps=64, days=1.0, seed=33, max_events=32)
+    t = uniform_trace(64, days=1.0, seed=33, max_events=32)
     cfg = HybridConfig(histogram=HistogramConfig(range_minutes=128.0),
                        use_arima=False)
     hs = simulate_scalar(t, HybridHistogramPolicy(cfg))
@@ -276,14 +305,63 @@ def test_find_first_ge_power_of_two_bins():
 
 
 def test_synthesize_parity_small():
-    from repro.core.workload import Trace
-    t = Trace.synthesize(n_apps=64, days=1.0, seed=21, max_events=32)
+    t = uniform_trace(64, days=1.0, seed=21, max_events=32)
     cfg = HybridConfig(use_arima=False)
     hs = simulate_scalar(t, HybridHistogramPolicy(cfg))
     hb = run(t, HybridSpec.from_config(cfg))
     np.testing.assert_array_equal(hb.cold, hs.cold)
     np.testing.assert_allclose(hb.wasted_minutes, hs.wasted_minutes,
                                rtol=1e-6, atol=1e-6)
+
+
+def test_zero_event_apps_consistent_across_engines():
+    """Regression (the legacy synthesize clamped Poisson counts to >= 1, so
+    no engine ever saw a count-0 row): the spec engine's default allows
+    zero-event apps, and every engine must agree on them — zero cold
+    starts, zero invocations, zero waste, the policy's initial windows, and
+    no contribution to always_cold_fraction."""
+    # near-zero rates: most apps get no events at all
+    t = WorkloadSpec.uniform(96, days=0.02, seed=11, max_events=8).materialize()
+    _, counts = t.to_padded()
+    zeros = np.where(counts == 0)[0]
+    assert len(zeros) > 10, "fixture must actually contain zero-event apps"
+
+    # a list-backed trace with an explicitly empty row exercises the same
+    # contract on the eager representation
+    lt = __import__("repro.core.workload", fromlist=["Trace"]).Trace(
+        specs=None, times=[np.asarray([1.0, 7.0]), np.asarray([])],
+        duration_minutes=60.0)
+
+    for trace, zsel in ((t, zeros), (lt, np.asarray([1]))):
+        spec = HybridSpec(range_minutes=48.0, use_arima=False)
+        results = {eng: run(trace, spec, engine=eng)
+                   for eng in ("scalar", "fused", "pallas", "reference")}
+        base = results["scalar"]
+        assert np.all(base.invocations[zsel] == 0)
+        assert np.all(base.cold[zsel] == 0)
+        assert np.all(base.wasted_minutes[zsel] == 0.0)
+        # never-invoked apps report the policy's initial (standard) windows
+        assert np.all(base.final_prewarm[zsel] == 0.0)
+        assert np.all(base.final_keep_alive[zsel] == 48.0)
+        for eng, res in results.items():
+            np.testing.assert_array_equal(res.cold, base.cold, err_msg=eng)
+            np.testing.assert_array_equal(res.invocations, base.invocations,
+                                          err_msg=eng)
+            np.testing.assert_array_equal(res.final_prewarm,
+                                          base.final_prewarm, err_msg=eng)
+            np.testing.assert_array_equal(res.final_keep_alive,
+                                          base.final_keep_alive, err_msg=eng)
+            np.testing.assert_allclose(res.wasted_minutes,
+                                       base.wasted_minutes, rtol=1e-5,
+                                       atol=1e-3, err_msg=eng)
+        fx = run(trace, FixedSpec(10.0))
+        assert np.all(fx.cold[zsel] == 0)
+        assert np.all(fx.final_keep_alive[zsel] == 10.0)
+        # count-0 rows must not inflate the always-cold fraction
+        invoked = base.invocations > 0
+        want = (np.mean(base.cold[invoked] >= base.invocations[invoked])
+                if invoked.any() else 0.0)
+        assert base.always_cold_fraction == pytest.approx(want)
 
 
 def test_always_cold_fraction_ignores_zero_invocation_apps():

@@ -1,0 +1,288 @@
+"""WorkloadSpec scenario API: distribution faithfulness of the cohort
+samplers against the paper's §3 anchors, seed-determinism and
+chunk-size-invariance of the one vectorized engine, scenario semantics
+(flash crowd / weekend dip / timer mix), and the tiny trace x policy grid
+smoke that CI runs so the (T, S) path cannot rot.
+"""
+import numpy as np
+import pytest
+
+import jax.tree_util as tree_util
+
+from repro.core.experiment import FixedSpec, HybridSpec, run, sweep
+from repro.core.workload import (MINUTES_PER_DAY, PATTERNS, Trace,
+                                 generate_trace)
+from repro.core import workload as wl
+from repro.core import workload_spec as ws
+from repro.core.workload_spec import (SCENARIOS, Cohort, WorkloadSpec,
+                                      azure_like, bursty, flash_crowd,
+                                      materialize_loop, scenario, timer_heavy,
+                                      weekend_dip)
+
+
+# --- distribution faithfulness: cohort samplers vs the paper's anchors -------
+
+
+@pytest.fixture(scope="module")
+def population():
+    rng = np.random.default_rng(123)
+    return ws._sample_population(rng, 6000, Cohort())
+
+
+def test_rate_marginal_matches_fig5_anchors(population):
+    """Fig. 5(a): 45% of apps <= 1/hour, 81% <= 1/minute, ~8 orders of
+    magnitude end to end (timer snapping moves mass only within its band)."""
+    rates = population["rates"]
+    assert np.mean(rates <= 24.0) == pytest.approx(0.45, abs=0.06)
+    assert np.mean(rates <= MINUTES_PER_DAY) == pytest.approx(0.81, abs=0.05)
+    assert rates.max() / rates.min() > 1e6
+
+
+def test_memory_marginal_matches_burr_quantiles(population):
+    """Fig. 8 Burr XII fit: sampled quantiles match the analytic inverse
+    CDF x_p = lambda * ((1-p)^(-1/k) - 1)^(1/c) at fixed percentiles."""
+    mem = population["memory"]
+    for p in (25.0, 50.0, 75.0, 95.0):
+        want = wl.MEM_BURR_LAMBDA * (
+            (1.0 - p / 100.0) ** (-1.0 / wl.MEM_BURR_K) - 1.0
+        ) ** (1.0 / wl.MEM_BURR_C)
+        got = np.percentile(mem, p)
+        assert got == pytest.approx(want, rel=0.12), (p, got, want)
+
+
+def test_exec_marginal_matches_lognormal_quantiles(population):
+    """Fig. 7 lognormal(mu=-0.38, sigma=2.36) seconds: quantiles of the log
+    samples sit on mu + sigma * z_p."""
+    logs = np.log(population["execs"])
+    assert logs.mean() == pytest.approx(wl.EXEC_LOG_MEAN, abs=0.12)
+    assert logs.std() == pytest.approx(wl.EXEC_LOG_SIGMA, rel=0.05)
+    # z-scores for 25/75/95th percentiles
+    for p, z in ((25.0, -0.67449), (75.0, 0.67449), (95.0, 1.64485)):
+        want = wl.EXEC_LOG_MEAN + wl.EXEC_LOG_SIGMA * z
+        assert np.percentile(logs, p) == pytest.approx(want, abs=0.25)
+
+
+def test_trigger_marginals_match_fig3(population):
+    trig = population["trig"]
+    combos = [wl._TRIGGER_COMBOS[i] for i in trig]
+    http = np.mean([("http" in c) for c in combos])
+    timer = np.mean([("timer" in c) for c in combos])
+    assert http == pytest.approx(0.6407, abs=0.05)
+    assert timer == pytest.approx(0.2915, abs=0.05)
+
+
+def test_rate_band_cohort_truncates_the_cdf():
+    rng = np.random.default_rng(7)
+    pop = ws._sample_population(
+        rng, 2000, Cohort(rate_log10_min=0.0, rate_log10_max=2.0))
+    rates = pop["rates"]
+    # timer snapping can nudge rates to the nearest round period, so allow
+    # one snapping notch of slack around the band
+    assert rates.min() >= 10.0 ** 0.0 / 1.5
+    assert rates.max() <= 10.0 ** 2.0 * 1.5
+    assert len(np.unique(np.round(np.log10(rates), 2))) > 50
+
+
+def test_pattern_mix_is_rate_conditioned(population):
+    """Low-rate apps are predominantly bursty HTTP; high-rate apps lean
+    Poisson/machine (Sections 3.2-3.3)."""
+    rates, pat = population["rates"], population["pattern"]
+    low, high = rates <= 24.0, rates > MINUTES_PER_DAY
+    assert np.mean(pat[low] == PATTERNS.index("bursty")) > 0.5
+    assert (np.mean(pat[high] == PATTERNS.index("poisson"))
+            > np.mean(pat[low] == PATTERNS.index("poisson")))
+
+
+# --- engine determinism / invariance ----------------------------------------
+
+
+def test_materialize_is_seed_deterministic_and_spec_pure():
+    spec = azure_like(3000, days=2.0, seed=5, max_events=32)
+    a, b = spec.materialize(), spec.materialize()
+    pa, ca = a.to_padded()
+    pb, cb = b.to_padded()
+    np.testing.assert_array_equal(pa, pb)
+    np.testing.assert_array_equal(ca, cb)
+    other = azure_like(3000, days=2.0, seed=6, max_events=32).materialize()
+    assert not np.array_equal(other.to_padded()[1], ca)
+
+
+def test_generation_is_chunk_size_invariant():
+    """The legacy app_chunk knob is a pure memory hint: any value yields the
+    identical trace (generation blocks are aligned to absolute app indices,
+    with a counter RNG per block)."""
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        traces = [Trace.synthesize(700, days=1.0, seed=3, max_events=16,
+                                   app_chunk=ch) for ch in (1, 13, 700, 10**8)]
+    base_p, base_c = traces[0].to_padded()
+    for t in traces[1:]:
+        p, c = t.to_padded()
+        np.testing.assert_array_equal(p, base_p)
+        np.testing.assert_array_equal(c, base_c)
+
+
+def test_eager_and_padded_share_population_blocks():
+    """Eager materialization of the same spec yields the same app count,
+    deterministic AppSpecs, and events inside the window."""
+    spec = azure_like(500, days=1.0, seed=2, max_events=24, min_events=1)
+    t1 = spec.materialize(eager=True)
+    t2 = spec.materialize(eager=True)
+    assert t1.n_apps == 500 and t1.specs is not None
+    assert [s.app_id for s in t1.specs][:3] == ["app-000000", "app-000001",
+                                                "app-000002"]
+    for i in (0, 250, 499):
+        np.testing.assert_array_equal(t1.times[i], t2.times[i])
+        assert t1.specs[i] == t2.specs[i]
+        assert len(t1.times[i]) >= 1
+        assert np.all((t1.times[i] >= 0) & (t1.times[i] < spec.duration_minutes))
+        # pattern-mode events respect the dataset's 1-minute binning
+        assert np.all(np.diff(t1.times[i]) >= 1.0 - 1e-9)
+
+
+def test_zero_event_apps_allowed_by_default():
+    t = WorkloadSpec.uniform(200, days=0.05, seed=1, max_events=8).materialize()
+    _, counts = t.to_padded()
+    assert counts.min() == 0                      # the old >=1 clamp is gone
+    t1 = WorkloadSpec.uniform(200, days=0.05, seed=1, max_events=8,
+                              min_events=1).materialize()
+    assert t1.to_padded()[1].min() >= 1
+
+
+def test_uniform_is_padded_only():
+    with pytest.raises(ValueError, match="padded-only"):
+        WorkloadSpec.uniform(10).materialize(eager=True)
+
+
+def test_spec_pytree_roundtrip_and_mix():
+    spec = WorkloadSpec.mix(
+        [Cohort(name="a", weight=3.0), Cohort(name="b", weight=1.0,
+                                              rate_log10_min=2.0)],
+        n_apps=100, days=3.0, seed=9, label="mixed")
+    leaves, treedef = tree_util.tree_flatten(spec)
+    assert tree_util.tree_unflatten(treedef, leaves) == spec
+    assert spec.name == "mixed"
+    segs = ws._cohort_segments(spec.n_apps, spec.cohorts)
+    assert [(hi - lo) for _, lo, hi in segs] == [75, 25]
+    with pytest.raises(ValueError, match="unknown scenario"):
+        scenario("nope")
+    assert scenario("bursty", 50, days=1.0).n_apps == 50
+
+
+def test_spec_validation_errors():
+    with pytest.raises(ValueError, match="days"):
+        WorkloadSpec(n_apps=1, days=0.0).materialize()
+    with pytest.raises(ValueError, match="generator"):
+        dataclass_replace = WorkloadSpec(n_apps=1, generator="nope")
+        dataclass_replace.materialize()
+    with pytest.raises(ValueError, match="weight"):
+        WorkloadSpec.mix([Cohort(weight=0.0)], n_apps=1).materialize()
+    with pytest.raises(ValueError, match="probability vector"):
+        WorkloadSpec.mix([Cohort(pattern_probs=(1.0,))], n_apps=1).materialize()
+    with pytest.raises(ValueError, match="diurnal_amplitude"):
+        WorkloadSpec(n_apps=1, diurnal_amplitude=2.0).materialize()
+
+
+# --- scenario semantics ------------------------------------------------------
+
+
+def test_timer_heavy_is_low_cv_and_bursty_is_high_cv():
+    def cvs(trace):
+        out = []
+        for i in range(trace.n_apps):
+            ia = trace.iats(i)
+            if len(ia) >= 5:
+                out.append(np.std(ia) / max(np.mean(ia), 1e-9))
+        return np.asarray(out)
+
+    cv_timer = cvs(timer_heavy(300, days=3.0, seed=1,
+                               max_events=48).materialize())
+    cv_burst = cvs(bursty(300, days=3.0, seed=1, max_events=48).materialize())
+    assert np.mean(cv_timer < 0.1) > 0.35
+    assert np.mean(cv_burst > 1.0) > 0.5
+    assert np.mean(cv_burst > 1.0) > np.mean(cv_timer > 1.0)
+
+
+def test_multi_timer_covers_full_window_despite_slot_split():
+    """Regression: each of the two merged timers owns only max_ev//2+1
+    slots. With asymmetric periods the faster timer can pass the combined
+    count guard yet overrun its own half — it must be rate-capped
+    (period-stretched), never silently truncated mid-window. Truncation
+    shows up as an event-density cliff: the faster timer goes dark for the
+    window tail while the slow one keeps ticking."""
+    rng = np.random.default_rng(0)
+    g, duration, max_ev = 40, 2880.0, 64
+    # per1 = 64 -> the fast timer needs ~46 slots; apps whose period ratio
+    # lands near 3 used to pass the combined <= max_ev guard unstretched
+    pop = dict(rates=np.full(g, 45.0), pattern=np.full(g, 1, np.int32),
+               period=np.full(g, 32.0))
+    frame, counts = ws._gen_patterns_block(rng, pop, duration, max_ev,
+                                           warp=None, min_events=0)
+    assert counts.min() >= 4
+    q = duration / 4.0
+    finite = np.isfinite(frame)
+    first_q = (finite & (frame < q)).sum(axis=1)
+    last_q = (finite & (frame >= 3.0 * q)).sum(axis=1)
+    # timers are periodic: per-app density must not collapse in the tail
+    # (pre-fix, truncated apps showed last/first ratios of ~0.25)
+    assert np.all(last_q >= 0.4 * first_q), (last_q / np.maximum(first_q, 1))
+
+
+def test_flash_crowd_concentrates_events():
+    spec = flash_crowd(400, days=1.0, seed=4, max_events=64)
+    t = spec.materialize()
+    padded, counts = t.to_padded()
+    ev = padded[np.isfinite(padded)]
+    lo, hi = spec.flash_start, spec.flash_start + spec.flash_duration
+    in_window = np.mean((ev >= lo) & (ev < hi))
+    base_rate = (hi - lo) / t.duration_minutes
+    assert in_window > 2.0 * base_rate       # the window runs far hotter
+
+
+def test_weekend_dip_reduces_weekend_share():
+    def share(spec):
+        padded, _ = spec.materialize().to_padded()
+        ev = padded[np.isfinite(padded)]
+        day = (ev // MINUTES_PER_DAY).astype(np.int64) % 7
+        return np.mean(day >= 5)
+
+    dipped = share(weekend_dip(400, days=14.0, seed=4, max_events=64))
+    flat = share(azure_like(400, days=14.0, seed=4, max_events=64))
+    # timers keep firing on weekends; the warped (human) traffic dips
+    assert dipped < 0.75 * (2.0 / 7.0)
+    assert dipped < 0.75 * flat
+
+
+def test_loop_baseline_agrees_distributionally():
+    """The per-app Python baseline (benchmarks/trace_gen.py) is the same
+    workload class: comparable total event mass and per-app count spread."""
+    spec = azure_like(400, days=2.0, seed=8, max_events=32)
+    fast = spec.materialize()
+    slow = materialize_loop(spec)
+    cf, cs = fast.to_padded()[1], slow.to_padded()[1]
+    assert cs.shape == cf.shape
+    assert np.abs(cf.mean() - cs.mean()) / max(cs.mean(), 1e-9) < 0.35
+    with pytest.raises(ValueError, match="patterns"):
+        materialize_loop(WorkloadSpec.uniform(10))
+
+
+# --- the (T, S) smoke CI runs ------------------------------------------------
+
+
+def test_scenario_grid_smoke():
+    """Tiny sweep(traces=scenarios, specs=grid): every scenario library
+    entry materializes, sweeps against a mixed policy grid, and each cell
+    matches its single-trace run()."""
+    traces = [SCENARIOS[name](60, days=1.0, seed=1, max_events=16)
+              for name in sorted(SCENARIOS) if name != "weekend_dip"]
+    traces.append(weekend_dip(60, days=2.0, seed=1, max_events=16))
+    grid = [FixedSpec(10.0), HybridSpec(range_minutes=48.0, use_arima=False)]
+    res = sweep(traces=traces, specs=grid)
+    assert res.shape == (len(traces), len(grid))
+    assert [p.name for p in res.points()[0]] == ["fixed-10m", "hybrid-48m"]
+    for t, spec in enumerate(traces):
+        one = run(spec.materialize(), grid[1])
+        np.testing.assert_array_equal(res.row(t, 1).cold, one.cold)
+        np.testing.assert_array_equal(res.row(t, 1).wasted_minutes,
+                                      one.wasted_minutes)
