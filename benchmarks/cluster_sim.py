@@ -1,0 +1,164 @@
+"""Cluster-simulator throughput: the columnar vectorized engine vs the
+per-event Python oracle, plus the 1M-app fleet point.
+
+The per-event oracle (``repro.serving.cluster_sim``) replays one merged
+event stream through per-worker warm pools — exact, but every event pays a
+Python dict walk over the pool. The columnar engine
+(``repro.serving.cluster_vector``) computes the identical trajectory in
+three array passes over an ``AppTable``. This benchmark measures both on
+the same 100k-app azure_like fleet, asserts the trajectories agree
+*bit-for-bit* before claiming any speedup (the conformance contract), and
+records the 1M-app vector-only fleet run the paper-scale analysis needs.
+
+Results go to ``BENCH_cluster_sim.json`` (repo root); the canonical record
+is the 100k-app point (target: >= 20x event throughput). Reduced/--smoke
+runs never clobber it.
+
+  PYTHONPATH=src python -m benchmarks.cluster_sim [--smoke] [--apps N]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+import time
+
+import numpy as np
+
+from repro.core.experiment import HybridSpec
+from repro.core.workload_spec import azure_like
+from repro.serving.apptable import AppTable
+from repro.serving.cluster_vector import ClusterSpec, run_cluster
+
+# Anchored to the repo root (not the CWD) so re-records always update the
+# tracked file.
+JSON_PATH = os.environ.get(
+    "BENCH_CLUSTER_SIM_JSON",
+    os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                 "BENCH_cluster_sim.json"))
+
+DAYS = 0.5
+MAX_EVENTS = 6
+FLEET_APPS = 1_000_000
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+def run(n_apps: int = 100_000, smoke: bool = False):
+    n_workers = 64
+    if smoke:
+        n_apps, n_workers = 2_000, 16
+    full_scale = n_apps >= 100_000
+
+    policy = HybridSpec(use_arima=False)
+    cluster = ClusterSpec(n_workers=n_workers,
+                          hbm_budget_bytes=float("inf"))
+    spec = azure_like(n_apps, days=DAYS, seed=17, max_events=MAX_EVENTS)
+    table, t_table = _timed(lambda: AppTable.from_spec(spec))
+    n_events = table.n_events
+
+    vec, t_vec0 = _timed(
+        lambda: run_cluster(table, policy, cluster, engine="vector"))
+    _, t_vec = _timed(
+        lambda: run_cluster(table, policy, cluster, engine="vector"))
+    t_vec = min(t_vec0, t_vec)                   # steady state, but fair
+    sca, t_sca = _timed(
+        lambda: run_cluster(table, policy, cluster, engine="scalar"))
+
+    # Conformance before any throughput number: the engines must agree
+    # bit-for-bit on the trajectory they are being timed on.
+    np.testing.assert_array_equal(vec.cold_pct_per_app, sca.cold_pct_per_app)
+    np.testing.assert_array_equal(vec.latencies_s, sca.latencies_s)
+    np.testing.assert_allclose(vec.wasted_gb_minutes, sca.wasted_gb_minutes,
+                               rtol=1e-9)
+
+    speedup = t_sca / t_vec
+    rows = [
+        (f"cluster_vector_{n_apps}apps_seconds", t_vec, ""),
+        (f"cluster_oracle_{n_apps}apps_seconds", t_sca, ""),
+        ("cluster_vector_events_per_sec", n_events / t_vec, ""),
+        ("cluster_oracle_events_per_sec", n_events / t_sca, ""),
+        ("cluster_vector_over_oracle_speedup", speedup, ""),
+        ("cluster_table_build_seconds", t_table, ""),
+    ]
+    record = {
+        "scenario": spec.name,
+        "n_apps": n_apps, "n_workers": n_workers,
+        "days": DAYS, "max_events": MAX_EVENTS,
+        "n_events": int(n_events),
+        "policy": "hybrid(arima=off)",
+        "vector_seconds": t_vec,
+        "oracle_seconds": t_sca,
+        "vector_events_per_sec": n_events / t_vec,
+        "oracle_events_per_sec": n_events / t_sca,
+        "vector_over_oracle_speedup": speedup,
+        "table_build_seconds": t_table,
+        "conformance": "bit-exact (cold %, latencies; wasted rtol 1e-9)",
+        "meta": {
+            "platform": platform.platform(),
+            "numpy": np.__version__,
+            "recorded_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        },
+    }
+
+    if full_scale:
+        assert speedup >= 20.0, (
+            f"vectorized cluster engine only {speedup:.1f}x over the "
+            f"per-event oracle at {n_apps} apps (target: >= 20x)")
+        # The fleet point the oracle cannot reach: 1M apps, vector only.
+        fspec = azure_like(FLEET_APPS, days=DAYS, seed=17,
+                           max_events=MAX_EVENTS)
+        ftable, t_ftable = _timed(lambda: AppTable.from_spec(fspec))
+        fcluster = ClusterSpec(n_workers=1024,
+                               hbm_budget_bytes=float("inf"))
+        _, t_fleet = _timed(
+            lambda: run_cluster(ftable, policy, fcluster, engine="vector"))
+        rows += [
+            (f"cluster_fleet_{FLEET_APPS}apps_seconds", t_fleet, ""),
+            ("cluster_fleet_events_per_sec",
+             ftable.n_events / t_fleet, ""),
+        ]
+        record["fleet"] = {
+            "n_apps": FLEET_APPS, "n_workers": 1024,
+            "n_events": int(ftable.n_events),
+            "table_build_seconds": t_ftable,
+            "vector_seconds": t_fleet,
+            "vector_events_per_sec": ftable.n_events / t_fleet,
+        }
+
+    # Only full-scale runs (or explicit env-var targets) touch the tracked
+    # record: reduced/smoke invocations must not clobber the canonical
+    # 100k-app measurement.
+    if full_scale or "BENCH_CLUSTER_SIM_JSON" in os.environ:
+        try:
+            with open(JSON_PATH, "w") as f:
+                json.dump(record, f, indent=2, sort_keys=True)
+                f.write("\n")
+        except OSError as e:
+            print(f"# WARNING: could not record {JSON_PATH}: {e}",
+                  file=sys.stderr)
+    else:
+        print(f"# reduced run: not recording {JSON_PATH}", file=sys.stderr)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fleet (CI): exercises both engines and the "
+                         "conformance assert, not the throughput claim")
+    ap.add_argument("--apps", type=int, default=100_000)
+    args = ap.parse_args()
+    for key, value, ref in run(n_apps=args.apps, smoke=args.smoke):
+        v = f"{value:.6g}" if isinstance(value, float) else value
+        print(f"{key},{v},{ref}")
+
+
+if __name__ == "__main__":
+    main()

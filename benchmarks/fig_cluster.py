@@ -3,16 +3,26 @@
 18 workers (paper: 18 invoker VMs), mid-range-popularity apps (paper:
 randomly selected mid-range apps), 8 simulated hours. Hybrid vs 10-minute
 fixed keep-alive; also straggler hedging on/off tail latency.
+
+Runs through the cluster front door
+(``repro.serving.cluster_vector.run_cluster``) on a single shared
+``AppTable``, pinned to ``engine="scalar"``: this scenario packs ~228 GB
+of model weights onto 18 x 16 GB workers, so HBM evictions are part of the
+experiment — the regime the vectorized engine deliberately refuses (see
+``benchmarks/cluster_sim.py`` for its eviction-free throughput runs).
 """
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
 from repro.core.experiment import FixedSpec, HybridSpec
 from repro.core.workload import Trace, generate_trace
-from repro.runtime.straggler import HedgePolicy
-from repro.serving.cluster_sim import ClusterConfig, ClusterSim
 from repro.launch.serve import build_registry
+from repro.runtime.straggler import HedgePolicy
+from repro.serving.apptable import AppTable
+from repro.serving.cluster_vector import ClusterSpec, run_cluster
 
 
 def _midrange_trace(n_apps=68, minutes=480.0, seed=5):
@@ -26,7 +36,6 @@ def _midrange_trace(n_apps=68, minutes=480.0, seed=5):
     for j, i in enumerate(idx):
         s = big.specs[i]
         # re-id so registry keys line up
-        import dataclasses
         specs.append(dataclasses.replace(s, app_id=f"app-{j:06d}"))
         times.append(big.times[i])
     return Trace(specs=specs, times=times, duration_minutes=minutes)
@@ -35,13 +44,18 @@ def _midrange_trace(n_apps=68, minutes=480.0, seed=5):
 def run(seed: int = 5):
     trace = _midrange_trace(seed=seed)
     reg = build_registry(len(trace.specs), seed, hbm_budget_bytes=16e9)
+    table = AppTable.from_trace(
+        trace, weight_bytes=[reg.get(s.app_id).weight_bytes
+                             for s in trace.specs])
+    # engine="scalar": the 16 GB budget is oversubscribed by design, and
+    # evictions are sequential (oracle-only).
+    base = ClusterSpec(n_workers=18)
+    cell = lambda policy, cl: run_cluster(table, policy, cl, engine="scalar")
     rows = []
 
     hybrid_spec = HybridSpec(use_arima=False)
-    fixed = ClusterSim(reg, FixedSpec(10.0),
-                       ClusterConfig(n_workers=18)).run(trace)
-    hyb = ClusterSim(reg, hybrid_spec,
-                     ClusterConfig(n_workers=18)).run(trace)
+    fixed = cell(FixedSpec(10.0), base)
+    hyb = cell(hybrid_spec, base)
 
     rows.append(("fig19_fixed10_cold_p75", fixed.cold_pct_p75, ""))
     rows.append(("fig19_hybrid_cold_p75", hyb.cold_pct_p75, ""))
@@ -54,19 +68,16 @@ def run(seed: int = 5):
     rows.append(("fig19_hybrid_lat_p99_s", hyb.latency_pct(99), ""))
 
     # straggler mitigation (beyond-paper, required at 1000+ node scale)
-    hedged = ClusterSim(reg, hybrid_spec,
-                        ClusterConfig(n_workers=18,
-                                      hedge=HedgePolicy())).run(trace)
-    unhedged = ClusterSim(
-        reg, hybrid_spec,
-        ClusterConfig(n_workers=18, hedge=HedgePolicy(enabled=False))).run(trace)
+    hedged = cell(hybrid_spec,
+                  dataclasses.replace(base, hedge=HedgePolicy()))
+    unhedged = cell(hybrid_spec,
+                    dataclasses.replace(base, hedge=HedgePolicy(enabled=False)))
     rows.append(("straggler_hedged_lat_p99_s", hedged.latency_pct(99), ""))
     rows.append(("straggler_unhedged_lat_p99_s", unhedged.latency_pct(99), ""))
 
     # controller restart resilience (fault tolerance)
-    restart = ClusterSim(
-        reg, hybrid_spec,
-        ClusterConfig(n_workers=18, checkpoint_at_minute=240.0)).run(trace)
+    restart = cell(hybrid_spec,
+                   dataclasses.replace(base, checkpoint_at_minute=240.0))
     rows.append(("controller_restart_cold_p75", restart.cold_pct_p75, ""))
     rows.append(("controller_restart_mid_run",
                  1.0 if restart.restored_mid_run else 0.0, 1.0))

@@ -23,13 +23,45 @@ sys.path.insert(0, os.path.join(REPO, "tests"))
 from repro.core.policy import HybridHistogramPolicy           # noqa: E402
 from repro.core.simulator import simulate_scalar              # noqa: E402
 
-from golden_traces import GOLDEN_TRACES                       # noqa: E402
+from golden_traces import GOLDEN_TRACES, cluster_small_fleet  # noqa: E402
 
 GOLDEN_DIR = os.path.join(REPO, "tests", "golden")
 
 
+def regen_cluster() -> None:
+    """The small-fleet cluster golden (cluster_small.json): the per-event
+    scalar oracle's cold %, wasted GB-minutes, latency percentiles and
+    per-worker counters; both cluster engines replay against it."""
+    from repro.serving.cluster_vector import run_cluster
+
+    workload, policy, cluster = cluster_small_fleet()
+    res = run_cluster(workload, policy, cluster, engine="scalar")
+    record = {
+        "workload": workload.name,
+        "n_apps": workload.n_apps,
+        "n_workers": cluster.n_workers,
+        "balancing": cluster.balancing,
+        "policy": policy.name,
+        "cold_pct_per_app": res.cold_pct_per_app.tolist(),
+        "wasted_gb_minutes": res.wasted_gb_minutes,
+        "latency_pct": {q: res.latency_pct(float(q))
+                        for q in ("50", "90", "99")},
+        "stats_per_worker": [
+            {k: s[k] for k in ("cold_starts", "warm_starts", "prewarms",
+                               "unloads", "evictions", "bytes_moved")}
+            for s in res.stats_per_worker],
+    }
+    path = os.path.join(GOLDEN_DIR, "cluster_small.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}: {workload.n_apps} apps on {cluster.n_workers} "
+          f"workers, {len(res.latencies_s)} events")
+
+
 def main() -> None:
     os.makedirs(GOLDEN_DIR, exist_ok=True)
+    regen_cluster()
     for name, (make_trace, cfg) in sorted(GOLDEN_TRACES.items()):
         trace = make_trace()
         res = simulate_scalar(trace, HybridHistogramPolicy(cfg))

@@ -380,7 +380,7 @@ def _sweep_one(trace: Trace, specs: Sequence, eng: str,
     return SweepResult(specs, eng, cold, inv, waste, pre, keep)
 
 
-def sweep(trace=None, specs: Sequence = None, *, traces=None,
+def sweep(trace=None, specs: Sequence = None, *, traces=None, clusters=None,
           engine: str = "auto", options: Optional[EngineOptions] = None):
     """Evaluate a policy grid over one workload — or a (T, S) grid.
 
@@ -396,6 +396,13 @@ def sweep(trace=None, specs: Sequence = None, *, traces=None,
     workload (again ``Trace`` or ``WorkloadSpec``, freely mixed) is
     materialized and prepared once, swept over the whole policy grid, and
     the T :class:`SweepResult` rows come back as a :class:`SweepGrid`.
+
+    ``sweep(..., clusters=[ClusterSpec(...), ...])`` adds the *cluster*
+    axis: instead of the single-pool simulators, every cell runs the
+    fleet engine (:mod:`repro.serving.cluster_vector`) and the
+    trace x policy x cluster grid comes back as a
+    :class:`~repro.serving.cluster_vector.ClusterSweep`. Cluster engines
+    are ``"auto"``/``"vector"``/``"scalar"``.
     """
     if specs is None:
         raise TypeError("sweep() requires specs (a list of PolicySpec)")
@@ -404,6 +411,12 @@ def sweep(trace=None, specs: Sequence = None, *, traces=None,
         raise ValueError("sweep() needs at least one PolicySpec")
     if (trace is None) == (traces is None):
         raise TypeError("pass exactly one of trace= or traces=")
+    if clusters is not None:
+        from ..serving.cluster_vector import sweep_cluster
+        return sweep_cluster(traces if traces is not None else trace,
+                             specs, clusters, engine=engine,
+                             app_chunk=(options.app_chunk
+                                        if options is not None else None))
     opts = options or EngineOptions()
     eng = _resolve_engine(engine)
     if traces is None:
@@ -416,8 +429,16 @@ def sweep(trace=None, specs: Sequence = None, *, traces=None,
                               for t in traces])
 
 
-def run(trace, spec, *, engine: str = "auto",
-        options: Optional[EngineOptions] = None) -> SimResult:
+def run(trace, spec, *, engine: str = "auto", cluster=None,
+        options: Optional[EngineOptions] = None):
     """Evaluate one policy configuration (the S=1 sweep) over one workload
-    (``Trace`` or ``WorkloadSpec``)."""
+    (``Trace`` or ``WorkloadSpec``). With ``cluster=`` (a
+    :class:`~repro.serving.cluster_vector.ClusterSpec`), the cell runs the
+    fleet simulator instead and returns a
+    :class:`~repro.serving.cluster_sim.ClusterResult`."""
+    if cluster is not None:
+        from ..serving.cluster_vector import run_cluster
+        return run_cluster(trace, spec, cluster, engine=engine,
+                           app_chunk=(options.app_chunk
+                                      if options is not None else None))
     return sweep(trace, [spec], engine=engine, options=options).row(0)

@@ -26,12 +26,23 @@ while bounding trace size.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 __all__ = ["AppSpec", "Trace", "sample_apps", "generate_trace", "PATTERNS"]
+
+
+class _RemovedSynthesize:
+    """Tombstone for the removed ``Trace.synthesize`` shim (deprecated in
+    PR 5, removed after its one-cycle grace period). Any access — including
+    ``hasattr`` probes — raises with the replacement spelled out."""
+
+    def __get__(self, obj, objtype=None):
+        raise AttributeError(
+            "Trace.synthesize was removed after its deprecation cycle; use "
+            "repro.core.workload_spec.WorkloadSpec.uniform(n_apps, days=..., "
+            "seed=..., max_events=..., min_events=1).materialize() instead")
 
 MINUTES_PER_DAY = 1440.0
 
@@ -111,8 +122,9 @@ class Trace:
     specs: Optional[List[AppSpec]]
     times: Optional[List[np.ndarray]]  # per-app invocation times, minutes, sorted
     duration_minutes: float
-    # Cached/primary padded representation. Fleet-scale synthesized traces
-    # (:meth:`synthesize`) carry ONLY this form — no per-app python objects.
+    # Cached/primary padded representation. Fleet-scale generated traces
+    # (``WorkloadSpec.materialize()``) carry ONLY this form — no per-app
+    # python objects.
     _padded: Optional[Tuple[np.ndarray, np.ndarray]] = \
         dataclasses.field(default=None, repr=False)
 
@@ -139,8 +151,9 @@ class Trace:
         generated traces) so the float64 simulator scans see full-precision
         inter-arrival times. List-backed traces build a fresh array per
         call (so ``times`` edits are always honored); padded-only traces
-        (``synthesize``) return their shared primary arrays — treat those
-        as read-only, a fleet-scale trace cannot afford a copy per call.
+        (``WorkloadSpec.materialize()``) return their shared primary arrays —
+        treat those as read-only, a fleet-scale trace cannot afford a copy
+        per call.
         """
         if self._padded is not None:
             return self._padded
@@ -155,31 +168,10 @@ class Trace:
     def iats(self, i: int) -> np.ndarray:
         return np.diff(self.events(i))
 
-    @classmethod
-    def synthesize(cls, n_apps: int, days: float = 1.0, seed: int = 0,
-                   max_events: int = 64, app_chunk: int = 262144) -> "Trace":
-        """Deprecated shim: use ``WorkloadSpec.uniform(...).materialize()``.
-
-        The fleet-scale scaling path now lives in the one vectorized engine
-        behind :class:`repro.core.workload_spec.WorkloadSpec`; this wrapper
-        keeps the legacy signature and the legacy >=1-events-per-app clamp
-        (the spec engine's default allows zero-event apps). ``app_chunk``
-        is validated for backward compatibility but no longer affects the
-        result: generation is chunk-size-invariant by construction.
-        """
-        warnings.warn(
-            "Trace.synthesize is deprecated; use "
-            "repro.core.workload_spec.WorkloadSpec.uniform(...).materialize() "
-            "instead", DeprecationWarning, stacklevel=2)
-        if app_chunk < 1:
-            raise ValueError(
-                "app_chunk must be a positive app count (it is a generation "
-                f"batch size; n_apps need not be a multiple of it), got "
-                f"{app_chunk}")
-        from .workload_spec import WorkloadSpec
-        return WorkloadSpec.uniform(n_apps, days=days, seed=seed,
-                                    max_events=max_events,
-                                    min_events=1).materialize()
+    # ``Trace.synthesize`` was removed after its PR 5 deprecation cycle.
+    # ``_RemovedSynthesize`` below turns any access into an actionable
+    # AttributeError (class attribute, not a dataclass field).
+    synthesize = _RemovedSynthesize()
 
 
 def _inv_cdf(anchors: np.ndarray, u: np.ndarray) -> np.ndarray:

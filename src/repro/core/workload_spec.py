@@ -31,8 +31,8 @@ One engine materializes any spec (``spec.materialize()``):
     ``AppSpec`` objects and float64 time lists — the form the cluster sim,
     the dataset exporter, and the workload figures need.
     ``repro.core.workload.generate_trace`` is now a thin wrapper over this
-    mode; ``Trace.synthesize`` is a deprecated shim over
-    :meth:`WorkloadSpec.uniform`.
+    mode. (The old ``Trace.synthesize`` shim is gone — use
+    :meth:`WorkloadSpec.uniform` directly.)
 
 Generation is **seed-deterministic and chunk-size-invariant**: apps are
 generated in fixed index blocks, each with an independent counter-style RNG
@@ -63,7 +63,7 @@ from .workload import MINUTES_PER_DAY, PATTERNS, AppSpec, Trace
 __all__ = [
     "Cohort", "WorkloadSpec", "SCENARIOS", "scenario", "azure_like",
     "diurnal", "bursty", "timer_heavy", "flash_crowd", "weekend_dip",
-    "materialize_loop",
+    "materialize_loop", "population_columns",
 ]
 
 GENERATORS = ("patterns", "uniform")
@@ -188,10 +188,11 @@ class WorkloadSpec:
     def uniform(cls, n_apps: int, days: float = 1.0, seed: int = 0,
                 max_events: int = 64, min_events: int = 0,
                 label: Optional[str] = None) -> "WorkloadSpec":
-        """The legacy ``Trace.synthesize`` scaling workload: Fig. 5(a) rates,
-        Poisson event counts, sorted-uniform times, float32, no patterns or
-        modulation. Kept for throughput benchmarking continuity; prefer
-        :func:`azure_like` for anything that should look like §3."""
+        """The legacy scaling workload (formerly ``Trace.synthesize``):
+        Fig. 5(a) rates, Poisson event counts, sorted-uniform times, float32,
+        no patterns or modulation. Kept for throughput benchmarking
+        continuity; prefer :func:`azure_like` for anything that should look
+        like §3."""
         return cls(n_apps=n_apps, days=days, seed=seed, max_events=max_events,
                    min_events=min_events, diurnal_amplitude=0.0,
                    generator="uniform",
@@ -478,7 +479,7 @@ def _gen_patterns_block(rng, pop: Dict[str, np.ndarray], duration: float,
 def _gen_uniform_block(rng, m: int, duration: float, max_ev: int,
                        min_events: int, cohort: Cohort):
     """Legacy scaling workload: Poisson counts, sorted-uniform float32 times
-    (the pre-spec ``Trace.synthesize`` semantics, minus the >=1 clamp)."""
+    (the pre-spec scaling-trace semantics, minus the >=1 clamp)."""
     days = duration / MINUTES_PER_DAY
     rates = _sample_rates_banded(rng, m, cohort)
     lam = np.minimum(rates * days, float(max_ev))
@@ -520,6 +521,54 @@ def _resolved_max_events(spec: WorkloadSpec, duration: float) -> int:
     return int(np.ceil(duration)) + 1
 
 
+def _gen_blocks(spec: WorkloadSpec, duration: float):
+    """Yield ``(cohort_idx, lo, hi, rng)`` for every generation block.
+
+    One definition of the block walk (cohort segments, absolute-index block
+    alignment, counter RNG per block) shared by :func:`_materialize` and
+    :func:`population_columns` — the block boundaries and RNG streams are
+    what make generation chunk-size-invariant and make the population
+    columns replayable without generating any events.
+    """
+    block = _block_size(_resolved_max_events(spec, duration))
+    for ci, s_lo, s_hi in _cohort_segments(spec.n_apps, spec.cohorts):
+        for blo in range((s_lo // block) * block, s_hi, block):
+            lo, hi = max(blo, s_lo), min(blo + block, s_hi)
+            if hi <= lo:
+                continue
+            yield ci, lo, hi, _block_rng(spec.seed, blo, ci)
+
+
+def population_columns(spec: WorkloadSpec) -> Dict[str, np.ndarray]:
+    """Per-app population columns for a ``'patterns'`` spec, WITHOUT
+    generating any events.
+
+    Returns the dict of :func:`_sample_population` columns (``rates``,
+    ``pattern``, ``period``, ``memory``, ``execs``, ``nfunc``, ``trig``)
+    assembled over the whole fleet. Each block draws its population BEFORE
+    its events from the block's counter RNG, so replaying only the
+    population draw yields values bit-identical to what an eager
+    ``materialize(eager=True)`` writes into its ``AppSpec`` objects — this
+    is what lets the columnar cluster ``AppTable`` skip the per-app Python
+    object loop entirely.
+    """
+    spec.validate()
+    if spec.generator != "patterns":
+        raise ValueError(
+            "population_columns needs a 'patterns' spec (the 'uniform' "
+            "generator draws no population; pass exec/memory columns to "
+            "AppTable explicitly for uniform traces)")
+    n = spec.n_apps
+    out: Dict[str, np.ndarray] = {}
+    for ci, lo, hi, rng in _gen_blocks(spec, spec.duration_minutes):
+        pop = _sample_population(rng, hi - lo, spec.cohorts[ci])
+        if not out:
+            out = {k: np.empty(n, v.dtype) for k, v in pop.items()}
+        for k, v in pop.items():
+            out[k][lo:hi] = v
+    return out
+
+
 def _materialize(spec: WorkloadSpec, eager: bool) -> Trace:
     spec.validate()
     if eager and spec.generator == "uniform":
@@ -530,7 +579,6 @@ def _materialize(spec: WorkloadSpec, eager: bool) -> Trace:
     duration = spec.duration_minutes
     max_ev = _resolved_max_events(spec, duration)
     n = spec.n_apps
-    block = _block_size(max_ev)
     warp = _build_warp(spec, duration) if spec.generator == "patterns" else None
 
     if eager:
@@ -541,37 +589,32 @@ def _materialize(spec: WorkloadSpec, eager: bool) -> Trace:
         padded = np.full((n, max_ev), np.inf, dtype)
         counts_all = np.empty(n, np.int32)
 
-    for ci, s_lo, s_hi in _cohort_segments(n, spec.cohorts):
+    for ci, lo, hi, rng in _gen_blocks(spec, duration):
         cohort = spec.cohorts[ci]
-        for blo in range((s_lo // block) * block, s_hi, block):
-            lo, hi = max(blo, s_lo), min(blo + block, s_hi)
-            if hi <= lo:
-                continue
-            m = hi - lo
-            rng = _block_rng(spec.seed, blo, ci)
-            if spec.generator == "uniform":
-                frame, cnt = _gen_uniform_block(rng, m, duration, max_ev,
-                                                spec.min_events, cohort)
-                pop = None
-            else:
-                pop = _sample_population(rng, m, cohort)
-                frame, cnt = _gen_patterns_block(rng, pop, duration, max_ev,
-                                                 warp, spec.min_events)
-            if eager:
-                for i in range(m):
-                    times[lo + i] = frame[i, : cnt[i]].astype(np.float64)
-                    specs[lo + i] = AppSpec(
-                        app_id=f"app-{lo + i:06d}",
-                        pattern=PATTERNS[int(pop["pattern"][i])],
-                        rate_per_day=float(pop["rates"][i]),
-                        period_minutes=float(pop["period"][i]),
-                        exec_time_s=float(pop["execs"][i]),
-                        memory_mb=float(pop["memory"][i]),
-                        n_functions=int(pop["nfunc"][i]),
-                        triggers=_wl._TRIGGER_COMBOS[int(pop["trig"][i])])
-            else:
-                padded[lo:hi, : frame.shape[1]] = frame.astype(dtype)
-                counts_all[lo:hi] = cnt
+        m = hi - lo
+        if spec.generator == "uniform":
+            frame, cnt = _gen_uniform_block(rng, m, duration, max_ev,
+                                            spec.min_events, cohort)
+            pop = None
+        else:
+            pop = _sample_population(rng, m, cohort)
+            frame, cnt = _gen_patterns_block(rng, pop, duration, max_ev,
+                                             warp, spec.min_events)
+        if eager:
+            for i in range(m):
+                times[lo + i] = frame[i, : cnt[i]].astype(np.float64)
+                specs[lo + i] = AppSpec(
+                    app_id=f"app-{lo + i:06d}",
+                    pattern=PATTERNS[int(pop["pattern"][i])],
+                    rate_per_day=float(pop["rates"][i]),
+                    period_minutes=float(pop["period"][i]),
+                    exec_time_s=float(pop["execs"][i]),
+                    memory_mb=float(pop["memory"][i]),
+                    n_functions=int(pop["nfunc"][i]),
+                    triggers=_wl._TRIGGER_COMBOS[int(pop["trig"][i])])
+        else:
+            padded[lo:hi, : frame.shape[1]] = frame.astype(dtype)
+            counts_all[lo:hi] = cnt
 
     if eager:
         return Trace(specs=specs, times=times, duration_minutes=duration)

@@ -3,6 +3,12 @@
 Example:
   PYTHONPATH=src python -m repro.launch.serve --apps 40 --minutes 120 \
       --policy hybrid
+
+``--engine scalar`` (default) runs the per-event oracle, which models HBM
+evictions — realistic when the registry oversubscribes the worker budget.
+``--engine vector`` runs the columnar fleet engine
+(:mod:`repro.serving.cluster_vector`), which refuses eviction regimes but
+scales to millions of apps.
 """
 from __future__ import annotations
 
@@ -10,9 +16,10 @@ import argparse
 
 import numpy as np
 
-from ..core.policy import FixedKeepAlivePolicy, HybridConfig, HybridHistogramPolicy
+from ..core.experiment import FixedSpec, HybridSpec
 from ..core.workload import generate_trace
-from ..serving.cluster_sim import ClusterConfig, ClusterSim
+from ..serving.apptable import AppTable
+from ..serving.cluster_vector import ClusterSpec, run_cluster
 from ..serving.registry import ModelEndpoint, Registry
 from ..runtime.straggler import HedgePolicy
 from .. import configs
@@ -38,11 +45,11 @@ def build_registry(n_apps: int, seed: int = 0,
     return reg
 
 
-def make_policy_factory(name: str, keep_alive: float):
+def make_policy_spec(name: str, keep_alive: float):
     if name == "hybrid":
-        return lambda: HybridHistogramPolicy(HybridConfig())
+        return HybridSpec()
     if name == "fixed":
-        return lambda: FixedKeepAlivePolicy(keep_alive)
+        return FixedSpec(keep_alive)
     raise ValueError(name)
 
 
@@ -55,17 +62,23 @@ def main(argv=None) -> int:
     ap.add_argument("--workers", type=int, default=18)
     ap.add_argument("--hbm-gb", type=float, default=16.0)
     ap.add_argument("--hedge", action="store_true")
+    ap.add_argument("--engine", default="scalar",
+                    choices=["auto", "vector", "scalar"])
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     trace = generate_trace(args.apps, days=args.minutes / 1440.0,
                            seed=args.seed)
     reg = build_registry(args.apps, args.seed, args.hbm_gb * 1e9)
-    sim = ClusterSim(reg, make_policy_factory(args.policy, args.keep_alive),
-                     ClusterConfig(n_workers=args.workers,
-                                   hbm_budget_bytes=args.hbm_gb * 1e9,
-                                   hedge=HedgePolicy() if args.hedge else None))
-    res = sim.run(trace)
+    table = AppTable.from_trace(
+        trace, weight_bytes=[reg.get(s.app_id).weight_bytes
+                             for s in trace.specs])
+    res = run_cluster(
+        table, make_policy_spec(args.policy, args.keep_alive),
+        ClusterSpec(n_workers=args.workers,
+                    hbm_budget_bytes=args.hbm_gb * 1e9,
+                    hedge=HedgePolicy() if args.hedge else None),
+        engine=args.engine)
     print(f"policy={args.policy} apps={args.apps} minutes={args.minutes:g}")
     print(f"  cold-start p75 over apps: {res.cold_pct_p75:.1f}%")
     print(f"  latency p50/p95/p99: {res.latency_pct(50):.2f}/"

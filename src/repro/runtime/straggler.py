@@ -33,3 +33,24 @@ class HedgePolicy:
         backup = hedge_at + exec_s * (self.straggler_factor
                                       if backup_straggle else 1.0)
         return min(primary, backup)
+
+    def latency_from_uniforms(self, exec_s, u1, u2):
+        """Pure hedged-latency formula over pre-drawn uniforms.
+
+        Both cluster engines draw ``u1``/``u2`` up front (one pair per event,
+        indexed by global arrival rank) and evaluate this identical formula,
+        so the scalar oracle and the vectorized engine see the same stragglers
+        regardless of evaluation order. Accepts scalars or numpy arrays.
+        """
+        straggled = u1 < self.straggler_prob
+        primary = exec_s * np.where(straggled, self.straggler_factor, 1.0)
+        if not self.enabled:
+            return primary
+        backup = exec_s * self.hedge_after_factor + exec_s * np.where(
+            u2 < self.straggler_prob, self.straggler_factor, 1.0)
+        return np.where(straggled, np.minimum(primary, backup), primary)
+
+    def event_uniforms(self, n_events: int):
+        """The shared per-event uniform streams (seeded, engine-agnostic)."""
+        rng = np.random.default_rng(0)
+        return rng.uniform(size=n_events), rng.uniform(size=n_events)

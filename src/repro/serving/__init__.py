@@ -1,1 +1,7 @@
-"""Serving: serverless model platform (paper technique as warm-pool policy)."""
+"""Serving: serverless model platform (paper technique as warm-pool policy).
+
+Fleet simulation lives in two engines: the per-event oracle
+(:mod:`repro.serving.cluster_sim`) and the columnar vectorized engine
+(:mod:`repro.serving.cluster_vector`, driven by
+:class:`repro.serving.apptable.AppTable`).
+"""

@@ -13,7 +13,6 @@ cost model.
 from __future__ import annotations
 
 import dataclasses
-import heapq
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -21,6 +20,7 @@ import numpy as np
 from ..core.policy import FixedKeepAlivePolicy, HybridHistogramPolicy, Policy
 from ..core.workload import Trace
 from ..runtime.straggler import HedgePolicy
+from .apptable import fnv1a64
 from .registry import ModelEndpoint, Registry
 from .warmpool import WarmPool
 
@@ -33,6 +33,7 @@ class ClusterConfig:
     hbm_budget_bytes: float = 16e9       # per worker (v5e HBM)
     hedge: Optional[HedgePolicy] = None
     checkpoint_at_minute: Optional[float] = None   # controller fault injection
+    balancing: str = "affinity"          # "affinity" | "hash"
 
 
 @dataclasses.dataclass
@@ -60,22 +61,35 @@ class ClusterSim:
     """
 
     def __init__(self, registry: Registry, policy, cfg: ClusterConfig):
+        if cfg.balancing not in ("affinity", "hash"):
+            raise ValueError(f"unknown balancing {cfg.balancing!r}; "
+                             "use 'affinity' or 'hash'")
         self.registry = registry
         self.cfg = cfg
         make_policy = policy if callable(policy) else policy.build
         self.pools = [WarmPool(registry, make_policy(),
                                budget_bytes=cfg.hbm_budget_bytes)
                       for _ in range(cfg.n_workers)]
-        self._rng = np.random.default_rng(0)
         self._assign: Dict[str, int] = {}
+        # Incremental per-worker resident-app counters: every assigned app
+        # immediately creates exactly one pool.state entry, so these equal
+        # len(pool.state) at each assignment point without a per-event
+        # list rebuild over every pool.
+        self._loads = [0] * cfg.n_workers
 
     def _worker_for(self, app_id: str) -> int:
         # Affinity load-balancer: an app sticks to one worker (maximizes
-        # warm hits), assigned by least-loaded-at-first-sight.
-        if app_id not in self._assign:
-            loads = [len([a for a, s in p.state.items()]) for p in self.pools]
-            self._assign[app_id] = int(np.argmin(loads))
-        return self._assign[app_id]
+        # warm hits), assigned by least-loaded-at-first-sight. Hash mode is
+        # the stateless alternative (FNV-1a, no controller state).
+        w = self._assign.get(app_id)
+        if w is None:
+            if self.cfg.balancing == "hash":
+                w = fnv1a64(app_id) % self.cfg.n_workers
+            else:
+                w = int(np.argmin(self._loads))
+                self._loads[w] += 1
+            self._assign[app_id] = w
+        return w
 
     def run(self, trace, exec_time_s: Optional[Dict[str, float]] = None
             ) -> ClusterResult:
@@ -87,8 +101,9 @@ class ClusterSim:
         if trace.specs is None:
             raise ValueError(
                 "ClusterSim needs an eager trace with AppSpecs; use "
-                "generate_trace(...) or spec.materialize(eager=True) "
-                "(padded-only fleet traces carry no per-app metadata)")
+                "generate_trace(...), spec.materialize(eager=True), or "
+                "AppTable.to_trace() — or run the columnar engine "
+                "(repro.serving.cluster_vector) on the padded trace directly")
         # Merge all app invocation streams into one global event queue.
         events: List[Tuple[float, int, str]] = []
         for i, spec in enumerate(trace.specs):
@@ -102,10 +117,18 @@ class ClusterSim:
         lats: List[float] = []
         saved_state = None
         restored = False
+        # `is not None`: checkpoint_at_minute=0.0 means "checkpoint at the
+        # first event", not "no checkpoint" (a falsy check dropped it).
         ckpt_t = (self.cfg.checkpoint_at_minute * MINUTE
-                  if self.cfg.checkpoint_at_minute else None)
+                  if self.cfg.checkpoint_at_minute is not None else None)
+        hedge = self.cfg.hedge
+        if hedge is not None:
+            # One uniform pair per event, indexed by global arrival rank —
+            # the same streams the vectorized engine consumes, so both
+            # engines see identical stragglers.
+            u1, u2 = hedge.event_uniforms(len(events))
 
-        for t, idx, app_id in events:
+        for rank, (t, idx, app_id) in enumerate(events):
             if ckpt_t is not None and t >= ckpt_t and saved_state is None:
                 # controller checkpoint + simulated crash + restore
                 saved_state = [p.state_dict() for p in self.pools]
@@ -119,8 +142,9 @@ class ClusterSim:
             cold[idx] += was_cold
             exec_s = (exec_time_s or {}).get(
                 app_id, trace.specs[idx].exec_time_s)
-            if self.cfg.hedge is not None:
-                exec_s = self.cfg.hedge.effective_latency(exec_s, self._rng)
+            if hedge is not None:
+                exec_s = float(hedge.latency_from_uniforms(
+                    exec_s, u1[rank], u2[rank]))
             lats.append(start_lat + exec_s)
             pool.on_request_end(app_id, t + exec_s)
 

@@ -1,0 +1,536 @@
+"""Vectorized fleet-scale cluster engine (the columnar ClusterSim).
+
+The per-event oracle in :mod:`repro.serving.cluster_sim` replays one global
+heap-merged event stream through per-worker warm pools — exact, but ~10^5
+events/s of pure Python. This module computes the *same trajectory* from the
+columnar :class:`repro.serving.apptable.AppTable` in three array passes:
+
+  A. **Merged events.** Flatten the padded time frame to one event list,
+     rank it by the oracle's ``(t, app_idx)`` sort, and draw the shared
+     per-rank hedging uniforms so both engines see identical stragglers.
+
+  B. **Policy windows.** The windows an app's pool consults after event
+     ``k`` depend only on that app's end-time column — not on warm/cold
+     outcomes — so a chunked ``lax.scan`` of
+     :func:`repro.core.policy_math.fused_hybrid_step_math` (float64, the
+     PR 2 fused engine's step) yields every per-gap residency bound up
+     front. Apps whose out-of-bounds counter ever trips the ARIMA gate are
+     recomputed through the scalar policy (same post-pass idiom as
+     ``simulator._simulate_hybrid_batch_reference``).
+
+  C. **Gap replay.** With windows known, each inter-arrival gap closes in
+     closed form: keep-alive expiries and pre-warm fires happen at the
+     first *worker tick* (any arrival on that worker) past the scheduled
+     time, found with one ``searchsorted`` per worker. Cold verdicts,
+     loads/unloads, residency time, latency, and per-worker stats all fall
+     out as segmented reductions.
+
+Exactness contract (enforced by ``tests/test_cluster_conformance.py``):
+cold counts, per-app cold %, latencies and load/unload/prewarm counters are
+*bit-identical* to the oracle; resident byte-seconds agree to float64
+accumulation-order tolerance. The one regime difference: HBM-budget
+evictions are inherently sequential, so the vector engine *proves* the run
+eviction-free (a pessimistic per-worker occupancy peak) and refuses
+otherwise, pointing at ``engine="scalar"``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from ..core import policy_math
+from ..core.experiment import (FixedSpec, HybridSpec, NoUnloadSpec,
+                               PolicySpec, as_spec)
+from ..core.policy import HybridHistogramPolicy
+from ..core.simulator import (DEFAULT_APP_CHUNK, _chunked_buckets,
+                              _step_config_for)
+from ..core.workload import Trace
+from ..core.workload_spec import WorkloadSpec
+from ..runtime.straggler import HedgePolicy
+from .apptable import AppTable
+from .cluster_sim import MINUTE, ClusterConfig, ClusterResult, ClusterSim
+from .registry import (BASE_LOAD_LATENCY, COMPILE_MISS_LATENCY,
+                       H2D_BANDWIDTH)
+
+__all__ = ["CLUSTER_ENGINES", "ClusterSpec", "ClusterSweep", "as_table",
+           "run_cluster", "sweep_cluster"]
+
+CLUSTER_ENGINES = ("auto", "vector", "scalar")
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """Declarative cluster shape: the third axis of an experiment grid.
+
+    Mirrors :class:`repro.serving.cluster_sim.ClusterConfig` knob-for-knob
+    (same defaults) as a frozen spec, so ``trace x policy x cluster`` grids
+    compose through ``experiment.run(..., cluster=...)`` and
+    ``experiment.sweep(..., clusters=[...])``.
+    """
+    n_workers: int = 18
+    hbm_budget_bytes: float = 16e9
+    balancing: str = "affinity"          # "affinity" | "hash"
+    hedge: Optional[HedgePolicy] = None
+    checkpoint_at_minute: Optional[float] = None
+    label: Optional[str] = None
+
+    @property
+    def name(self) -> str:
+        return self.label or f"{self.balancing}-{self.n_workers}w"
+
+    def validate(self) -> None:
+        if self.n_workers < 1:
+            raise ValueError(f"n_workers must be >= 1, got {self.n_workers}")
+        if self.balancing not in ("affinity", "hash"):
+            raise ValueError(f"unknown balancing {self.balancing!r}; "
+                             "use 'affinity' or 'hash'")
+
+    def to_config(self) -> ClusterConfig:
+        """The oracle's mutable config (the ``engine="scalar"`` bridge)."""
+        return ClusterConfig(
+            n_workers=self.n_workers, hbm_budget_bytes=self.hbm_budget_bytes,
+            hedge=self.hedge, checkpoint_at_minute=self.checkpoint_at_minute,
+            balancing=self.balancing)
+
+
+def as_table(workload, *, exec_s=None, memory_mb=None,
+             weight_bytes=None) -> AppTable:
+    """Coerce the workload axis: AppTable passes through, WorkloadSpec and
+    Trace are converted columnar."""
+    if isinstance(workload, AppTable):
+        return workload
+    if isinstance(workload, WorkloadSpec):
+        return AppTable.from_spec(workload, exec_s=exec_s,
+                                  memory_mb=memory_mb,
+                                  weight_bytes=weight_bytes)
+    if isinstance(workload, Trace):
+        return AppTable.from_trace(workload, exec_s=exec_s,
+                                   memory_mb=memory_mb,
+                                   weight_bytes=weight_bytes)
+    raise TypeError(f"expected an AppTable, WorkloadSpec or Trace, "
+                    f"got {type(workload).__name__}")
+
+
+# --------------------------------------------------------------------------
+# Phase B: per-gap policy windows from the end-time columns
+# --------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnums=(1,))
+def _hybrid_windows_scan(e_min, cfg: policy_math.HybridStepConfig):
+    """Scan the fused hybrid step over one chunk's end-time columns.
+
+    Returns the residency bounds decided *at* each event (they govern the
+    following gap) and the sticky any-step out-of-bounds-heavy flag that
+    routes an app to the scalar ARIMA post-pass.
+    """
+    n = e_min.shape[0]
+    dt = e_min.dtype
+    init = (
+        jnp.full((n,), -jnp.inf, dt),                       # prev end time
+        jnp.zeros((n, cfg.n_bins), jnp.int32),              # cum histogram
+        jnp.zeros((n,), jnp.int32),                         # oob count
+        jnp.zeros((n,), dt),                                # Welford sum
+        jnp.zeros((n,), dt),                                # Welford sum sq
+        jnp.zeros((n,), dt),                                # load bound
+        jnp.full((n,), jnp.asarray(cfg.standard_keep, dt)),  # unload bound
+        jnp.zeros((n,), jnp.int32),                         # cold (unused)
+        jnp.zeros((n,), dt),                                # waste (unused)
+    )
+
+    def body(carry, t_col):
+        out = policy_math.fused_hybrid_step_math(
+            t_col, *carry, cfg=cfg, gather=True)
+        cum, oob = out[1], out[2]
+        heavy = policy_math.oob_heavy(cum[:, -1].astype(jnp.int32), oob,
+                                      cfg.oob_threshold)
+        return out, (out[5], out[6], heavy)
+
+    _, (load_seq, unload_seq, heavy_seq) = jax.lax.scan(body, init, e_min.T)
+    return load_seq.T, unload_seq.T, jnp.any(heavy_seq, axis=0)
+
+
+def _policy_windows(table: AppTable, spec: PolicySpec, e_min2d: np.ndarray,
+                    counts: np.ndarray, app_chunk: int):
+    """(load_at, unload_at) bounds [n, M] decided after each event.
+
+    Bounds are float64 minutes past the execution end — exactly the values
+    ``policy_math.window_bounds`` hands the oracle's warm pool (float32
+    window values widen exactly; keep-alive is recovered as their float64
+    difference, which is how ``AppHistogram.windows`` defines it).
+    """
+    n, m_ev = e_min2d.shape
+    la = np.zeros((n, m_ev))
+    ua = np.zeros((n, m_ev))
+    if isinstance(spec, NoUnloadSpec):
+        ua[:] = np.inf
+        return la, ua
+    if isinstance(spec, FixedSpec):
+        ua[:] = float(spec.keep_alive)
+        return la, ua
+    if not isinstance(spec, HybridSpec):
+        raise TypeError(
+            f"the vectorized cluster engine needs a declarative PolicySpec "
+            f"(Fixed/NoUnload/Hybrid), got {type(spec).__name__}; arbitrary "
+            f"Policy objects run on engine='scalar'")
+
+    hybrid = spec.to_config()
+    cfg = _step_config_for(hybrid)
+    ua[:] = hybrid.standard_keep_alive       # zero-event rows: never read
+    heavy = np.zeros(n, bool)
+    with enable_x64():
+        for sel, sub in _chunked_buckets(e_min2d, counts, app_chunk):
+            la_seq, ua_seq, flag = _hybrid_windows_scan(
+                jnp.asarray(sub, jnp.float64), cfg)
+            width = sub.shape[1]
+            la[sel, :width] = np.asarray(la_seq)
+            ua[sel, :width] = np.asarray(ua_seq)
+            heavy[sel] = np.asarray(flag)
+
+    # ARIMA post-pass: the fused step carries no forecaster, so any app
+    # whose OOB counter ever looked heavy (a superset of "the ARIMA branch
+    # was ever consulted") replays through the stateful scalar policy.
+    if hybrid.use_arima and heavy.any():
+        pol = HybridHistogramPolicy(hybrid)
+        for i in np.nonzero(heavy)[0]:
+            app_id = table.app_id(int(i))
+            prev = None
+            for k in range(int(counts[i])):
+                e_k = float(e_min2d[i, k])
+                w = pol.on_invocation(app_id,
+                                      None if prev is None else e_k - prev)
+                lo, hi = policy_math.window_bounds(w.prewarm, w.keep_alive)
+                la[i, k] = lo
+                ua[i, k] = hi
+                prev = e_k
+    return la, ua
+
+
+# --------------------------------------------------------------------------
+# Phase C: closed-form gap replay
+# --------------------------------------------------------------------------
+
+
+def _first_tick_ge(ticks_by_w, woff, tick_src, worker_q, thr_q):
+    """First worker tick at time >= threshold, per query.
+
+    ``ticks_by_w`` holds every arrival time grouped by worker (sorted within
+    each group); a keep-alive expiry or pre-warm only *happens* when some
+    event on that worker ticks the pool. Returns ``(time, flat_idx)`` with
+    ``(inf, -1)`` when no tick qualifies. Queries are grouped by worker so
+    each group is one exact float64 ``searchsorted`` — no scaled-offset key
+    tricks that could round two distinct times together.
+    """
+    q_order = np.argsort(worker_q, kind="stable")
+    wq = worker_q[q_order]
+    tq = thr_q[q_order]
+    n_workers = len(woff) - 1
+    qoff = np.zeros(n_workers + 1, np.int64)
+    np.cumsum(np.bincount(wq, minlength=n_workers), out=qoff[1:])
+    t_sorted = np.full(tq.shape, np.inf)
+    i_sorted = np.full(tq.shape, -1, np.int64)
+    for w in range(n_workers):
+        a, b = qoff[w], qoff[w + 1]
+        if b == a:
+            continue
+        seg = ticks_by_w[woff[w]:woff[w + 1]]
+        if not len(seg):
+            continue
+        pos = np.searchsorted(seg, tq[a:b], side="left")
+        ok = pos < len(seg)
+        pos_c = np.minimum(pos, len(seg) - 1)
+        t_sorted[a:b] = np.where(ok, seg[pos_c], np.inf)
+        i_sorted[a:b] = np.where(ok, tick_src[woff[w] + pos_c], -1)
+    t_out = np.empty_like(t_sorted)
+    i_out = np.empty_like(i_sorted)
+    t_out[q_order] = t_sorted
+    i_out[q_order] = i_sorted
+    return t_out, i_out
+
+
+def _check_no_evictions(spec: ClusterSpec,
+                        load_steps, load_bytes, unload_steps, unload_bytes,
+                        load_workers, unload_workers) -> None:
+    """Prove the run never trips the HBM eviction path.
+
+    Replays per-worker occupancy deltas in oracle *processing* order
+    (global event rank), applying same-step loads before unloads — a
+    pessimistic peak. Evictions unload other apps mid-run, which feeds back
+    into every later verdict; that is inherently sequential, so the vector
+    engine refuses rather than silently diverging.
+    """
+    budget = float(spec.hbm_budget_bytes)
+    steps = np.concatenate([load_steps, unload_steps])
+    delta = np.concatenate([load_bytes, -unload_bytes])
+    workers = np.concatenate([load_workers, unload_workers])
+    order = np.lexsort((-delta, steps, workers))
+    cum = np.cumsum(delta[order])
+    w_sorted = workers[order]
+    starts = np.nonzero(np.diff(w_sorted, prepend=-1))[0]
+    base = np.where(starts > 0, cum[starts - 1], 0.0)
+    peaks = np.maximum.reduceat(cum, starts) - base
+    if peaks.max(initial=0.0) > budget:
+        raise ValueError(
+            "per-worker HBM pressure would trigger evictions, which the "
+            "vectorized cluster engine does not model (they are inherently "
+            "sequential); raise hbm_budget_bytes, add workers, or run "
+            "engine='scalar'")
+
+
+def _run_vector(table: AppTable, spec: PolicySpec, cluster: ClusterSpec,
+                app_chunk: int) -> ClusterResult:
+    n = table.n_apps
+    n_workers = cluster.n_workers
+    counts = np.asarray(table.counts, np.int64)
+    t_end = float(table.duration_minutes) * MINUTE
+
+    # ---- Phase A: the merged event stream -------------------------------
+    m_ev = table.times.shape[1]
+    valid = np.arange(m_ev)[None, :] < counts[:, None]
+    rows, cols = np.nonzero(valid)              # row-major: (app, k) order
+    n_events = len(rows)
+    t_flat = table.times[rows, cols].astype(np.float64) * MINUTE
+    order = np.lexsort((rows, t_flat))          # oracle sort: (t, app_idx)
+    rank = np.empty(n_events, np.int64)
+    rank[order] = np.arange(n_events)
+
+    x_flat = table.exec_s[rows].astype(np.float64)
+    if cluster.hedge is not None and n_events:
+        u1, u2 = cluster.hedge.event_uniforms(n_events)
+        x_flat = np.asarray(cluster.hedge.latency_from_uniforms(
+            x_flat, u1[rank], u2[rank]), np.float64)
+    e_flat = t_flat + x_flat
+    e_min_flat = e_flat / MINUTE
+
+    # ---- Phase B: policy windows per gap --------------------------------
+    e_min2d = np.full((n, m_ev), np.inf)
+    e_min2d[rows, cols] = e_min_flat
+    la2d, ua2d = _policy_windows(table, spec, e_min2d, counts, app_chunk)
+    la = la2d[rows, cols]
+    ua = ua2d[rows, cols]
+    ka_sec = (ua - la) * MINUTE                 # == keep_alive * MINUTE
+
+    # ---- Phase C: closed-form gap replay --------------------------------
+    assign = table.worker_assignment(n_workers, cluster.balancing)
+    w_flat = assign[rows]
+    tick_src = np.lexsort((t_flat, w_flat))     # per-worker sorted arrivals
+    ticks_by_w = t_flat[tick_src]
+    woff = np.zeros(n_workers + 1, np.int64)
+    np.cumsum(np.bincount(w_flat, minlength=n_workers), out=woff[1:])
+
+    last = cols == counts[rows] - 1
+    first = cols == 0
+    nxt = np.full(n_events, np.inf)
+    nxt[~last] = t_flat[np.nonzero(~last)[0] + 1]
+
+    stay = la <= 0.0                            # keep loaded through the gap
+    u_stay = e_flat + ua * MINUTE               # expiry schedule (stay)
+    p_pre = e_flat + la * MINUTE                # pre-warm schedule (else)
+
+    # Stay branch: unloaded at the first tick past the expiry — which
+    # exists whenever the next arrival is cold; the run end finalizes the
+    # last gap when no tick ever reaches it.
+    need_u = stay & ((nxt >= u_stay) | last)
+    ut_stay = np.full(n_events, np.inf)
+    ui_stay = np.full(n_events, -1, np.int64)
+    ut_stay[need_u], ui_stay[need_u] = _first_tick_ge(
+        ticks_by_w, woff, tick_src, w_flat[need_u], u_stay[need_u])
+
+    # Pre-warm branch: unloaded immediately at the execution end; the fire
+    # happens at the first tick past the schedule unless the app's own next
+    # arrival (which cancels the pre-warm) comes first.
+    pre = ~stay
+    tau = np.full(n_events, np.inf)
+    tau_i = np.full(n_events, -1, np.int64)
+    tau[pre], tau_i[pre] = _first_tick_ge(
+        ticks_by_w, woff, tick_src, w_flat[pre], p_pre[pre])
+    fired = pre & np.isfinite(tau) & (last | (tau <= nxt))
+    q_fire = tau + ka_sec                       # post-fire expiry schedule
+    need_f = fired & ((nxt >= q_fire) | last)
+    ut_fire = np.full(n_events, np.inf)
+    ui_fire = np.full(n_events, -1, np.int64)
+    ut_fire[need_f], ui_fire[need_f] = _first_tick_ge(
+        ticks_by_w, woff, tick_src, w_flat[need_f], q_fire[need_f])
+
+    # Cold verdicts: event k is cold iff gap k-1 lost the image.
+    next_cold = np.where(stay, nxt >= u_stay,
+                         np.where(fired, nxt >= q_fire, True))
+    cold = np.empty(n_events, bool)
+    cold[first] = True
+    not_first = np.nonzero(~first)[0]
+    cold[not_first] = next_cold[not_first - 1]
+
+    # Loads and unloads (time, step, worker, bytes) for residency + stats.
+    wb = table.weight_bytes.astype(np.float64)
+    wb_flat = wb[rows]
+    load_m = [cold, fired]
+    load_t = [t_flat[cold], tau[fired]]
+    load_step = [rank[cold], rank[tau_i[fired]]]
+    unload_m = [pre, need_u, need_f]
+    unload_t = [e_flat[pre],
+                np.where(np.isfinite(ut_stay[need_u]), ut_stay[need_u], t_end),
+                np.where(np.isfinite(ut_fire[need_f]), ut_fire[need_f], t_end)]
+    # Expiries missing their tick are finalized at the run end (after every
+    # event: step n_events); found ticks carry that tick's processing rank.
+    unload_step = [
+        rank[pre],
+        np.where(ui_stay[need_u] >= 0, rank[np.maximum(ui_stay[need_u], 0)],
+                 n_events),
+        np.where(ui_fire[need_f] >= 0, rank[np.maximum(ui_fire[need_f], 0)],
+                 n_events)]
+
+    lw = np.concatenate([w_flat[m] for m in load_m]) if n_events else \
+        np.zeros(0, np.int64)
+    uw = np.concatenate([w_flat[m] for m in unload_m]) if n_events else \
+        np.zeros(0, np.int64)
+    lr = np.concatenate([rows[m] for m in load_m]) if n_events else \
+        np.zeros(0, np.int64)
+    ur = np.concatenate([rows[m] for m in unload_m]) if n_events else \
+        np.zeros(0, np.int64)
+    lb = wb[lr]
+    ub = wb[ur]
+    lt = np.concatenate(load_t) if n_events else np.zeros(0)
+    ut = np.concatenate(unload_t) if n_events else np.zeros(0)
+
+    n_loads = np.bincount(lr, minlength=n)
+    n_unloads = np.bincount(ur, minlength=n)
+    if not np.array_equal(n_loads, n_unloads):  # pragma: no cover
+        raise AssertionError("cluster_vector invariant violated: "
+                             "per-app loads != unloads")
+
+    # Cheap eviction screen: a worker whose assigned apps all fit at once
+    # can never evict; only workers past the sum test get the exact
+    # processing-order occupancy replay.
+    budget = float(cluster.hbm_budget_bytes)
+    active = counts > 0
+    per_w_assigned = np.bincount(assign[active], weights=wb[active],
+                                 minlength=n_workers)
+    if np.isfinite(budget) and per_w_assigned.max(initial=0.0) > budget:
+        _check_no_evictions(
+            cluster,
+            np.concatenate(load_step) if n_events else np.zeros(0, np.int64),
+            lb,
+            np.concatenate(unload_step) if n_events else np.zeros(0, np.int64),
+            ub, lw, uw)
+
+    # ---- Results --------------------------------------------------------
+    base_cold = BASE_LOAD_LATENCY + wb / H2D_BANDWIDTH
+    start_lat = np.where(
+        cold, base_cold[rows] + np.where(first, COMPILE_MISS_LATENCY, 0.0),
+        0.0)
+    lat = np.empty(n_events)
+    lat[rank] = start_lat + x_flat              # oracle (arrival) order
+
+    cold_per_app = np.bincount(rows, weights=cold.astype(np.float64),
+                               minlength=n)
+    inv = counts.astype(np.float64)
+    # Per-app first, per-worker second: the load/unload time sums cancel
+    # within each app's handful of events instead of across the fleet,
+    # keeping resident time at float64 accumulation accuracy.
+    res_app = (np.bincount(ur, weights=ut * ub, minlength=n)
+               - np.bincount(lr, weights=lt * lb, minlength=n))
+    resident_bs = np.bincount(assign, weights=res_app, minlength=n_workers)
+
+    stats = []
+    cold_w = np.bincount(w_flat[cold], minlength=n_workers)
+    warm_w = (np.bincount(w_flat, minlength=n_workers) - cold_w)
+    fire_w = np.bincount(w_flat[fired], minlength=n_workers)
+    unl_w = np.bincount(uw, minlength=n_workers)
+    moved_w = np.bincount(lw, weights=lb, minlength=n_workers)
+    for w in range(n_workers):
+        stats.append(dict(
+            cold_starts=int(cold_w[w]), warm_starts=int(warm_w[w]),
+            prewarms=int(fire_w[w]), unloads=int(unl_w[w]), evictions=0,
+            bytes_moved=float(moved_w[w]),
+            resident_byte_seconds=float(resident_bs[w])))
+
+    restored = (cluster.checkpoint_at_minute is not None and n_events > 0
+                and bool(np.any(
+                    t_flat >= cluster.checkpoint_at_minute * MINUTE)))
+    return ClusterResult(
+        cold_pct_per_app=100.0 * cold_per_app / np.maximum(inv, 1),
+        latencies_s=lat,
+        wasted_gb_minutes=float(resident_bs.sum()) / 1e9 / 60.0,
+        stats_per_worker=stats,
+        restored_mid_run=restored)
+
+
+# --------------------------------------------------------------------------
+# Front door
+# --------------------------------------------------------------------------
+
+
+def run_cluster(workload, policy, cluster: Optional[ClusterSpec] = None, *,
+                engine: str = "auto", app_chunk: Optional[int] = None,
+                exec_s=None, memory_mb=None,
+                weight_bytes=None) -> ClusterResult:
+    """Run one workload x policy x cluster cell.
+
+    ``workload`` is an :class:`AppTable`, ``WorkloadSpec`` or ``Trace``
+    (``exec_s``/``memory_mb``/``weight_bytes`` fill in per-app metadata the
+    workload itself does not carry). ``engine="auto"`` picks the vectorized
+    engine; ``"scalar"`` runs the per-event oracle on the same table.
+    """
+    if engine not in CLUSTER_ENGINES:
+        raise ValueError(f"unknown cluster engine {engine!r}; expected one "
+                         f"of {CLUSTER_ENGINES}")
+    cluster = cluster if cluster is not None else ClusterSpec()
+    cluster.validate()
+    spec = as_spec(policy)
+    table = as_table(workload, exec_s=exec_s, memory_mb=memory_mb,
+                     weight_bytes=weight_bytes)
+    if engine == "scalar":
+        sim = ClusterSim(table.to_registry(), spec, cluster.to_config())
+        return sim.run(table.to_trace())
+    return _run_vector(table, spec, cluster,
+                       app_chunk or DEFAULT_APP_CHUNK)
+
+
+@dataclasses.dataclass
+class ClusterSweep:
+    """A (T, S, C) grid: policy x cluster sweeps over T workloads.
+
+    ``results[t][s][c]`` is the :class:`ClusterResult` of workload ``t``
+    under policy spec ``s`` on cluster shape ``c`` — each cell identical to
+    the corresponding single :func:`run_cluster` call.
+    """
+    tables: List[AppTable]
+    specs: List[PolicySpec]
+    clusters: List[ClusterSpec]
+    results: List[List[List[ClusterResult]]]
+
+    @property
+    def shape(self):
+        return (len(self.tables), len(self.specs), len(self.clusters))
+
+    def row(self, t: int, s: int, c: int = 0) -> ClusterResult:
+        return self.results[t][s][c]
+
+
+def sweep_cluster(workloads: Union[Sequence, object], specs: Sequence,
+                  clusters: Optional[Sequence[ClusterSpec]] = None, *,
+                  engine: str = "auto",
+                  app_chunk: Optional[int] = None) -> ClusterSweep:
+    """Evaluate the full workload x policy x cluster grid.
+
+    Each workload is converted to a columnar :class:`AppTable` ONCE and
+    reused across every (policy, cluster) cell.
+    """
+    if not isinstance(workloads, (list, tuple)):
+        workloads = [workloads]
+    specs = [as_spec(s) for s in specs]
+    clusters = list(clusters) if clusters is not None else [ClusterSpec()]
+    if not specs or not clusters or not len(workloads):
+        raise ValueError("sweep_cluster needs at least one workload, one "
+                         "PolicySpec and one ClusterSpec")
+    tables = [as_table(w) for w in workloads]
+    results = [[[run_cluster(tab, s, c, engine=engine, app_chunk=app_chunk)
+                 for c in clusters] for s in specs] for tab in tables]
+    return ClusterSweep(tables=tables, specs=specs, clusters=clusters,
+                        results=results)

@@ -6,6 +6,12 @@ active sequences of that endpoint — continuous batching), subject to a
 max batch size and a queueing delay budget. Cold endpoints are routed
 through the warm pool first; the scheduler exposes the arrival events the
 policy needs (`on_request` / `on_request_end`).
+
+Fleet-level placement (which worker's scheduler a request reaches) lives
+one layer up, in the cluster engines: the per-event oracle
+(:mod:`repro.serving.cluster_sim`) and the columnar engine
+(:mod:`repro.serving.cluster_vector`), both driven by the balancing modes
+on :class:`repro.serving.cluster_vector.ClusterSpec`.
 """
 from __future__ import annotations
 

@@ -158,7 +158,12 @@ class WarmPool:
     def on_request_end(self, app_id: str, now: float) -> None:
         """Request finished: record IT, get fresh windows, schedule actions."""
         st = self._st(app_id)
-        idle_min = ((now - st.last_end) / MINUTE) if st.last_end >= 0 else None
+        # Computed as a difference of end-times-in-minutes (not a difference
+        # of seconds divided by 60) so the scalar oracle sees bit-identical
+        # idle values to the vectorized cluster engine, which scans columns
+        # of end times already expressed in minutes.
+        idle_min = ((now / MINUTE - st.last_end / MINUTE)
+                    if st.last_end >= 0 else None)
         st.last_end = now
         w = self.policy.on_invocation(app_id, idle_min)
         st.windows = w

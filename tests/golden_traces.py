@@ -116,3 +116,22 @@ GOLDEN_TRACES = {
     "coarse_twoweek": (coarse_twoweek, CFG48),
     "synthesized_small": (synthesized_small, CFG240),
 }
+
+
+def cluster_small_fleet():
+    """The cluster golden: a small azure-like fleet on 6 workers.
+
+    Pins the scalar per-event oracle's per-app cold %, wasted GB-minutes
+    and latency percentiles (``tests/golden/cluster_small.json``); the
+    conformance suite replays BOTH cluster engines against it. ARIMA stays
+    on so the golden covers the forecaster path; the budget is infinite
+    because the vectorized engine models the no-eviction regime.
+    """
+    from repro.core.experiment import HybridSpec
+    from repro.core.workload_spec import azure_like
+    from repro.serving.cluster_vector import ClusterSpec
+
+    workload = azure_like(120, days=0.25, seed=17, max_events=24)
+    policy = HybridSpec()
+    cluster = ClusterSpec(n_workers=6, hbm_budget_bytes=float("inf"))
+    return workload, policy, cluster

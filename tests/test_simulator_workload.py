@@ -1,7 +1,5 @@
 """Simulator + workload generator tests, including engine equivalence and
 reproduction of the paper's headline policy comparisons (trend-level)."""
-import warnings
-
 import numpy as np
 import pytest
 
@@ -172,14 +170,8 @@ def test_hybrid_pallas_path_matches_scalar():
                                rtol=1e-4, atol=0.5)
 
 
-def test_synthesize_scaling_path():
-    from repro.core.workload import Trace
-    with pytest.deprecated_call(match="WorkloadSpec.uniform"):
-        t = Trace.synthesize(n_apps=5000, days=2.0, seed=9, max_events=48,
-                             app_chunk=1024)
-    # the deprecated shim is exactly the uniform spec with the legacy clamp
-    direct = uniform_trace(5000, days=2.0, seed=9, max_events=48)
-    np.testing.assert_array_equal(t.to_padded()[0], direct.to_padded()[0])
+def test_uniform_scaling_path():
+    t = uniform_trace(5000, days=2.0, seed=9, max_events=48)
     assert t.n_apps == 5000
     padded, counts = t.to_padded()
     assert padded.shape == (5000, 48)
@@ -199,18 +191,22 @@ def test_synthesize_scaling_path():
     assert np.all(res.cold >= 1)
 
 
-def test_synthesize_rejects_invalid_chunking():
+def test_synthesize_shim_removed():
+    """``Trace.synthesize`` is gone after its PR 5 deprecation cycle: any
+    access — including ``hasattr`` probes — raises an AttributeError that
+    spells out the ``WorkloadSpec.uniform`` replacement (same contract as
+    the removed ``simulate*`` entry points)."""
     from repro.core.workload import Trace
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        with pytest.raises(ValueError, match="app_chunk"):
-            Trace.synthesize(n_apps=10, app_chunk=0)
-        with pytest.raises(ValueError, match="app_chunk"):
-            Trace.synthesize(n_apps=10, app_chunk=-5)
-        with pytest.raises(ValueError, match="n_apps"):
-            Trace.synthesize(n_apps=-1)
-        with pytest.raises(ValueError, match="max_events"):
-            Trace.synthesize(n_apps=4, max_events=0)
+    with pytest.raises(AttributeError, match="WorkloadSpec.uniform"):
+        Trace.synthesize
+    with pytest.raises(AttributeError, match="was removed"):
+        Trace.synthesize(n_apps=10)
+    assert not hasattr(Trace, "synthesize")
+    t = uniform_trace(4, days=0.5, seed=0, max_events=4)
+    assert not hasattr(t, "synthesize")
+
+
+def test_uniform_rejects_invalid_args():
     with pytest.raises(ValueError, match="n_apps"):
         WorkloadSpec.uniform(-1).materialize()
     with pytest.raises(ValueError, match="max_events"):
@@ -226,11 +222,10 @@ def test_simulate_rejects_invalid_app_chunk(int_trace):
             options=EngineOptions(app_chunk=-3))
 
 
-def test_synthesize_ragged_last_chunk():
+def test_uniform_ragged_last_block():
     """App counts that are NOT a multiple of the generation block must
-    produce a fully populated trace — and chunk sizing must never change
-    the result (generation is block-aligned and chunk-size-invariant)."""
-    from repro.core.workload import Trace
+    produce a fully populated trace (generation is block-aligned, with a
+    counter RNG per block)."""
     t = uniform_trace(1000, days=1.0, seed=2, max_events=24)
     padded, counts = t.to_padded()
     assert padded.shape[0] == 1000 and padded.shape[1] <= 24
@@ -245,15 +240,10 @@ def test_synthesize_ragged_last_chunk():
         assert len(ev) == counts[i]
         assert np.all(np.diff(ev) >= 0)
         assert np.all(np.isinf(padded[i, counts[i]:]))
-    # legacy app_chunk values are accepted and cannot change the trace
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        a = Trace.synthesize(n_apps=1000, days=1.0, seed=2, max_events=24,
-                             app_chunk=384)
-        b = Trace.synthesize(n_apps=1000, days=1.0, seed=2, max_events=24,
-                             app_chunk=10 ** 9)
-    np.testing.assert_array_equal(a.to_padded()[0], b.to_padded()[0])
-    np.testing.assert_array_equal(a.to_padded()[0], padded)
+    # regeneration is deterministic block by block
+    np.testing.assert_array_equal(
+        uniform_trace(1000, days=1.0, seed=2, max_events=24).to_padded()[0],
+        padded)
 
 
 def test_hybrid_ragged_chunk_parity():
@@ -304,7 +294,7 @@ def test_find_first_ge_power_of_two_bins():
             assert got == want, (n_bins, want, got)
 
 
-def test_synthesize_parity_small():
+def test_uniform_parity_small():
     t = uniform_trace(64, days=1.0, seed=21, max_events=32)
     cfg = HybridConfig(use_arima=False)
     hs = simulate_scalar(t, HybridHistogramPolicy(cfg))

@@ -107,20 +107,24 @@ def test_materialize_is_seed_deterministic_and_spec_pure():
     assert not np.array_equal(other.to_padded()[1], ca)
 
 
-def test_generation_is_chunk_size_invariant():
-    """The legacy app_chunk knob is a pure memory hint: any value yields the
-    identical trace (generation blocks are aligned to absolute app indices,
-    with a counter RNG per block)."""
-    import warnings
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        traces = [Trace.synthesize(700, days=1.0, seed=3, max_events=16,
-                                   app_chunk=ch) for ch in (1, 13, 700, 10**8)]
-    base_p, base_c = traces[0].to_padded()
-    for t in traces[1:]:
-        p, c = t.to_padded()
-        np.testing.assert_array_equal(p, base_p)
-        np.testing.assert_array_equal(c, base_c)
+def test_population_columns_replay_eager_appspecs():
+    """Generation blocks are aligned to absolute app indices with a counter
+    RNG per block, so replaying ONLY the population draw
+    (``population_columns``, the columnar AppTable path) is bit-identical
+    to the values an eager materialization writes into AppSpec objects."""
+    from repro.core.workload_spec import population_columns
+    spec = azure_like(700, days=1.0, seed=3, max_events=16)
+    cols = population_columns(spec)
+    eager = spec.materialize(eager=True)
+    np.testing.assert_array_equal(
+        cols["execs"], [s.exec_time_s for s in eager.specs])
+    np.testing.assert_array_equal(
+        cols["memory"], [s.memory_mb for s in eager.specs])
+    np.testing.assert_array_equal(
+        cols["rates"], [s.rate_per_day for s in eager.specs])
+    # uniform specs carry no population — the columnar path says so loudly
+    with pytest.raises(ValueError, match="patterns"):
+        population_columns(WorkloadSpec.uniform(10))
 
 
 def test_eager_and_padded_share_population_blocks():
