@@ -6,13 +6,16 @@ event stream through per-worker warm pools — exact, but every event pays a
 Python dict walk over the pool. The columnar engine
 (``repro.serving.cluster_vector``) computes the identical trajectory in
 three array passes over an ``AppTable``. This benchmark measures both on
-the same 100k-app azure_like fleet, asserts the trajectories agree
-*bit-for-bit* before claiming any speedup (the conformance contract), and
-records the 1M-app vector-only fleet run the paper-scale analysis needs.
+the same 100k-app azure_like fleet — once with an infinite HBM budget and
+once oversubscribed (per-worker budget of a few model images, so ~17% of
+events trigger the fixed-point eviction replay) — asserts the trajectories
+agree *bit-for-bit* including per-worker eviction counters before claiming
+any speedup (the conformance contract), and records the 1M-app vector-only
+fleet run the paper-scale analysis needs.
 
-Results go to ``BENCH_cluster_sim.json`` (repo root); the canonical record
-is the 100k-app point (target: >= 20x event throughput). Reduced/--smoke
-runs never clobber it.
+Results go to ``BENCH_cluster_sim.json`` (repo root); the canonical
+records are the 100k-app points (target: >= 20x event throughput, in the
+eviction regime too). Reduced/--smoke runs never clobber it.
 
   PYTHONPATH=src python -m benchmarks.cluster_sim [--smoke] [--apps N]
 """
@@ -42,12 +45,31 @@ JSON_PATH = os.environ.get(
 DAYS = 0.5
 MAX_EVENTS = 6
 FLEET_APPS = 1_000_000
+# Oversubscribed budget: this many copies of the fleet's largest model
+# image per worker (8 x ~13 GB puts ~17% of the 100k-app fleet's events
+# into the eviction path while per-worker assigned bytes run ~3x over).
+EVICTION_BUDGET_IMAGES = 8
+
+_COUNTERS = ("cold_starts", "warm_starts", "prewarms", "unloads",
+             "evictions", "budget_overflows", "bytes_moved")
 
 
 def _timed(fn):
     t0 = time.perf_counter()
     out = fn()
     return out, time.perf_counter() - t0
+
+
+def _assert_bit_equal(vec, sca):
+    np.testing.assert_array_equal(vec.cold_pct_per_app, sca.cold_pct_per_app)
+    np.testing.assert_array_equal(vec.latencies_s, sca.latencies_s)
+    np.testing.assert_allclose(vec.wasted_gb_minutes, sca.wasted_gb_minutes,
+                               rtol=1e-9)
+    for w, (sv, ss) in enumerate(zip(vec.stats_per_worker,
+                                     sca.stats_per_worker)):
+        for key in _COUNTERS:
+            assert sv[key] == ss[key], f"worker {w} {key}: " \
+                                       f"{sv[key]} != {ss[key]}"
 
 
 def run(n_apps: int = 100_000, smoke: bool = False):
@@ -73,10 +95,7 @@ def run(n_apps: int = 100_000, smoke: bool = False):
 
     # Conformance before any throughput number: the engines must agree
     # bit-for-bit on the trajectory they are being timed on.
-    np.testing.assert_array_equal(vec.cold_pct_per_app, sca.cold_pct_per_app)
-    np.testing.assert_array_equal(vec.latencies_s, sca.latencies_s)
-    np.testing.assert_allclose(vec.wasted_gb_minutes, sca.wasted_gb_minutes,
-                               rtol=1e-9)
+    _assert_bit_equal(vec, sca)
 
     speedup = t_sca / t_vec
     rows = [
@@ -107,10 +126,53 @@ def run(n_apps: int = 100_000, smoke: bool = False):
         },
     }
 
+    # --- eviction regime: same fleet, per-worker HBM budget of a few
+    # images, so the fixed-point eviction replay is on the timed path.
+    # Smoke fleets are small enough that 8 images rarely collide; 2 keeps
+    # the CI case genuinely oversubscribed (thousands of evictions).
+    ev_images = 2 if smoke else EVICTION_BUDGET_IMAGES
+    ev_budget = float(table.weight_bytes.max()) * ev_images
+    ev_cluster = ClusterSpec(n_workers=n_workers, hbm_budget_bytes=ev_budget)
+    evec, t_evec0 = _timed(
+        lambda: run_cluster(table, policy, ev_cluster, engine="vector"))
+    _, t_evec = _timed(
+        lambda: run_cluster(table, policy, ev_cluster, engine="vector"))
+    t_evec = min(t_evec0, t_evec)
+    esca, t_esca = _timed(
+        lambda: run_cluster(table, policy, ev_cluster, engine="scalar"))
+    _assert_bit_equal(evec, esca)
+    n_evictions = evec.evictions
+    ev_speedup = t_esca / t_evec
+    rows += [
+        (f"cluster_evict_vector_{n_apps}apps_seconds", t_evec, ""),
+        (f"cluster_evict_oracle_{n_apps}apps_seconds", t_esca, ""),
+        ("cluster_evict_vector_events_per_sec", n_events / t_evec, ""),
+        ("cluster_evict_oracle_events_per_sec", n_events / t_esca, ""),
+        ("cluster_evict_vector_over_oracle_speedup", ev_speedup, ""),
+        ("cluster_evict_evictions", float(n_evictions), ""),
+    ]
+    assert n_evictions > 0, "eviction benchmark saw no evictions"
+    record["eviction_regime"] = {
+        "hbm_budget_bytes": ev_budget,
+        "budget_images": ev_images,
+        "evictions": int(n_evictions),
+        "eviction_event_pct": 100.0 * n_evictions / max(n_events, 1),
+        "vector_seconds": t_evec,
+        "oracle_seconds": t_esca,
+        "vector_events_per_sec": n_events / t_evec,
+        "oracle_events_per_sec": n_events / t_esca,
+        "vector_over_oracle_speedup": ev_speedup,
+        "conformance": "bit-exact incl. per-worker eviction counters",
+    }
+
     if full_scale:
         assert speedup >= 20.0, (
             f"vectorized cluster engine only {speedup:.1f}x over the "
             f"per-event oracle at {n_apps} apps (target: >= 20x)")
+        assert ev_speedup >= 20.0, (
+            f"vectorized cluster engine only {ev_speedup:.1f}x over the "
+            f"per-event oracle in the eviction regime at {n_apps} apps "
+            f"(target: >= 20x)")
         # The fleet point the oracle cannot reach: 1M apps, vector only.
         fspec = azure_like(FLEET_APPS, days=DAYS, seed=17,
                            max_events=MAX_EVENTS)
@@ -151,8 +213,10 @@ def run(n_apps: int = 100_000, smoke: bool = False):
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny fleet (CI): exercises both engines and the "
-                         "conformance assert, not the throughput claim")
+                    help="tiny fleet (CI): exercises both engines — the "
+                         "oversubscribed eviction regime included — and "
+                         "the conformance asserts, not the throughput "
+                         "claim")
     ap.add_argument("--apps", type=int, default=100_000)
     args = ap.parse_args()
     for key, value, ref in run(n_apps=args.apps, smoke=args.smoke):

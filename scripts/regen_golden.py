@@ -23,21 +23,31 @@ sys.path.insert(0, os.path.join(REPO, "tests"))
 from repro.core.policy import HybridHistogramPolicy           # noqa: E402
 from repro.core.simulator import simulate_scalar              # noqa: E402
 
-from golden_traces import GOLDEN_TRACES, cluster_small_fleet  # noqa: E402
+from golden_traces import (GOLDEN_TRACES, cluster_oversubscribed_fleet,  # noqa: E402
+                           cluster_small_fleet)
 
 GOLDEN_DIR = os.path.join(REPO, "tests", "golden")
 
+CLUSTER_STAT_KEYS = ("cold_starts", "warm_starts", "prewarms", "unloads",
+                     "evictions", "budget_overflows", "bytes_moved")
 
-def regen_cluster() -> None:
-    """The small-fleet cluster golden (cluster_small.json): the per-event
-    scalar oracle's cold %, wasted GB-minutes, latency percentiles and
-    per-worker counters; both cluster engines replay against it."""
+CLUSTER_GOLDENS = {
+    # json filename -> fixture returning (workload, policy, cluster)
+    "cluster_small.json": cluster_small_fleet,
+    "cluster_oversub.json": cluster_oversubscribed_fleet,
+}
+
+
+def regen_cluster(fname: str, fixture) -> None:
+    """A cluster golden: the per-event scalar oracle's cold %, wasted
+    GB-minutes, latency percentiles and per-worker counters (evictions and
+    budget overflows included); both cluster engines replay against it."""
     from repro.serving.cluster_vector import run_cluster
 
-    workload, policy, cluster = cluster_small_fleet()
+    workload, policy, cluster = fixture()
     res = run_cluster(workload, policy, cluster, engine="scalar")
     record = {
-        "workload": workload.name,
+        "workload": getattr(workload, "name", type(workload).__name__),
         "n_apps": workload.n_apps,
         "n_workers": cluster.n_workers,
         "balancing": cluster.balancing,
@@ -47,21 +57,22 @@ def regen_cluster() -> None:
         "latency_pct": {q: res.latency_pct(float(q))
                         for q in ("50", "90", "99")},
         "stats_per_worker": [
-            {k: s[k] for k in ("cold_starts", "warm_starts", "prewarms",
-                               "unloads", "evictions", "bytes_moved")}
+            {k: s[k] for k in CLUSTER_STAT_KEYS}
             for s in res.stats_per_worker],
     }
-    path = os.path.join(GOLDEN_DIR, "cluster_small.json")
+    path = os.path.join(GOLDEN_DIR, fname)
     with open(path, "w") as f:
         json.dump(record, f, indent=1, sort_keys=True)
         f.write("\n")
+    evict = sum(s["evictions"] for s in res.stats_per_worker)
     print(f"wrote {path}: {workload.n_apps} apps on {cluster.n_workers} "
-          f"workers, {len(res.latencies_s)} events")
+          f"workers, {len(res.latencies_s)} events, {evict} evictions")
 
 
 def main() -> None:
     os.makedirs(GOLDEN_DIR, exist_ok=True)
-    regen_cluster()
+    for fname, fixture in sorted(CLUSTER_GOLDENS.items()):
+        regen_cluster(fname, fixture)
     for name, (make_trace, cfg) in sorted(GOLDEN_TRACES.items()):
         trace = make_trace()
         res = simulate_scalar(trace, HybridHistogramPolicy(cfg))

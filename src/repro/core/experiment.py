@@ -221,6 +221,10 @@ class EngineOptions:
     #                                   scaled down by the config-axis size)
     tile_apps: int = 512              # Pallas kernel app-tile
     interpret: Optional[bool] = None  # Pallas interpret (None: off-TPU only)
+    max_eviction_rounds: Optional[int] = None   # cluster cells only: cap
+    #                                   the HBM-eviction fixed point; past
+    #                                   it the cell falls back to the
+    #                                   scalar oracle with a warning
 
 
 @dataclasses.dataclass
@@ -416,7 +420,10 @@ def sweep(trace=None, specs: Sequence = None, *, traces=None, clusters=None,
         return sweep_cluster(traces if traces is not None else trace,
                              specs, clusters, engine=engine,
                              app_chunk=(options.app_chunk
-                                        if options is not None else None))
+                                        if options is not None else None),
+                             max_eviction_rounds=(
+                                 options.max_eviction_rounds
+                                 if options is not None else None))
     opts = options or EngineOptions()
     eng = _resolve_engine(engine)
     if traces is None:
@@ -440,5 +447,8 @@ def run(trace, spec, *, engine: str = "auto", cluster=None,
         from ..serving.cluster_vector import run_cluster
         return run_cluster(trace, spec, cluster, engine=engine,
                            app_chunk=(options.app_chunk
-                                      if options is not None else None))
+                                      if options is not None else None),
+                           max_eviction_rounds=(
+                               options.max_eviction_rounds
+                               if options is not None else None))
     return sweep(trace, [spec], engine=engine, options=options).row(0)

@@ -4,11 +4,11 @@ Example:
   PYTHONPATH=src python -m repro.launch.serve --apps 40 --minutes 120 \
       --policy hybrid
 
-``--engine scalar`` (default) runs the per-event oracle, which models HBM
-evictions — realistic when the registry oversubscribes the worker budget.
-``--engine vector`` runs the columnar fleet engine
-(:mod:`repro.serving.cluster_vector`), which refuses eviction regimes but
-scales to millions of apps.
+``--engine auto`` (default) runs the columnar fleet engine
+(:mod:`repro.serving.cluster_vector`), which scales to millions of apps
+and replays HBM evictions to a fixed point, bit-identical to the oracle
+when the registry oversubscribes the worker budget. ``--engine scalar``
+runs the per-event oracle.
 """
 from __future__ import annotations
 
@@ -62,7 +62,7 @@ def main(argv=None) -> int:
     ap.add_argument("--workers", type=int, default=18)
     ap.add_argument("--hbm-gb", type=float, default=16.0)
     ap.add_argument("--hedge", action="store_true")
-    ap.add_argument("--engine", default="scalar",
+    ap.add_argument("--engine", default="auto",
                     choices=["auto", "vector", "scalar"])
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)

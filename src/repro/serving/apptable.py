@@ -91,6 +91,13 @@ class AppTable:
 
     ``times`` is the padded ``[n_apps, max_ev]`` invocation frame in minutes
     (+inf padded, sorted per row); treat all arrays as read-only.
+
+    ``weight_bytes`` feeds both the cold-start latency model and the HBM
+    occupancy replay (``cluster_vector`` phase D). Eviction ties break on
+    the *string* app id, exactly like the oracle's heap — canonical
+    ``app-%06d`` ids compare lexicographically in index order up to one
+    million apps, which the engine exploits; tables carrying custom
+    ``app_ids`` fall back to explicit lexicographic ranks.
     """
 
     times: np.ndarray          # [n, M] minutes, sorted, +inf padded

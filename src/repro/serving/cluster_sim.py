@@ -48,6 +48,17 @@ class ClusterResult:
     def cold_pct_p75(self) -> float:
         return float(np.percentile(self.cold_pct_per_app, 75))
 
+    @property
+    def evictions(self) -> int:
+        """Total HBM-pressure evictions across the fleet."""
+        return int(sum(s["evictions"] for s in self.stats_per_worker))
+
+    @property
+    def budget_overflows(self) -> int:
+        """Loads that proceeded over budget (nothing left to evict)."""
+        return int(sum(s.get("budget_overflows", 0)
+                       for s in self.stats_per_worker))
+
     def latency_pct(self, q: float) -> float:
         return float(np.percentile(self.latencies_s, q))
 

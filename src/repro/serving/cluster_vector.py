@@ -25,17 +25,37 @@ columnar :class:`repro.serving.apptable.AppTable` in three array passes:
      loads/unloads, residency time, latency, and per-worker stats all fall
      out as segmented reductions.
 
+  D. **HBM evictions to a fixed point.** Workers whose assigned image
+     bytes exceed the budget (a cheap pessimistic screen — everyone else
+     skips this phase entirely) replay their per-worker occupancy in the
+     oracle's processing order: one op list (expiries, pre-warm fires,
+     request loads, end-of-request unloads, phase-ordered exactly as
+     ``WarmPool.tick``/``on_request`` interleave them) whose running
+     cumsum exposes every over-budget load. Each violation is resolved the
+     way ``WarmPool._ensure_budget`` would — evict resident, unpinned apps
+     in ``(unload_at, app_id)`` order until the load fits — then the
+     occupancy is patched *in place* (an eviction only removes residency
+     between the eviction and the victim's next arrival, which flips cold)
+     and the scan resumes. Because an eviction never adds occupancy before
+     the violation that caused it, the scan position is monotone and the
+     schedule converges to the oracle's in at most one resolution per
+     ``_ensure_budget`` call that evicts.
+
 Exactness contract (enforced by ``tests/test_cluster_conformance.py``):
-cold counts, per-app cold %, latencies and load/unload/prewarm counters are
-*bit-identical* to the oracle; resident byte-seconds agree to float64
-accumulation-order tolerance. The one regime difference: HBM-budget
-evictions are inherently sequential, so the vector engine *proves* the run
-eviction-free (a pessimistic per-worker occupancy peak) and refuses
-otherwise, pointing at ``engine="scalar"``.
+cold counts, per-app cold %, latencies and every
+load/unload/prewarm/**eviction** counter are *bit-identical* to the oracle
+— including on oversubscribed fleets where HBM pressure evicts (the
+fig_cluster 18x16 GB scenario, flash-crowd eviction storms); resident
+byte-seconds agree to float64 accumulation-order tolerance. A
+``max_eviction_rounds`` escape hatch caps the fixed-point work; past it the
+front door falls back to ``engine="scalar"`` with a warning instead of
+silently diverging. Like the oracle's ``WarmPool``, construction refuses a
+single image larger than the per-worker budget outright.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import List, Optional, Sequence, Union
 
@@ -58,8 +78,9 @@ from .cluster_sim import MINUTE, ClusterConfig, ClusterResult, ClusterSim
 from .registry import (BASE_LOAD_LATENCY, COMPILE_MISS_LATENCY,
                        H2D_BANDWIDTH)
 
-__all__ = ["CLUSTER_ENGINES", "ClusterSpec", "ClusterSweep", "as_table",
-           "run_cluster", "sweep_cluster"]
+__all__ = ["CLUSTER_ENGINES", "ClusterSpec", "ClusterSweep",
+           "EvictionRoundsExceeded", "as_table", "run_cluster",
+           "sweep_cluster"]
 
 CLUSTER_ENGINES = ("auto", "vector", "scalar")
 
@@ -254,41 +275,188 @@ def _first_tick_ge(ticks_by_w, woff, tick_src, worker_q, thr_q):
     return t_out, i_out
 
 
-def _check_no_evictions(spec: ClusterSpec,
-                        load_steps, load_bytes, unload_steps, unload_bytes,
-                        load_workers, unload_workers) -> None:
-    """Prove the run never trips the HBM eviction path.
+class EvictionRoundsExceeded(RuntimeError):
+    """The eviction fixed point ran past ``max_eviction_rounds``.
 
-    Replays per-worker occupancy deltas in oracle *processing* order
-    (global event rank), applying same-step loads before unloads — a
-    pessimistic peak. Evictions unload other apps mid-run, which feeds back
-    into every later verdict; that is inherently sequential, so the vector
-    engine refuses rather than silently diverging.
+    Raised by the worker replay; :func:`run_cluster` catches it and falls
+    back to ``engine="scalar"`` with a warning rather than spinning (or
+    silently diverging from) the oracle's sequential eviction cascade.
     """
-    budget = float(spec.hbm_budget_bytes)
-    steps = np.concatenate([load_steps, unload_steps])
-    delta = np.concatenate([load_bytes, -unload_bytes])
-    workers = np.concatenate([load_workers, unload_workers])
-    order = np.lexsort((-delta, steps, workers))
-    cum = np.cumsum(delta[order])
-    w_sorted = workers[order]
-    starts = np.nonzero(np.diff(w_sorted, prepend=-1))[0]
-    base = np.where(starts > 0, cum[starts - 1], 0.0)
-    peaks = np.maximum.reduceat(cum, starts) - base
-    if peaks.max(initial=0.0) > budget:
-        raise ValueError(
-            "per-worker HBM pressure would trigger evictions, which the "
-            "vectorized cluster engine does not model (they are inherently "
-            "sequential); raise hbm_budget_bytes, add workers, or run "
-            "engine='scalar'")
+
+
+def _app_tie_ranks(table: AppTable) -> np.ndarray:
+    """Eviction tie-break keys matching the oracle's heap order.
+
+    ``WarmPool._ensure_budget`` pops ``(unload_at, app_id)`` tuples, so
+    equal expiries tie-break on the app-id *string*. Canonical
+    ``app-%06d`` ids compare in index order while they are 6 digits wide;
+    wider fleets (and explicit non-canonical ids) get their true
+    lexicographic rank.
+    """
+    n = table.n_apps
+    if table.app_ids is not None:
+        ids = np.asarray(table.app_ids)
+    elif n > 1_000_000:          # "app-1000000" sorts before "app-999999"
+        ids = np.array([table.app_id(i) for i in range(n)])
+    else:
+        return np.arange(n, dtype=np.int64)
+    ranks = np.empty(n, np.int64)
+    ranks[np.argsort(ids)] = np.arange(n)
+    return ranks
+
+
+def _evict_worker(j_idx, budget, *, rows, rank, t_by_rank, wb, tie, cold,
+                  stay, pre, fired, need_u, need_f, ui_stay, ui_fire,
+                  tau_i, u_stay, q_fire, p_pre, max_rounds):
+    """Exact HBM-eviction replay for one worker (phase D).
+
+    ``j_idx`` holds the worker's flat event indices in ``(app, k)`` order;
+    every other array is global flat-event state from the gap replay. The
+    worker's memory ops are laid out in the oracle's processing order —
+    per event rank, keep-alive expiries (phase 0), then pre-warm fires
+    ordered by ``(prewarm_at, app_id)`` (phase 1), then the request load
+    (phase 2), then the end-of-request unload (phase 3) — and the running
+    occupancy cumsum is scanned for over-budget loads. Each violation is
+    resolved like ``WarmPool._ensure_budget``: resident spans covering the
+    violation are candidates, evicted in ``(unload_at, app_id)`` order
+    until the load fits (or counted as a budget overflow when nothing
+    evictable remains). An eviction removes the victim's occupancy only
+    between the violation and the victim's next scheduled end — its next
+    arrival (flipped to a cold load, in-place in ``cold``) or scheduled
+    expiry — so the patch is a slice subtraction and the scan resumes
+    forward; positions are monotone, so each ``_ensure_budget`` call is
+    resolved exactly once.
+
+    Returns ``(evicted_local, evict_time_local, overflows, rounds)``.
+    """
+    E = len(j_idx)
+    app = rows[j_idx]
+    w_b = wb[j_idx].astype(np.float64)
+    g_tie = tie[app]
+    step = rank[j_idx]
+    st_g, pre_g, fired_g = stay[j_idx], pre[j_idx], fired[j_idx]
+    nu_g, nf_g = need_u[j_idx], need_f[j_idx]
+
+    # ---- op table (unsorted layout: expiries | fires | slots | ends) ----
+    ui_g = np.where(st_g, ui_stay[j_idx], ui_fire[j_idx])
+    g_exp = np.nonzero((nu_g | nf_g) & (ui_g >= 0))[0]
+    g_fire = np.nonzero(fired_g)[0]
+    g_end = np.nonzero(pre_g)[0]
+    n_exp, n_fire, n_end = len(g_exp), len(g_fire), len(g_end)
+    slot0 = n_exp + n_fire
+    N = slot0 + E + n_end
+
+    op_gap = np.concatenate([g_exp, g_fire, np.arange(E), g_end])
+    op_step = np.concatenate([rank[ui_g[g_exp]], rank[tau_i[j_idx[g_fire]]],
+                              step, step[g_end]])
+    op_phase = np.concatenate([np.zeros(n_exp, np.int8),
+                               np.ones(n_fire, np.int8),
+                               np.full(E, 2, np.int8),
+                               np.full(n_end, 3, np.int8)])
+    op_sub1 = np.zeros(N)
+    op_sub1[n_exp:slot0] = p_pre[j_idx[g_fire]]
+    op_sub2 = np.zeros(N, np.int64)
+    op_sub2[n_exp:slot0] = g_tie[g_fire]
+    op_delta = np.concatenate([-w_b[g_exp], w_b[g_fire],
+                               w_b * cold[j_idx], -w_b[g_end]])
+    op_need = np.concatenate([np.zeros(n_exp), w_b[g_fire], w_b,
+                              np.zeros(n_end)])
+    op_check = np.concatenate([np.zeros(n_exp, bool), np.ones(n_fire, bool),
+                               cold[j_idx].copy(), np.zeros(n_end, bool)])
+
+    srt = np.lexsort((op_sub2, op_sub1, op_phase, op_step))
+    pos_of = np.empty(N, np.int64)
+    pos_of[srt] = np.arange(N)
+    slot_pos = pos_of[slot0:slot0 + E]
+    fire_pos = np.full(E, -1, np.int64)
+    fire_pos[g_fire] = pos_of[n_exp:slot0]
+    exp_pos = np.full(E, -1, np.int64)
+    exp_pos[g_exp] = pos_of[:n_exp]
+
+    occ = np.cumsum(op_delta[srt])
+    check_s = op_check[srt]
+    need_s = op_need[srt]
+    gap_s = op_gap[srt]
+    step_s = op_step[srt]
+
+    # ---- resident spans per gap, in op positions -----------------------
+    active = st_g | fired_g
+    span_start = np.where(st_g, slot_pos, fire_pos)
+    has_sched = np.where(st_g, nu_g, nf_g)
+    span_end = np.full(E, N, np.int64)          # scheduled end at run end
+    found = active & has_sched & (exp_pos >= 0)
+    span_end[found] = exp_pos[found]
+    warm_cont = active & ~has_sched             # continues into next event
+    if warm_cont.any():
+        g_nxt = np.searchsorted(j_idx, j_idx[warm_cont] + 1)
+        span_end[warm_cont] = slot_pos[g_nxt]
+    u_time = np.where(st_g, u_stay[j_idx], q_fire[j_idx])
+
+    # ---- scan + resolve ------------------------------------------------
+    evicted = np.zeros(E, bool)
+    evict_t = np.zeros(E)
+    overflows = 0
+    rounds = 0
+    s = 0
+    while s < N:
+        seg = check_s[s:] & (occ[s:] > budget)
+        rel = int(np.argmax(seg))
+        if not seg[rel]:
+            break
+        v = s + rel
+        rounds += 1
+        if rounds > max_rounds:
+            raise EvictionRoundsExceeded(
+                f"eviction fixed point exceeded max_eviction_rounds="
+                f"{max_rounds} on one worker")
+        a_v = app[gap_s[v]]
+        t_v = t_by_rank[step_s[v]]
+        need = need_s[v]
+        used_before = occ[v] - need
+        cand = np.nonzero(active & ~evicted & (span_start < v)
+                          & (span_end > v) & (app != a_v))[0]
+        if len(cand):
+            cand = cand[np.lexsort((g_tie[cand], u_time[cand]))]
+            freed = np.cumsum(w_b[cand])
+            k = int(np.searchsorted(freed, used_before + need - budget,
+                                    side="left")) + 1
+            if k > len(cand):
+                k = len(cand)
+                overflows += 1
+            victims = cand[:k]
+        else:
+            victims = cand
+            overflows += 1
+        for g_e in victims:
+            evicted[g_e] = True
+            evict_t[g_e] = t_v
+            occ[v:span_end[g_e]] -= w_b[g_e]
+            if warm_cont[g_e]:
+                # The victim's next arrival finds the image gone: cold.
+                j_n = j_idx[g_e] + 1
+                cold[j_n] = True
+                check_s[slot_pos[np.searchsorted(j_idx, j_n)]] = True
+        s = v + 1
+    return evicted, evict_t, overflows, rounds
 
 
 def _run_vector(table: AppTable, spec: PolicySpec, cluster: ClusterSpec,
-                app_chunk: int) -> ClusterResult:
+                app_chunk: int,
+                max_eviction_rounds: Optional[int] = None) -> ClusterResult:
     n = table.n_apps
     n_workers = cluster.n_workers
     counts = np.asarray(table.counts, np.int64)
     t_end = float(table.duration_minutes) * MINUTE
+
+    budget = float(cluster.hbm_budget_bytes)
+    if np.isfinite(budget) and n and table.weight_bytes.max() > budget:
+        i_big = int(np.argmax(table.weight_bytes))
+        raise ValueError(
+            f"endpoint {table.app_id(i_big)!r} needs "
+            f"{int(table.weight_bytes[i_big])} bytes but the HBM budget is "
+            f"{budget:.0f}: a single image larger than the budget can "
+            f"never fit (evicting everything still leaves the pool over "
+            f"budget forever)")
 
     # ---- Phase A: the merged event stream -------------------------------
     m_ev = table.times.shape[1]
@@ -366,24 +534,54 @@ def _run_vector(table: AppTable, spec: PolicySpec, cluster: ClusterSpec,
     not_first = np.nonzero(~first)[0]
     cold[not_first] = next_cold[not_first - 1]
 
-    # Loads and unloads (time, step, worker, bytes) for residency + stats.
+    # ---- Phase D: HBM evictions to a fixed point ------------------------
+    # Cheap pessimistic screen first: a worker whose assigned apps all fit
+    # at once can never evict; only workers past the sum test replay their
+    # exact processing-order occupancy (and most find no violation).
     wb = table.weight_bytes.astype(np.float64)
     wb_flat = wb[rows]
+    evicted = np.zeros(n_events, bool)
+    evict_time = np.zeros(n_events)
+    overflow_w = np.zeros(n_workers, np.int64)
+    active = counts > 0
+    if np.isfinite(budget) and n_events:
+        per_w_assigned = np.bincount(assign[active], weights=wb[active],
+                                     minlength=n_workers)
+        risky = np.nonzero(per_w_assigned > budget)[0]
+        if len(risky):
+            tie = _app_tie_ranks(table)
+            t_by_rank = t_flat[order]
+            rounds_left = (max_eviction_rounds if max_eviction_rounds
+                           is not None else np.inf)
+            for w in risky:
+                j_w = np.nonzero(w_flat == w)[0]
+                ev_l, evt_l, n_over, used = _evict_worker(
+                    j_w, budget, rows=rows, rank=rank, t_by_rank=t_by_rank,
+                    wb=wb_flat, tie=tie, cold=cold, stay=stay, pre=pre,
+                    fired=fired, need_u=need_u, need_f=need_f,
+                    ui_stay=ui_stay, ui_fire=ui_fire, tau_i=tau_i,
+                    u_stay=u_stay, q_fire=q_fire, p_pre=p_pre,
+                    max_rounds=rounds_left)
+                evicted[j_w] = ev_l
+                evict_time[j_w] = evt_l
+                overflow_w[w] = n_over
+                rounds_left -= used
+
+    # Loads and unloads (time, worker, bytes) for residency + stats. An
+    # evicted span's scheduled expiry never happens — its unload is the
+    # eviction itself, at the evicting load's tick time.
+    sched_u = need_u & ~evicted
+    sched_f = need_f & ~evicted
     load_m = [cold, fired]
     load_t = [t_flat[cold], tau[fired]]
-    load_step = [rank[cold], rank[tau_i[fired]]]
-    unload_m = [pre, need_u, need_f]
+    unload_m = [pre, sched_u, sched_f, evicted]
+    # Expiries missing their tick are finalized at the run end.
     unload_t = [e_flat[pre],
-                np.where(np.isfinite(ut_stay[need_u]), ut_stay[need_u], t_end),
-                np.where(np.isfinite(ut_fire[need_f]), ut_fire[need_f], t_end)]
-    # Expiries missing their tick are finalized at the run end (after every
-    # event: step n_events); found ticks carry that tick's processing rank.
-    unload_step = [
-        rank[pre],
-        np.where(ui_stay[need_u] >= 0, rank[np.maximum(ui_stay[need_u], 0)],
-                 n_events),
-        np.where(ui_fire[need_f] >= 0, rank[np.maximum(ui_fire[need_f], 0)],
-                 n_events)]
+                np.where(np.isfinite(ut_stay[sched_u]), ut_stay[sched_u],
+                         t_end),
+                np.where(np.isfinite(ut_fire[sched_f]), ut_fire[sched_f],
+                         t_end),
+                evict_time[evicted]]
 
     lw = np.concatenate([w_flat[m] for m in load_m]) if n_events else \
         np.zeros(0, np.int64)
@@ -403,21 +601,6 @@ def _run_vector(table: AppTable, spec: PolicySpec, cluster: ClusterSpec,
     if not np.array_equal(n_loads, n_unloads):  # pragma: no cover
         raise AssertionError("cluster_vector invariant violated: "
                              "per-app loads != unloads")
-
-    # Cheap eviction screen: a worker whose assigned apps all fit at once
-    # can never evict; only workers past the sum test get the exact
-    # processing-order occupancy replay.
-    budget = float(cluster.hbm_budget_bytes)
-    active = counts > 0
-    per_w_assigned = np.bincount(assign[active], weights=wb[active],
-                                 minlength=n_workers)
-    if np.isfinite(budget) and per_w_assigned.max(initial=0.0) > budget:
-        _check_no_evictions(
-            cluster,
-            np.concatenate(load_step) if n_events else np.zeros(0, np.int64),
-            lb,
-            np.concatenate(unload_step) if n_events else np.zeros(0, np.int64),
-            ub, lw, uw)
 
     # ---- Results --------------------------------------------------------
     base_cold = BASE_LOAD_LATENCY + wb / H2D_BANDWIDTH
@@ -441,12 +624,15 @@ def _run_vector(table: AppTable, spec: PolicySpec, cluster: ClusterSpec,
     cold_w = np.bincount(w_flat[cold], minlength=n_workers)
     warm_w = (np.bincount(w_flat, minlength=n_workers) - cold_w)
     fire_w = np.bincount(w_flat[fired], minlength=n_workers)
-    unl_w = np.bincount(uw, minlength=n_workers)
+    unl_w = np.bincount(uw, minlength=n_workers)   # includes evictions
+    evict_w = np.bincount(w_flat[evicted], minlength=n_workers)
     moved_w = np.bincount(lw, weights=lb, minlength=n_workers)
     for w in range(n_workers):
         stats.append(dict(
             cold_starts=int(cold_w[w]), warm_starts=int(warm_w[w]),
-            prewarms=int(fire_w[w]), unloads=int(unl_w[w]), evictions=0,
+            prewarms=int(fire_w[w]), unloads=int(unl_w[w]),
+            evictions=int(evict_w[w]),
+            budget_overflows=int(overflow_w[w]),
             bytes_moved=float(moved_w[w]),
             resident_byte_seconds=float(resident_bs[w])))
 
@@ -468,6 +654,7 @@ def _run_vector(table: AppTable, spec: PolicySpec, cluster: ClusterSpec,
 
 def run_cluster(workload, policy, cluster: Optional[ClusterSpec] = None, *,
                 engine: str = "auto", app_chunk: Optional[int] = None,
+                max_eviction_rounds: Optional[int] = None,
                 exec_s=None, memory_mb=None,
                 weight_bytes=None) -> ClusterResult:
     """Run one workload x policy x cluster cell.
@@ -475,7 +662,12 @@ def run_cluster(workload, policy, cluster: Optional[ClusterSpec] = None, *,
     ``workload`` is an :class:`AppTable`, ``WorkloadSpec`` or ``Trace``
     (``exec_s``/``memory_mb``/``weight_bytes`` fill in per-app metadata the
     workload itself does not carry). ``engine="auto"`` picks the vectorized
-    engine; ``"scalar"`` runs the per-event oracle on the same table.
+    engine — including on oversubscribed fleets, where HBM evictions are
+    replayed to a fixed point; ``"scalar"`` runs the per-event oracle on
+    the same table. ``max_eviction_rounds`` (an ``EngineOptions``-style
+    execution knob; default unlimited) caps the total fixed-point
+    resolutions — past it the run falls back to the scalar oracle with a
+    warning instead of spinning.
     """
     if engine not in CLUSTER_ENGINES:
         raise ValueError(f"unknown cluster engine {engine!r}; expected one "
@@ -485,11 +677,18 @@ def run_cluster(workload, policy, cluster: Optional[ClusterSpec] = None, *,
     spec = as_spec(policy)
     table = as_table(workload, exec_s=exec_s, memory_mb=memory_mb,
                      weight_bytes=weight_bytes)
-    if engine == "scalar":
-        sim = ClusterSim(table.to_registry(), spec, cluster.to_config())
-        return sim.run(table.to_trace())
-    return _run_vector(table, spec, cluster,
-                       app_chunk or DEFAULT_APP_CHUNK)
+    if engine != "scalar":
+        try:
+            return _run_vector(table, spec, cluster,
+                               app_chunk or DEFAULT_APP_CHUNK,
+                               max_eviction_rounds=max_eviction_rounds)
+        except EvictionRoundsExceeded as e:
+            warnings.warn(
+                f"{e}; falling back to engine='scalar' (raise "
+                f"max_eviction_rounds to keep the vectorized engine)",
+                RuntimeWarning, stacklevel=2)
+    sim = ClusterSim(table.to_registry(), spec, cluster.to_config())
+    return sim.run(table.to_trace())
 
 
 @dataclasses.dataclass
@@ -515,8 +714,8 @@ class ClusterSweep:
 
 def sweep_cluster(workloads: Union[Sequence, object], specs: Sequence,
                   clusters: Optional[Sequence[ClusterSpec]] = None, *,
-                  engine: str = "auto",
-                  app_chunk: Optional[int] = None) -> ClusterSweep:
+                  engine: str = "auto", app_chunk: Optional[int] = None,
+                  max_eviction_rounds: Optional[int] = None) -> ClusterSweep:
     """Evaluate the full workload x policy x cluster grid.
 
     Each workload is converted to a columnar :class:`AppTable` ONCE and
@@ -530,7 +729,8 @@ def sweep_cluster(workloads: Union[Sequence, object], specs: Sequence,
         raise ValueError("sweep_cluster needs at least one workload, one "
                          "PolicySpec and one ClusterSpec")
     tables = [as_table(w) for w in workloads]
-    results = [[[run_cluster(tab, s, c, engine=engine, app_chunk=app_chunk)
+    results = [[[run_cluster(tab, s, c, engine=engine, app_chunk=app_chunk,
+                             max_eviction_rounds=max_eviction_rounds)
                  for c in clusters] for s in specs] for tab in tables]
     return ClusterSweep(tables=tables, specs=specs, clusters=clusters,
                         results=results)

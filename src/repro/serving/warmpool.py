@@ -12,7 +12,9 @@ memory. The policy decides, per endpoint:
 All in virtual time (the cluster simulator drives `now`); the same object
 drives the real engine in examples/serve_serverless.py. Memory-budget
 pressure evicts the app whose keep-alive expires soonest (the policy's own
-estimate of "least likely to be needed").
+estimate of "least likely to be needed"); apps pinned mid-request are never
+victims, and a load that cannot fit even after evicting everything evictable
+proceeds over budget but is counted (``PoolStats.budget_overflows``).
 """
 from __future__ import annotations
 
@@ -31,6 +33,7 @@ MINUTE = 60.0
 class AppState:
     loaded: bool = False
     compile_cached: bool = False
+    pinned: bool = False            # mid-request: never an eviction victim
     last_end: float = -1.0          # end of last request (s)
     unload_at: float = float("inf")  # keep-alive expiry (s)
     prewarm_at: float = float("inf")  # scheduled pre-warm (s)
@@ -49,6 +52,7 @@ class PoolStats:
     prewarms: int = 0
     unloads: int = 0
     evictions: int = 0
+    budget_overflows: int = 0       # loads that proceeded over budget
     bytes_moved: float = 0.0
     resident_byte_seconds: float = 0.0
 
@@ -60,6 +64,13 @@ class WarmPool:
         # (repro.core.experiment) — the same specs the simulators sweep.
         if not isinstance(policy, Policy) and hasattr(policy, "build"):
             policy = policy.build()
+        for ep in registry:
+            if ep.weight_bytes > budget_bytes:
+                raise ValueError(
+                    f"endpoint {ep.app_id!r} needs {ep.weight_bytes} bytes "
+                    f"but the HBM budget is {budget_bytes:.0f}: a single "
+                    f"image larger than the budget can never fit (evicting "
+                    f"everything still leaves the pool over budget forever)")
         self.registry = registry
         self.policy = policy
         self.budget = budget_bytes
@@ -105,14 +116,24 @@ class WarmPool:
     def _ensure_budget(self, need: float, now: float, exclude: str) -> None:
         if self._used + need <= self.budget:
             return
-        # Evict loaded apps in order of soonest keep-alive expiry.
+        # Evict loaded apps in order of soonest keep-alive expiry. Pinned
+        # (mid-request) apps are never candidates: their ``unload_at`` is
+        # inf while they execute, which used to make them indistinguishable
+        # from never-unload apps and thus evictable by a concurrent
+        # pre-warm's budget pass.
         candidates = [(st.unload_at, app) for app, st in self.state.items()
-                      if st.loaded and app != exclude]
+                      if st.loaded and not st.pinned and app != exclude]
         heapq.heapify(candidates)
         while candidates and self._used + need > self.budget:
             _, app = heapq.heappop(candidates)
             self._unload(app, now)
             self.stats.evictions += 1
+        if self._used + need > self.budget:
+            # Nothing evictable is left and the load still does not fit:
+            # the pool proceeds over budget (the load must happen), but no
+            # longer silently — overflows are counted and surfaced in
+            # ClusterResult.stats_per_worker.
+            self.stats.budget_overflows += 1
 
     # -- the policy surface ---------------------------------------------------
 
@@ -152,7 +173,8 @@ class WarmPool:
         else:
             self.stats.warm_starts += 1
         st.prewarm_at = float("inf")    # a real request supersedes pre-warm
-        st.unload_at = float("inf")     # pinned while executing
+        st.unload_at = float("inf")
+        st.pinned = True                # pinned while executing
         return cold, lat
 
     def on_request_end(self, app_id: str, now: float) -> None:
@@ -165,6 +187,7 @@ class WarmPool:
         idle_min = ((now / MINUTE - st.last_end / MINUTE)
                     if st.last_end >= 0 else None)
         st.last_end = now
+        st.pinned = False
         w = self.policy.on_invocation(app_id, idle_min)
         st.windows = w
         # The residency schedule comes from the same single-source bounds the

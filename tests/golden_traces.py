@@ -135,3 +135,34 @@ def cluster_small_fleet():
     policy = HybridSpec()
     cluster = ClusterSpec(n_workers=6, hbm_budget_bytes=float("inf"))
     return workload, policy, cluster
+
+
+def cluster_oversubscribed_fleet():
+    """The eviction-regime cluster golden: a flash-crowd fleet whose model
+    images are inflated ~40x, so three 30 GB workers stay oversubscribed
+    and the soonest-keep-alive-expiry eviction path runs constantly.
+
+    Pins the scalar per-event oracle's trajectory INCLUDING per-worker
+    eviction counters (``tests/golden/cluster_oversub.json``); the
+    conformance suite replays BOTH cluster engines against it, so the
+    vectorized fixed-point eviction replay is anchored to a checked-in
+    oracle run, not just to a live oracle of the same code age.
+    """
+    import dataclasses
+
+    from repro.core.experiment import HybridSpec
+    from repro.core.workload_spec import flash_crowd
+    from repro.serving.apptable import AppTable
+    from repro.serving.cluster_vector import ClusterSpec
+
+    table = AppTable.from_spec(
+        flash_crowd(96, days=0.25, seed=23, max_events=32))
+    # ~40x the Azure-like allocated-memory column: single images stay under
+    # the 30 GB per-worker budget (construction guard) but each worker's
+    # assigned set oversubscribes it several times over.
+    wb = np.minimum((table.memory_mb * 2 ** 20 * 40).astype(np.int64),
+                    np.int64(24e9))
+    table = dataclasses.replace(table, weight_bytes=wb)
+    policy = HybridSpec()
+    cluster = ClusterSpec(n_workers=3, hbm_budget_bytes=30e9)
+    return table, policy, cluster

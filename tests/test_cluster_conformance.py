@@ -2,13 +2,19 @@
 per-event scalar oracle, plus the checked-in small-fleet golden.
 
 The exactness contract (see ``repro.serving.cluster_vector``): cold counts,
-per-app cold %, latencies and every load/unload/prewarm counter are
-bit-identical between engines; resident byte-seconds (and hence wasted
-GB-minutes) agree to float64 accumulation-order tolerance. The suite pins
-that contract across policy families, both balancing modes, hedging,
-controller checkpoint/restore (including the ``checkpoint_at_minute=0.0``
-regression) and the HBM eviction refusal.
+per-app cold %, latencies and every load/unload/prewarm/eviction counter
+are bit-identical between engines — on oversubscribed fleets too, where
+the vectorized engine replays HBM evictions to a fixed point; resident
+byte-seconds (and hence wasted GB-minutes) agree to float64
+accumulation-order tolerance. The suite pins that contract across policy
+families, both balancing modes, hedging, controller checkpoint/restore
+(including the ``checkpoint_at_minute=0.0`` regression and a checkpoint
+dropped mid-eviction-storm) and the eviction machinery itself: storm
+conformance, the pessimistic screen short-circuit, the
+``max_eviction_rounds`` scalar fallback and the single-image-over-budget
+construction guard.
 """
+import dataclasses
 import json
 import os
 
@@ -25,13 +31,22 @@ from repro.serving.cluster_sim import ClusterSim
 from repro.serving.cluster_vector import (ClusterSpec, run_cluster,
                                           sweep_cluster)
 
-from golden_traces import cluster_small_fleet
+from golden_traces import cluster_oversubscribed_fleet, cluster_small_fleet
 
 GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                           "golden")
 
 _COUNTERS = ("cold_starts", "warm_starts", "prewarms", "unloads",
-             "evictions", "bytes_moved")
+             "evictions", "budget_overflows", "bytes_moved")
+
+
+def _oversubscribe(table, factor=40.0, budget=30e9):
+    """Inflate model images ~``factor``x so per-worker assigned bytes
+    oversubscribe ``budget`` several times over (single images stay under
+    it, clearing the construction guard)."""
+    wb = np.minimum((table.memory_mb * 2 ** 20 * factor).astype(np.int64),
+                    np.int64(0.8 * budget))
+    return dataclasses.replace(table, weight_bytes=wb)
 
 
 @pytest.fixture(scope="module")
@@ -140,19 +155,23 @@ def test_checkpoint_mid_and_past_end(azure_table):
 
 
 # --------------------------------------------------------------------------
-# Golden small-fleet fixture (both engines vs checked-in oracle run)
+# Golden fleet fixtures (both engines vs checked-in oracle runs)
 # --------------------------------------------------------------------------
 
 
 @pytest.mark.parametrize("engine", ["scalar", "vector"])
-def test_golden_small_fleet(engine):
-    with open(os.path.join(GOLDEN_DIR, "cluster_small.json")) as f:
+@pytest.mark.parametrize("fixture,fname", [
+    (cluster_small_fleet, "cluster_small.json"),
+    (cluster_oversubscribed_fleet, "cluster_oversub.json"),
+])
+def test_golden_fleet(engine, fixture, fname):
+    with open(os.path.join(GOLDEN_DIR, fname)) as f:
         want = json.load(f)
-    workload, policy, cluster = cluster_small_fleet()
+    workload, policy, cluster = fixture()
     assert want["n_apps"] == workload.n_apps
     assert want["n_workers"] == cluster.n_workers
     res = run_cluster(workload, policy, cluster, engine=engine)
-    err = f"{engine} vs golden cluster_small (see scripts/regen_golden.py)"
+    err = f"{engine} vs golden {fname} (see scripts/regen_golden.py)"
     np.testing.assert_array_equal(
         res.cold_pct_per_app, np.asarray(want["cold_pct_per_app"]),
         err_msg=err)
@@ -195,7 +214,7 @@ def test_fnv1a64_vectorized_matches_scalar():
 
 
 # --------------------------------------------------------------------------
-# HBM eviction gate
+# HBM eviction regime (fixed-point replay vs the oracle)
 # --------------------------------------------------------------------------
 
 
@@ -205,17 +224,91 @@ def _two_app_trace(times, duration=30.0):
                  duration_minutes=duration)
 
 
-def test_eviction_pressure_refused():
-    # Two 10 GB apps resident together on one 16 GB worker: the scalar
-    # oracle evicts; the vector engine proves it cannot and refuses.
+def test_eviction_pressure_conformance():
+    # Two 10 GB apps resident together on one 16 GB worker: the regime the
+    # PR 6 engine refused. Both engines now evict the same victim at the
+    # same tick and every counter matches.
     table = AppTable.from_trace(_two_app_trace([[0.0], [1.0]]),
                                 exec_s=1.0, memory_mb=512.0,
                                 weight_bytes=np.array([10e9, 10e9], np.int64))
     cluster = ClusterSpec(n_workers=1, hbm_budget_bytes=16e9)
-    with pytest.raises(ValueError, match="engine='scalar'"):
-        run_cluster(table, NoUnloadSpec(), cluster, engine="vector")
-    sca = run_cluster(table, NoUnloadSpec(), cluster, engine="scalar")
-    assert sum(s["evictions"] for s in sca.stats_per_worker) >= 1
+    res = _conform(table, NoUnloadSpec(), cluster)
+    assert res.evictions >= 1
+    assert res.budget_overflows == 0
+
+
+@pytest.mark.parametrize("policy,balancing", [
+    (HybridSpec(), "affinity"),
+    (FixedSpec(keep_alive=20.0), "hash"),
+    (NoUnloadSpec(), "affinity"),
+])
+def test_eviction_storm_conformance(flash_table, policy, balancing):
+    # Flash-crowd eviction storm: hundreds of soonest-expiry evictions per
+    # worker, bit-identical across engines for every policy family.
+    res = _conform(_oversubscribe(flash_table), policy,
+                   ClusterSpec(n_workers=3, hbm_budget_bytes=30e9,
+                               balancing=balancing))
+    assert res.evictions > 100
+
+
+def test_eviction_storm_with_hedging(flash_table):
+    res = _conform(_oversubscribe(flash_table), HybridSpec(),
+                   ClusterSpec(n_workers=3, hbm_budget_bytes=30e9,
+                               hedge=HedgePolicy()))
+    assert res.evictions > 100
+
+
+def test_checkpoint_mid_eviction_storm(flash_table):
+    # Controller checkpoint/restore dropped into the middle of an eviction
+    # storm: the save/restore round-trip must not perturb the trajectory.
+    res = _conform(_oversubscribe(flash_table), HybridSpec(),
+                   ClusterSpec(n_workers=3, hbm_budget_bytes=30e9,
+                               checkpoint_at_minute=60.0))
+    assert res.restored_mid_run
+    assert res.evictions > 100
+
+
+def test_screen_short_circuits_eviction_free_runs(azure_table, monkeypatch):
+    # Workers whose assigned bytes fit at once never enter the fixed-point
+    # loop: poison the replay and run eviction-free fleets through it.
+    from repro.serving import cluster_vector
+
+    def _boom(*args, **kwargs):
+        raise AssertionError(
+            "fixed-point eviction replay ran on an eviction-free fleet")
+
+    monkeypatch.setattr(cluster_vector, "_evict_worker", _boom)
+    # infinite budget: the screen skips Phase D entirely
+    _conform(azure_table, FixedSpec(keep_alive=10.0),
+             ClusterSpec(n_workers=5, hbm_budget_bytes=float("inf")))
+    # finite but sufficient: every worker passes the assigned-bytes sum test
+    run_cluster(azure_table, FixedSpec(keep_alive=10.0),
+                ClusterSpec(n_workers=5,
+                            hbm_budget_bytes=float(
+                                azure_table.weight_bytes.sum())),
+                engine="vector")
+
+
+def test_max_eviction_rounds_falls_back_to_scalar(flash_table):
+    table = _oversubscribe(flash_table)
+    cluster = ClusterSpec(n_workers=3, hbm_budget_bytes=30e9)
+    with pytest.warns(RuntimeWarning, match="engine='scalar'"):
+        res = run_cluster(table, FixedSpec(keep_alive=20.0), cluster,
+                          engine="vector", max_eviction_rounds=0)
+    sca = run_cluster(table, FixedSpec(keep_alive=20.0), cluster,
+                      engine="scalar")
+    _assert_results_equal(res, sca, err="max_eviction_rounds fallback")
+    assert res.evictions >= 1
+
+
+def test_single_image_over_budget_raises_in_both_engines():
+    table = AppTable.from_trace(_two_app_trace([[0.0], [1.0]]),
+                                exec_s=1.0, memory_mb=512.0,
+                                weight_bytes=np.array([20e9, 1e9], np.int64))
+    cluster = ClusterSpec(n_workers=1, hbm_budget_bytes=16e9)
+    for engine in ("vector", "scalar"):
+        with pytest.raises(ValueError, match="larger than the budget"):
+            run_cluster(table, NoUnloadSpec(), cluster, engine=engine)
 
 
 def test_eviction_screen_passes_on_interleaved_residency():

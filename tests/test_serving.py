@@ -118,6 +118,33 @@ def test_warmpool_tick_prewarms_fire_in_time_order():
     assert pool.stats.evictions == 1
 
 
+def test_warmpool_pinned_app_never_evicted():
+    """Regression: ``on_request`` used to pin executing apps only via
+    ``unload_at = inf`` — indistinguishable from never-unload apps — so a
+    concurrent pre-warm's budget pass could evict an app mid-request. The
+    explicit ``pinned`` flag excludes it; with nothing else evictable the
+    pool proceeds over budget and counts the overflow instead."""
+    reg = tiny_registry(n=2, weight_bytes=int(1e9))
+    pool = WarmPool(reg, FixedSpec(10.0), budget_bytes=1.5e9)
+    cold, _ = pool.on_request("app-000000", 0.0)   # executing: pinned
+    assert cold and pool.state["app-000000"].pinned
+    # a pre-warm for app 1 fires while app 0 is still mid-request
+    pool._st("app-000001").prewarm_at = 10.0
+    pool.tick(20.0)
+    st = pool.state["app-000000"]
+    assert st.loaded and st.pinned      # NOT evicted mid-request
+    assert pool.stats.evictions == 0
+    assert pool.stats.budget_overflows == 1
+    pool.on_request_end("app-000000", 30.0)
+    assert not pool.state["app-000000"].pinned
+
+
+def test_warmpool_single_image_over_budget_raises():
+    reg = tiny_registry(n=2, weight_bytes=int(4e9))
+    with pytest.raises(ValueError, match="larger than the budget"):
+        WarmPool(reg, FixedSpec(10.0), budget_bytes=2e9)
+
+
 def test_warmpool_state_roundtrip():
     reg = tiny_registry()
     pool = WarmPool(reg, HybridSpec(use_arima=False))
