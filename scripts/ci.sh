@@ -8,6 +8,10 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# Invariant linter first: stdlib-only (no jax needed), catches contract
+# violations (repro/analysis passes) in seconds before the test suite runs.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.analysis src
+
 python -c "import jax, numpy" 2>/dev/null || \
     python -m pip install "jax[cpu]" numpy
 python -m pip install -r requirements-dev.txt

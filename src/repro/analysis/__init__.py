@@ -1,0 +1,36 @@
+"""`repro.analysis` — AST-based invariant linter for this repository.
+
+The engines only reproduce the paper's hybrid-histogram policy bit-exactly
+because of cross-cutting contracts that no type checker sees:
+
+  * all decision math (percentiles, margins, warm/cold verdicts,
+    ``PCT_SCALE`` arithmetic) lives in :mod:`repro.core.policy_math`;
+  * Pallas kernel bodies never touch float64 (TPUs have none) and float32
+    engines never difference un-rebased absolute timestamps;
+  * ``lax.scan`` step bodies and jitted functions never host-sync traced
+    values (``float()``/``.item()``/``np.asarray``/python ``if``);
+  * trace generation and the simulators are seed-deterministic — no global
+    RNG or wall-clock reads;
+  * registered ``*Spec`` pytrees flatten every dataclass field;
+  * removed ``simulate*`` / ``Trace.synthesize`` entry points stay removed.
+
+This package mechanizes those conventions as a small static-analysis pass
+suite over the stdlib ``ast`` module (no third-party dependencies — the CI
+lint job runs without installing jax). Each contract is a :class:`Rule`
+producing :class:`Finding` records; false positives are silenced inline:
+
+    x = risky_thing()  # repro-lint: ignore[rule-name] -- why this is fine
+
+Run it as ``python -m repro.analysis [paths] [--json] [--changed]``; see
+``README.md`` ("Invariants & static analysis") for the rule catalogue.
+"""
+from .framework import (Finding, LintConfig, Module, Rule, Suppression,
+                        changed_files, dotted_name, parse_suppressions,
+                        render_human, render_json, run_paths, run_source)
+from .passes import ALL_RULES, rule_by_name
+
+__all__ = [
+    "ALL_RULES", "Finding", "LintConfig", "Module", "Rule", "Suppression",
+    "changed_files", "dotted_name", "parse_suppressions", "render_human",
+    "render_json", "rule_by_name", "run_paths", "run_source",
+]

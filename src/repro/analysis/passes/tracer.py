@@ -1,0 +1,100 @@
+"""Pass 3 — tracer leaks in scan bodies / jitted functions.
+
+``lax.scan`` step bodies and jitted functions are the simulator's hot
+path; a Python-level branch or host conversion on a traced value either
+raises a ``TracerBoolConversionError`` at trace time or — worse — silently
+moves work to the host and serializes the whole pipeline (``np.asarray``
+inside a step body synchronizes every step). Inside contexts discovered by
+:mod:`repro.analysis.traced` this pass flags:
+
+  * ``if``/``while`` whose condition reads a *traced* parameter (static
+    jit args are resolved from ``static_argnums``/``static_argnames`` and
+    exempt; so are shape/dtype/ndim/size probes and ``isinstance`` tests,
+    which are trace-time constants);
+  * ``float()`` / ``int()`` / ``bool()`` of a traced parameter;
+  * ``.item()`` / ``np.asarray`` / ``np.array`` / ``jax.device_get`` —
+    host syncs regardless of argument.
+
+The analysis is intraprocedural: helpers *called from* a traced context
+(e.g. the host/traced-polymorphic policy_math functions) are not entered.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from ..framework import Finding, LintConfig, Module, Rule, dotted_name
+from ..traced import find_traced_contexts
+
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+_PY_CASTS = {"float", "int", "bool"}
+_HOST_SYNC_CALLS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
+                    "jax.device_get", "device_get"}
+
+
+def _names_in(node: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _static_probe_names(node: ast.AST) -> Set[str]:
+    """Names only used under shape/ndim/dtype/size probes or isinstance —
+    trace-time constants, safe to branch on."""
+    exempt: Set[str] = set()
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr in _STATIC_ATTRS:
+            exempt |= _names_in(sub.value)
+        elif isinstance(sub, ast.Call) and \
+                dotted_name(sub.func) == "isinstance":
+            exempt |= _names_in(sub)
+    return exempt
+
+
+class TracerLeak(Rule):
+    name = "tracer-leak"
+    description = ("python control flow / host conversions on traced values "
+                   "inside scan bodies and jitted functions")
+
+    def check(self, module: Module, config: LintConfig) -> Iterator[Finding]:
+        for ctx in find_traced_contexts(module.tree):
+            traced = ctx.traced_params
+            body = ctx.func.body
+            nodes = body if isinstance(body, list) else [body]
+            for stmt in nodes:
+                for node in ast.walk(stmt):
+                    yield from self._check_node(module, node, traced,
+                                                ctx.kind)
+
+    def _check_node(self, module: Module, node: ast.AST,
+                    traced: Set[str], kind: str) -> Iterator[Finding]:
+        if isinstance(node, (ast.If, ast.While)):
+            hot = (_names_in(node.test) - _static_probe_names(node.test)) \
+                & traced
+            if hot:
+                kw = "while" if isinstance(node, ast.While) else "if"
+                yield self.finding(
+                    module, node,
+                    f"python '{kw}' on traced value(s) {sorted(hot)} inside "
+                    f"a {kind}: branch at trace time (host sync) — use "
+                    "jnp.where / lax.cond, or mark the argument static")
+        elif isinstance(node, ast.Call):
+            name = dotted_name(node.func)
+            if name in _PY_CASTS and node.args:
+                hot = _names_in(node.args[0]) & traced
+                if hot:
+                    yield self.finding(
+                        module, node,
+                        f"{name}() of traced value(s) {sorted(hot)} inside "
+                        f"a {kind}: forces a host sync — keep it as an "
+                        "array (astype) or compute it outside the traced "
+                        "region")
+            elif name in _HOST_SYNC_CALLS:
+                yield self.finding(
+                    module, node,
+                    f"{name}() inside a {kind}: device->host transfer "
+                    "serializes the scan — move result assembly outside "
+                    "the traced region")
+            elif isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "item" and not node.args:
+                yield self.finding(
+                    module, node,
+                    f".item() inside a {kind}: forces a host sync per step")

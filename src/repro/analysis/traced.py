@@ -1,0 +1,172 @@
+"""Traced-context discovery: which functions run under JAX tracing.
+
+Three syntactic sources, matching how this repo actually enters tracing:
+
+  * functions decorated with ``jax.jit`` / ``jit`` / ``partial(jax.jit,
+    static_argnums=...)`` (the ``functools.partial`` spelling too);
+  * functions (or lambdas, or ``partial(fn, ...)`` wrappers) passed as the
+    first argument of ``jax.lax.scan`` — scan step bodies are the hot path
+    every engine lives in;
+  * kernel bodies passed to ``pl.pallas_call`` (directly or via partial).
+
+For jitted functions the ``static_argnums`` / ``static_argnames`` are
+resolved to parameter names: a python ``if`` on a *static* argument is
+standard jit practice, not a tracer leak. Everything is intraprocedural —
+this is a linter, not an abstract interpreter — so helpers *called from*
+traced code are not visited (the single-source policy_math helpers keep
+their host/traced polymorphism without noise).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple, Union
+
+from .framework import dotted_name
+
+__all__ = ["TracedContext", "find_traced_contexts"]
+
+FuncNode = Union[ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda]
+
+_JIT_NAMES = {"jax.jit", "jit"}
+_SCAN_NAMES = {"jax.lax.scan", "lax.scan"}
+_PALLAS_NAMES = {"pl.pallas_call", "pallas.pallas_call",
+                 "pltpu.pallas_call"}
+_PARTIAL_NAMES = {"partial", "functools.partial"}
+
+
+@dataclasses.dataclass
+class TracedContext:
+    func: FuncNode
+    kind: str                    # "jit" | "scan-body" | "pallas-kernel"
+    static_params: Set[str]      # params known static under jit
+
+    @property
+    def params(self) -> List[str]:
+        a = self.func.args
+        names = [p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+        if a.vararg:
+            names.append(a.vararg.arg)
+        if a.kwarg:
+            names.append(a.kwarg.arg)
+        return names
+
+    @property
+    def traced_params(self) -> Set[str]:
+        return set(self.params) - self.static_params
+
+
+def _param_names_positional(func: FuncNode) -> List[str]:
+    a = func.args
+    return [p.arg for p in (*a.posonlyargs, *a.args)]
+
+
+def _static_from_jit_call(call: ast.Call, func: FuncNode) -> Set[str]:
+    """Resolve static_argnums/static_argnames of a ``partial(jax.jit, ...)``
+    or ``jax.jit(...)`` decorator call to parameter names."""
+    statics: Set[str] = set()
+    pos = _param_names_positional(func)
+    for kw in call.keywords:
+        if kw.arg == "static_argnums":
+            for idx in _int_elements(kw.value):
+                if 0 <= idx < len(pos):
+                    statics.add(pos[idx])
+        elif kw.arg == "static_argnames":
+            statics |= set(_str_elements(kw.value))
+    return statics
+
+
+def _int_elements(node: ast.AST) -> List[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for el in node.elts:
+            if isinstance(el, ast.Constant) and isinstance(el.value, int):
+                out.append(el.value)
+        return out
+    return []
+
+
+def _str_elements(node: ast.AST) -> List[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [el.value for el in node.elts
+                if isinstance(el, ast.Constant) and isinstance(el.value, str)]
+    return []
+
+
+def _is_jit_decorator(dec: ast.AST, func: FuncNode
+                      ) -> Optional[Set[str]]:
+    """None if not a jit decorator, else the set of static param names."""
+    if dotted_name(dec) in _JIT_NAMES:
+        return set()
+    if isinstance(dec, ast.Call):
+        name = dotted_name(dec.func)
+        if name in _JIT_NAMES:
+            return _static_from_jit_call(dec, func)
+        if name in _PARTIAL_NAMES and dec.args:
+            if dotted_name(dec.args[0]) in _JIT_NAMES:
+                return _static_from_jit_call(dec, func)
+    return None
+
+
+def _callable_target(node: ast.AST,
+                     by_name: Dict[str, FuncNode]) -> Optional[FuncNode]:
+    """Resolve a callable expression to a local function/lambda node."""
+    if isinstance(node, ast.Lambda):
+        return node
+    name = dotted_name(node)
+    if name is not None:
+        return by_name.get(name)
+    if isinstance(node, ast.Call) and \
+            dotted_name(node.func) in _PARTIAL_NAMES and node.args:
+        return _callable_target(node.args[0], by_name)
+    return None
+
+
+def find_traced_contexts(tree: ast.Module) -> List[TracedContext]:
+    by_name: Dict[str, FuncNode] = {}
+    funcs: List[FuncNode] = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            by_name.setdefault(node.name, node)
+            funcs.append(node)
+        elif isinstance(node, ast.Assign) and isinstance(node.value,
+                                                         ast.Lambda):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    by_name.setdefault(tgt.id, node.value)
+
+    seen: Dict[int, TracedContext] = {}
+
+    def add(func: Optional[FuncNode], kind: str,
+            statics: Optional[Set[str]] = None) -> None:
+        if func is None or id(func) in seen:
+            return
+        seen[id(func)] = TracedContext(func=func, kind=kind,
+                                       static_params=statics or set())
+
+    for func in funcs:
+        if isinstance(func, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in func.decorator_list:
+                statics = _is_jit_decorator(dec, func)
+                if statics is not None:
+                    add(func, "jit", statics)
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted_name(node.func)
+        if name in _SCAN_NAMES and node.args:
+            add(_callable_target(node.args[0], by_name), "scan-body")
+        elif name in _PALLAS_NAMES and node.args:
+            add(_callable_target(node.args[0], by_name), "pallas-kernel")
+        elif name in _JIT_NAMES and node.args:
+            target = _callable_target(node.args[0], by_name)
+            if target is not None:
+                statics = _static_from_jit_call(node, target)
+                add(target, "jit", statics)
+
+    return list(seen.values())

@@ -186,8 +186,7 @@ def find_first_ge(cum: jnp.ndarray, threshold: jnp.ndarray) -> jnp.ndarray:
     O(n_bins) masked reduction. Returns n_bins when no bin qualifies.
     """
     return policy_math.first_bin_ge_scaled(
-        cum, threshold.astype(jnp.int32) * jnp.int32(policy_math.PCT_SCALE),
-        gather=True)
+        cum, policy_math.scale_raw_threshold(threshold), gather=True)
 
 
 # --- Scalar host-side twin ---------------------------------------------------

@@ -84,7 +84,9 @@ import numpy as np
 
 __all__ = [
     "PCT_SCALE",
+    "MAX_SCALED_COUNT",
     "pct_numer",
+    "scale_raw_threshold",
     "margin_factors",
     "window_bounds",
     "warm_from_bounds",
@@ -118,6 +120,11 @@ __all__ = [
 # ``cum*PCT_SCALE >= total*pct_numer`` — no float rounding, so every engine
 # derives the same percentile bin in any dtype.
 PCT_SCALE = 10_000
+
+#: Largest per-app cumulative count whose scaled compare (``cum *
+#: PCT_SCALE``) still fits int32. Engines reject wider scans up front
+#: (``simulator._check_scan_width``) instead of overflowing silently.
+MAX_SCALED_COUNT = (2 ** 31 - 1) // PCT_SCALE
 
 
 def _ns(*xs):
@@ -364,6 +371,18 @@ def first_bin_ge_scaled(cum, thr_scaled, *, gather: bool):
         hi = jnp.where(ge, mid, hi)
         lo = jnp.where(ge, lo, jnp.minimum(mid + 1, hi))
     return hi
+
+
+def scale_raw_threshold(threshold):
+    """Lift a raw *count* threshold into the scaled domain of
+    :func:`first_bin_ge_scaled`: ``threshold * PCT_SCALE``, in the int32 the
+    scaled compare runs in (callers guard widths via
+    :data:`MAX_SCALED_COUNT`, so this never overflows).
+    """
+    xp = _ns(threshold)
+    if xp is np:
+        return np.int64(threshold) * PCT_SCALE
+    return threshold.astype(jnp.int32) * jnp.int32(PCT_SCALE)
 
 
 def first_bin_ge_scaled_grouped(gcum, group, thr_scaled):

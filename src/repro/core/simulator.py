@@ -263,10 +263,10 @@ def _check_scan_width(width: int) -> None:
     """The scaled percentile compare (policy_math) multiplies cumulative
     counts — bounded by the scan width — by PCT_SCALE in int32; guard every
     engine identically rather than overflowing silently."""
-    if width * policy_math.PCT_SCALE >= 2 ** 31:
+    if width > policy_math.MAX_SCALED_COUNT:
         raise ValueError(
             f"bucket scan width {width} overflows the int32 scaled "
-            f"percentile compare (max {2 ** 31 // policy_math.PCT_SCALE - 1} "
+            f"percentile compare (max {policy_math.MAX_SCALED_COUNT} "
             f"events per app)")
 
 

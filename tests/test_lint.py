@@ -1,0 +1,457 @@
+"""Tests for the invariant linter (``repro.analysis``).
+
+Three layers:
+
+  * per-rule fixtures — every pass gets at least one known-bad snippet it
+    must flag and a known-good twin it must not (the good twin is the
+    sanctioned spelling of the same operation);
+  * framework semantics — suppressions (inline / standalone / reasonless /
+    unknown rule), relkey scoping, ``--json`` schema v1 stability,
+    ``--changed`` plumbing;
+  * dogfooding — the shipped ``src/`` tree is clean (exit 0), which is
+    exactly what the CI lint job asserts.
+
+The fixtures lint in-memory sources against *virtual* paths (e.g.
+``src/repro/kernels/bad.py``) — scope rules key off the path's
+``repro``-relative tail, so nothing touches disk.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import (ALL_RULES, LintConfig, parse_suppressions,
+                            render_json, rule_by_name, run_paths, run_source)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+CORE = "src/repro/core/x.py"          # determinism scope, non-kernel
+KERNEL = "src/repro/kernels/x.py"     # kernel + determinism scope
+OUTSIDE = "src/repro/bench/x.py"      # outside determinism scope
+
+
+def lint(source, path=CORE, rules=None, config=None):
+    findings, _ = run_source(source, path, rules or ALL_RULES, config)
+    return findings
+
+
+def rules_of(findings):
+    return [f.rule for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# Pass 1: single-source decision math
+# ---------------------------------------------------------------------------
+
+
+class TestDecisionMath:
+    RULE = "single-source-decision-math"
+
+    def test_pct_scale_arithmetic_flagged(self):
+        bad = "thr = total * policy_math.PCT_SCALE\n"
+        assert rules_of(lint(bad)) == [self.RULE]
+
+    def test_pct_scale_through_dtype_cast_flagged(self):
+        # the histogram.py bug shape this PR fixed: the cast does not
+        # launder the arithmetic
+        bad = "thr = t.astype(jnp.int32) * jnp.int32(policy_math.PCT_SCALE)\n"
+        assert rules_of(lint(bad)) == [self.RULE]
+
+    def test_pct_scale_opaque_use_ok(self):
+        good = ("from repro.core.policy_math import PCT_SCALE\n"
+                "check(width, PCT_SCALE)\n"
+                "limit = policy_math.MAX_SCALED_COUNT\n")
+        assert lint(good) == []
+
+    def test_policy_math_itself_exempt(self):
+        src = "thr = total * PCT_SCALE\n"
+        assert lint(src, path="src/repro/core/policy_math.py") == []
+
+    def test_inline_margin_flagged_and_helper_ok(self):
+        bad = "lo = it * (1.0 - margin)\n"
+        good = "lo, hi = policy_math.margin_factors(margin)\n"
+        assert rules_of(lint(bad)) == [self.RULE]
+        assert lint(good) == []
+
+    def test_inline_warm_verdict_flagged(self):
+        bad = "warm = (it >= load_at) & (it <= unload_at)\n"
+        assert rules_of(lint(bad)) == [self.RULE]
+        reversed_bad = "warm = load_at <= it and it <= unload_at\n"
+        assert rules_of(lint(reversed_bad)) == [self.RULE]
+
+    def test_warm_helper_ok(self):
+        good = "warm = policy_math.warm_from_bounds(it, load_at, unload_at)\n"
+        assert lint(good) == []
+
+
+# ---------------------------------------------------------------------------
+# Pass 2: x64 discipline
+# ---------------------------------------------------------------------------
+
+
+class TestX64:
+    RULE = "x64-discipline"
+
+    def test_f64_in_kernel_flagged(self):
+        bad = "acc = jnp.zeros(8, jnp.float64)\n"
+        assert rules_of(lint(bad, path=KERNEL)) == [self.RULE]
+
+    def test_f64_string_in_kernel_flagged(self):
+        bad = "x = y.astype('float64')\n"
+        assert self.RULE in rules_of(lint(bad, path=KERNEL))
+
+    def test_enable_x64_in_kernel_flagged(self):
+        bad = "jax.config.update('jax_enable_x64', True)\n"
+        assert rules_of(lint(bad, path=KERNEL)) == [self.RULE]
+
+    def test_f64_outside_kernels_ok(self):
+        good = "oracle = times.astype(np.float64)\n"
+        assert lint(good, path=CORE) == []
+
+    def test_unrebased_time_cast_flagged_everywhere(self):
+        bad = "def f(times):\n    return times.astype(np.float32)\n"
+        assert rules_of(lint(bad, path=CORE)) == [self.RULE]
+        bad2 = "def f(t_abs):\n    return np.asarray(t_abs, np.float32)\n"
+        assert rules_of(lint(bad2, path=CORE)) == [self.RULE]
+
+    def test_rebasing_function_exempt(self):
+        good = ("def f(times):\n"
+                "    t = _rebase_chunk(times)\n"
+                "    return t.astype(np.float32)\n")
+        assert lint(good, path=CORE) == []
+
+    def test_non_time_cast_ok(self):
+        good = "def f(counts):\n    return counts.astype(np.float32)\n"
+        assert lint(good, path=CORE) == []
+
+
+# ---------------------------------------------------------------------------
+# Pass 3: tracer leaks
+# ---------------------------------------------------------------------------
+
+
+class TestTracerLeak:
+    RULE = "tracer-leak"
+
+    def test_if_on_traced_param_flagged(self):
+        bad = ("@jax.jit\n"
+               "def f(x):\n"
+               "    if x > 0:\n"
+               "        return x\n"
+               "    return -x\n")
+        assert rules_of(lint(bad)) == [self.RULE]
+
+    def test_if_on_static_argnum_ok(self):
+        # the repo's _fixed_scan shape: static_argnums resolves positions
+        # to names, so branching on the static is standard jit practice
+        good = ("@partial(jax.jit, static_argnums=(1,))\n"
+                "def f(x, include_trailing):\n"
+                "    if include_trailing:\n"
+                "        return x + 1\n"
+                "    return x\n")
+        assert lint(good) == []
+
+    def test_shape_probe_ok(self):
+        good = ("@jax.jit\n"
+                "def f(x):\n"
+                "    if x.ndim == 0:\n"
+                "        x = x[None]\n"
+                "    return x\n")
+        assert lint(good) == []
+
+    def test_scan_body_host_sync_flagged(self):
+        bad = ("def body(carry, t):\n"
+               "    v = float(t)\n"
+               "    return carry + v, np.asarray(carry)\n"
+               "out = jax.lax.scan(body, 0.0, ts)\n")
+        got = rules_of(lint(bad))
+        assert got.count(self.RULE) == 2
+
+    def test_item_in_scan_body_flagged(self):
+        bad = ("def body(carry, t):\n"
+               "    return carry, t.item()\n"
+               "out = jax.lax.scan(body, 0, ts)\n")
+        assert rules_of(lint(bad)) == [self.RULE]
+
+    def test_clean_scan_body_ok(self):
+        good = ("def body(carry, t):\n"
+                "    return carry + t, jnp.where(t > 0, t, 0)\n"
+                "out = jax.lax.scan(body, 0.0, ts)\n")
+        assert lint(good) == []
+
+    def test_host_code_outside_traced_context_ok(self):
+        # while/float on host values is fine — only traced contexts count
+        good = ("def host(xs):\n"
+                "    while len(xs) > 0:\n"
+                "        xs = xs[1:]\n"
+                "    return float(np.asarray(xs).sum())\n")
+        assert lint(good) == []
+
+
+# ---------------------------------------------------------------------------
+# Pass 4: nondeterminism
+# ---------------------------------------------------------------------------
+
+
+class TestNondeterminism:
+    RULE = "nondeterminism"
+
+    def test_global_np_random_flagged(self):
+        bad = "noise = np.random.rand(8)\n"
+        assert rules_of(lint(bad)) == [self.RULE]
+
+    def test_seeded_generator_ok(self):
+        good = ("rng = np.random.default_rng(seed)\n"
+                "noise = rng.random(8)\n")
+        assert lint(good) == []
+
+    def test_stdlib_random_flagged(self):
+        bad = "import random\nx = random.random()\n"
+        assert rules_of(lint(bad)) == [self.RULE]
+
+    def test_wall_clock_flagged(self):
+        bad = "t = time.time()\n"
+        assert rules_of(lint(bad)) == [self.RULE]
+
+    def test_out_of_scope_ok(self):
+        assert lint("t = time.time()\n", path=OUTSIDE) == []
+        assert lint("x = np.random.rand(3)\n", path=OUTSIDE) == []
+
+
+# ---------------------------------------------------------------------------
+# Pass 5: pytree completeness
+# ---------------------------------------------------------------------------
+
+_DATACLASS = ("@dataclasses.dataclass(frozen=True)\n"
+              "class FooSpec:\n"
+              "    keep_alive: float\n"
+              "    label: str\n")
+
+
+class TestPytree:
+    RULE = "pytree-completeness"
+
+    def test_meta_typo_flagged(self):
+        bad = _DATACLASS + "_register_pytree(FooSpec, meta=('labell',))\n"
+        assert rules_of(lint(bad)) == [self.RULE]
+
+    def test_meta_ok(self):
+        good = _DATACLASS + "_register_pytree(FooSpec, meta=('label',))\n"
+        assert lint(good) == []
+
+    def test_raw_flatten_dropping_field_flagged(self):
+        bad = (_DATACLASS +
+               "def _flat(s):\n"
+               "    return (s.keep_alive,), None\n"
+               "def _unflat(aux, kids):\n"
+               "    return FooSpec(kids[0], 'x')\n"
+               "jax.tree_util.register_pytree_node(FooSpec, _flat, _unflat)\n")
+        got = rules_of(lint(bad))
+        assert self.RULE in got
+        assert "drops field(s) ['label']" in \
+            next(f for f in lint(bad) if f.rule == self.RULE).message
+
+    def test_raw_flatten_complete_ok(self):
+        good = (_DATACLASS +
+                "def _flat(s):\n"
+                "    return (s.keep_alive,), s.label\n"
+                "def _unflat(aux, kids):\n"
+                "    return FooSpec(kids[0], aux)\n"
+                "jax.tree_util.register_pytree_node(FooSpec, _flat, "
+                "_unflat)\n")
+        assert lint(good) == []
+
+    def test_dataclasses_fields_counts_as_full_coverage(self):
+        good = (_DATACLASS +
+                "def _flat(s):\n"
+                "    vals = [getattr(s, f.name) "
+                "for f in dataclasses.fields(s)]\n"
+                "    return tuple(vals), None\n"
+                "jax.tree_util.register_pytree_node(FooSpec, _flat, None)\n")
+        # the lambda/None unflatten is irrelevant; flatten is what's audited
+        bad_free = [f for f in lint(good) if f.rule == self.RULE]
+        assert bad_free == []
+
+
+# ---------------------------------------------------------------------------
+# Pass 6: deprecation hygiene
+# ---------------------------------------------------------------------------
+
+
+class TestDeprecations:
+    RULE = "deprecation-hygiene"
+
+    def test_removed_call_flagged_with_replacement(self):
+        bad = "res = simulator.simulate_hybrid_batch(trace, 60)\n"
+        found = lint(bad)
+        assert rules_of(found) == [self.RULE]
+        assert "experiment.run" in found[0].message
+
+    def test_removed_import_flagged(self):
+        bad = "from repro.core.simulator import simulate\n"
+        assert rules_of(lint(bad)) == [self.RULE]
+
+    def test_synthesize_attr_flagged(self):
+        bad = "trace = Trace.synthesize(n_apps=8)\n"
+        assert rules_of(lint(bad)) == [self.RULE]
+
+    def test_local_definition_exempt(self):
+        good = ("def simulate(trace):\n"
+                "    return trace\n"
+                "simulate(t)\n")
+        assert lint(good) == []
+
+    def test_new_api_ok(self):
+        good = "res = experiment.run(trace, FixedSpec(keep_alive=60.0))\n"
+        assert lint(good) == []
+
+
+# ---------------------------------------------------------------------------
+# Framework semantics
+# ---------------------------------------------------------------------------
+
+
+class TestSuppressions:
+    def test_inline_suppression_with_reason(self):
+        src = ("t = time.time()  "
+               "# repro-lint: ignore[nondeterminism] -- wall clock is the "
+               "measurement\n")
+        findings, suppressed = run_source(src, CORE, ALL_RULES)
+        assert findings == []
+        assert suppressed == 1
+
+    def test_standalone_suppression_covers_next_code_line(self):
+        src = ("# repro-lint: ignore[nondeterminism] -- measurement, with a\n"
+               "# continuation line of reasoning\n"
+               "t = time.time()\n")
+        findings, suppressed = run_source(src, CORE, ALL_RULES)
+        assert findings == []
+        assert suppressed == 1
+
+    def test_reasonless_suppression_does_not_suppress(self):
+        src = "t = time.time()  # repro-lint: ignore[nondeterminism]\n"
+        findings, suppressed = run_source(src, CORE, ALL_RULES)
+        assert suppressed == 0
+        assert sorted(rules_of(findings)) == ["lint-directive",
+                                              "nondeterminism"]
+
+    def test_unknown_rule_in_directive_reported(self):
+        src = "x = 1  # repro-lint: ignore[not-a-rule] -- because\n"
+        findings, _ = run_source(src, CORE, ALL_RULES)
+        assert rules_of(findings) == ["lint-directive"]
+
+    def test_wrong_rule_does_not_suppress(self):
+        src = ("t = time.time()  "
+               "# repro-lint: ignore[tracer-leak] -- wrong rule\n")
+        findings, suppressed = run_source(src, CORE, ALL_RULES)
+        assert suppressed == 0
+        assert "nondeterminism" in rules_of(findings)
+
+    def test_directive_in_docstring_is_not_a_directive(self):
+        src = ('"""Docs: write # repro-lint: ignore[rule] -- reason."""\n'
+               "x = 1\n")
+        assert parse_suppressions(src) == []
+        findings, _ = run_source(src, CORE, ALL_RULES)
+        assert findings == []
+
+
+class TestFramework:
+    def test_syntax_error_becomes_parse_finding(self):
+        findings, _ = run_source("def f(:\n", CORE, ALL_RULES)
+        assert rules_of(findings) == ["parse-error"]
+
+    def test_rule_registry(self):
+        assert len(ALL_RULES) == 6
+        assert {r.name for r in ALL_RULES} == {
+            "single-source-decision-math", "x64-discipline", "tracer-leak",
+            "nondeterminism", "pytree-completeness", "deprecation-hygiene"}
+        with pytest.raises(KeyError):
+            rule_by_name("nope")
+
+    def test_relkey_scoping_is_root_invariant(self):
+        bad = "x = jnp.float64(0)\n"
+        for root in ("src/repro/kernels/k.py", "repro/kernels/k.py",
+                     "/abs/path/src/repro/kernels/k.py"):
+            assert rules_of(lint(bad, path=root)) == ["x64-discipline"]
+
+    def test_config_overrides(self):
+        cfg = LintConfig(determinism_scopes=())
+        assert lint("t = time.time()\n", config=cfg) == []
+
+    def test_json_schema_v1(self):
+        report = run_paths(
+            [os.path.join(SRC, "repro", "core", "policy_math.py")],
+            ALL_RULES)
+        payload = json.loads(render_json(report))
+        assert payload["version"] == 1
+        assert set(payload.keys()) == {"version", "counts", "findings"}
+        assert set(payload["counts"]) == {"files", "findings", "suppressed"}
+        for f in payload["findings"]:
+            assert set(f) == {"file", "line", "col", "rule", "message"}
+
+    def test_findings_sorted_and_stable(self):
+        src = "t = time.time()\nu = time.time()\n"
+        findings, _ = run_source(src, CORE, ALL_RULES)
+        assert [f.line for f in findings] == sorted(f.line for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# Dogfood: the shipped tree is clean, via the same entry CI uses
+# ---------------------------------------------------------------------------
+
+
+class TestDogfood:
+    def test_src_tree_is_clean(self):
+        report = run_paths([SRC], ALL_RULES)
+        msgs = "\n".join(f.render() for f in report["findings"])
+        assert report["counts"]["findings"] == 0, f"lint findings:\n{msgs}"
+        assert report["counts"]["files"] >= 40
+
+    def test_cli_exit_codes(self):
+        env = dict(os.environ, PYTHONPATH=SRC)
+        clean = subprocess.run(
+            [sys.executable, "-m", "repro.analysis", SRC],
+            capture_output=True, text=True, env=env, cwd=REPO)
+        assert clean.returncode == 0, clean.stdout + clean.stderr
+        usage = subprocess.run(
+            [sys.executable, "-m", "repro.analysis", "--select", "nope", SRC],
+            capture_output=True, text=True, env=env, cwd=REPO)
+        assert usage.returncode == 2
+
+    def test_cli_findings_exit_one(self, tmp_path):
+        bad = tmp_path / "repro" / "core" / "bad.py"
+        bad.parent.mkdir(parents=True)
+        bad.write_text("t = time.time()\n")
+        env = dict(os.environ, PYTHONPATH=SRC)
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.analysis", str(tmp_path)],
+            capture_output=True, text=True, env=env, cwd=REPO)
+        assert proc.returncode == 1
+        assert "nondeterminism" in proc.stdout
+
+    def test_changed_mode(self, tmp_path):
+        git = ["git", "-C", str(tmp_path)]
+        try:
+            subprocess.run(git + ["init", "-q"], check=True,
+                           capture_output=True)
+        except (OSError, subprocess.CalledProcessError):
+            pytest.skip("git unavailable")
+        subprocess.run(git + ["config", "user.email", "t@t"], check=True)
+        subprocess.run(git + ["config", "user.name", "t"], check=True)
+        pkg = tmp_path / "repro" / "core"
+        pkg.mkdir(parents=True)
+        (pkg / "clean.py").write_text("x = 1\n")
+        subprocess.run(git + ["add", "-A"], check=True)
+        subprocess.run(git + ["commit", "-qm", "seed"], check=True,
+                       capture_output=True)
+        (pkg / "bad.py").write_text("t = time.time()\n")  # untracked
+        env = dict(os.environ, PYTHONPATH=SRC)
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.analysis", "--changed", "repro"],
+            capture_output=True, text=True, env=env, cwd=str(tmp_path))
+        assert proc.returncode == 1, proc.stdout + proc.stderr
+        assert "bad.py" in proc.stdout
+        assert "clean.py" not in proc.stdout

@@ -1,0 +1,107 @@
+"""Pytree-registration audit: no spec field is silently dropped.
+
+The complement of the static ``pytree-completeness`` lint pass: for every
+spec dataclass that rides through ``jax.tree_util`` (vmapped policy grids,
+``tree_map`` over scenarios) we build an instance with EVERY field
+perturbed away from its default, flatten/unflatten it, and require exact
+equality. A field registered in neither the children nor the aux_data
+comes back as its default and fails here by construction.
+
+Unregistered specs (ClusterSpec, EngineOptions, HedgePolicy) are plain
+tree *leaves* today — the same roundtrip documents that status: if someone
+registers them later with an incomplete flatten, this test is what breaks.
+"""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.core.experiment import (EngineOptions, FixedSpec, HybridSpec,
+                                   NoUnloadSpec)
+from repro.core.workload_spec import Cohort, WorkloadSpec
+from repro.runtime.straggler import HedgePolicy
+from repro.serving.cluster_vector import ClusterSpec
+
+PERTURBED_COHORT = Cohort(
+    name="hot", weight=2.5, rate_log10_min=0.5, rate_log10_max=3.5,
+    rate_scale=2.0, pattern_probs=(0.25, 0.25, 0.5),
+    trigger_probs=(1.0, 0.0))
+
+# Every field explicitly non-default: the roundtrip must preserve all of
+# them, so a flatten that forgets one cannot pass.
+PERTURBED = [
+    FixedSpec(keep_alive=33.0, label="fx"),
+    NoUnloadSpec(label="nu"),
+    HybridSpec(bin_minutes=2.0, range_minutes=480.0, head_percentile=10.0,
+               tail_percentile=95.0, margin=0.2, cv_threshold=1.5,
+               min_samples=9, oob_fraction_threshold=0.25,
+               arima_min_samples=7, arima_margin=0.3, use_arima=False,
+               label="hy"),
+    PERTURBED_COHORT,
+    WorkloadSpec(n_apps=7, days=2.5, seed=9, cohorts=(PERTURBED_COHORT,),
+                 max_events=17, min_events=1, diurnal_amplitude=0.1,
+                 weekend_factor=0.5, flash_start=10.0, flash_duration=30.0,
+                 flash_factor=2.0, generator="uniform", label="wl"),
+    ClusterSpec(n_workers=4, hbm_budget_bytes=1e9, balancing="hash",
+                hedge=HedgePolicy(straggler_prob=0.5, straggler_factor=2.0,
+                                  hedge_after_factor=3.0, enabled=False),
+                checkpoint_at_minute=45.0, label="cl"),
+    EngineOptions(include_trailing=False, app_chunk=3, tile_apps=128,
+                  interpret=True, max_eviction_rounds=2),
+]
+
+
+def _field_items(obj):
+    return {f.name: getattr(obj, f.name) for f in dataclasses.fields(obj)}
+
+
+@pytest.mark.parametrize("spec", PERTURBED,
+                         ids=lambda s: type(s).__name__)
+def test_roundtrip_preserves_every_field(spec):
+    defaults = type(spec)()
+    perturbed = _field_items(spec)
+    # the fixture itself must perturb everything, or the test proves nothing
+    for name, value in _field_items(defaults).items():
+        assert perturbed[name] != value, \
+            f"fixture leaves {type(spec).__name__}.{name} at its default"
+    leaves, treedef = jax.tree_util.tree_flatten(spec)
+    restored = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert type(restored) is type(spec)
+    for name, value in perturbed.items():
+        assert getattr(restored, name) == value, \
+            f"{type(spec).__name__}.{name} lost in flatten/unflatten"
+
+
+@pytest.mark.parametrize("spec_cls,meta_fields", [
+    (FixedSpec, {"label"}),
+    (NoUnloadSpec, {"label"}),
+    (HybridSpec, {"use_arima", "label"}),
+    (Cohort, {"name", "pattern_probs", "trigger_probs"}),
+    (WorkloadSpec, {"generator", "label", "max_events", "min_events",
+                    "n_apps", "seed"}),
+])
+def test_registered_specs_split_children_vs_aux(spec_cls, meta_fields):
+    """Registered specs decompose; meta fields survive as aux_data (they
+    must NOT appear among the mapped leaves) and data fields are leaves."""
+    # flatten the PERTURBED instance: None-valued data fields (e.g. default
+    # flash_start) are empty subtrees, not leaves, and would skew the count
+    spec = next(s for s in PERTURBED if type(s) is spec_cls)
+    leaves, treedef = jax.tree_util.tree_flatten(spec)
+    n_data = len(dataclasses.fields(spec_cls)) - len(meta_fields)
+    if spec_cls is WorkloadSpec:
+        # cohorts is itself a registered pytree: its data fields inline
+        cohort_data = len(dataclasses.fields(Cohort)) - 3
+        n_data = n_data - 1 + cohort_data
+    assert len(leaves) == n_data
+    doubled = jax.tree_util.tree_unflatten(treedef, [v * 2 for v in leaves])
+    for name in meta_fields:
+        assert getattr(doubled, name) == getattr(spec, name), \
+            f"meta field {name} should ride aux_data untouched by tree_map"
+
+
+@pytest.mark.parametrize("leaf_cls", [ClusterSpec, EngineOptions,
+                                      HedgePolicy])
+def test_unregistered_specs_are_leaves(leaf_cls):
+    obj = leaf_cls()
+    leaves, _ = jax.tree_util.tree_flatten(obj)
+    assert leaves == [obj]
