@@ -5,7 +5,12 @@ Paper: 835.7 µs per invocation in the Scala controller. Ours:
   * batched-JAX fleet update (all apps in one vectorized op);
   * the fused hybrid simulator engine (incremental cumulative-count state,
     chunked over apps) vs the pre-PR batched engine at 100k apps, and a
-    ~1M-app synthetic run through the chunked driver.
+    ~1M-app synthetic run through the chunked driver;
+  * the S=1 sweep-generalized engine (what ``run()`` executes) vs a scan
+    of the dedicated single-config step ``fused_hybrid_step_math`` over
+    the same bucketed chunks — the carried-windows sweep step must hold
+    parity with the pre-sweep dedicated engine it replaced
+    (``fused_vs_dedicated_step_ratio`` ~ 1.0).
 
 Results are also recorded to ``BENCH_policy_overhead.json`` (repo root) so
 the step-throughput gain of the fused engine is tracked across PRs.
@@ -17,11 +22,13 @@ import os
 import platform
 import sys
 import time
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import policy_math
 from repro.core.experiment import HybridSpec, run as run_config
 from repro.core.policy import HybridConfig, HybridHistogramPolicy
 from repro.core.workload import Trace
@@ -42,6 +49,47 @@ def _app_steps(trace: Trace) -> int:
     from repro.core.simulator import _buckets
     times, counts = trace.to_padded()
     return sum(len(sel) * sub.shape[1] for sel, sub in _buckets(times, counts))
+
+
+@partial(jax.jit, static_argnums=(1,))
+def _dedicated_scan(times, cfg: "policy_math.HybridStepConfig"):
+    """The pre-sweep dedicated engine's inner loop: scan the single-config
+    fused step (full per-app histogram carry, per-step decide) over one
+    bucket's time columns. The A/B baseline for the S=1 sweep engine."""
+    n = times.shape[0]
+    dt = times.dtype
+    init = (
+        jnp.full((n,), -jnp.inf, dt),                        # prev time
+        jnp.zeros((n, cfg.n_bins), jnp.int32),               # cum histogram
+        jnp.zeros((n,), jnp.int32),                          # oob count
+        jnp.zeros((n,), dt),                                 # Welford sum
+        jnp.zeros((n,), dt),                                 # Welford sum sq
+        jnp.zeros((n,), dt),                                 # load bound
+        jnp.full((n,), jnp.asarray(cfg.standard_keep, dt)),  # unload bound
+        jnp.zeros((n,), jnp.int32),                          # cold count
+        jnp.zeros((n,), dt),                                 # waste
+    )
+
+    def body(carry, t_col):
+        return policy_math.fused_hybrid_step_math(
+            t_col, *carry, cfg=cfg, gather=True), None
+
+    final, _ = jax.lax.scan(body, init, times.T)
+    return final[7], final[8]
+
+
+def _run_dedicated(trace: Trace, spec: HybridSpec):
+    """Drive ``_dedicated_scan`` over the same event-count buckets the
+    fused engine scans, accumulating host-side like the engines do."""
+    from repro.core.simulator import _buckets, _step_config_for, enable_x64
+    cfg = _step_config_for(spec.to_config())
+    times, counts = trace.to_padded()
+    cold = np.zeros(times.shape[0], np.int64)
+    with enable_x64():
+        for sel, sub in _buckets(times, counts):
+            c, _ = _dedicated_scan(jnp.asarray(sub, jnp.float64), cfg)
+            cold[sel] = np.asarray(c)
+    return cold
 
 
 def _time(fn, repeats=1):
@@ -122,6 +170,26 @@ def run(n_apps_compare: int = 100_000, n_apps_scale: int = 1_000_000,
         "reference_app_steps_per_s": ref_tput,
         "fused_app_steps_per_s": fused_tput,
         "fused_over_reference_speedup": speedup,
+    }
+
+    # ---- S=1 parity: sweep-generalized engine vs the dedicated step --------
+    # run() executes the S=1 sweep scan (carried residency bounds, shared
+    # group state); the dedicated scan is what the engine looked like before
+    # the config axis existed. The carried-windows step must not tax the
+    # single-config case — the ratio is the regression guard.
+    res_fused = run_config(trace_c, spec, engine="fused")
+    np.testing.assert_array_equal(res_fused.cold, _run_dedicated(trace_c, spec))
+    t_dedicated = _time(lambda: _run_dedicated(trace_c, spec))
+    ratio = t_fused / t_dedicated
+    rows.append((f"fused_vs_dedicated_step_ratio_{n_apps_compare}apps",
+                 ratio, ""))
+    record["s1_parity"] = {
+        "note": ("t_fused / t_dedicated for the single-config run; ~1.0 "
+                 "means the sweep generalization costs the S=1 case "
+                 "nothing (cold counts asserted equal first)"),
+        "dedicated_seconds": t_dedicated,
+        "fused_seconds": t_fused,
+        "fused_vs_dedicated_step_ratio": ratio,
     }
 
     # ---- ~1M-app synthetic trace through the chunked fused driver ----------

@@ -23,7 +23,7 @@ def main() -> None:
 
     from . import (cluster_sim, fig_cluster, fig_exec_mem, fig_policy,
                    fig_workload, kernel_bench, policy_overhead, policy_sweep,
-                   roofline, trace_gen)
+                   roofline, scaleout, trace_gen)
     modules = {
         "fig_workload": lambda: fig_workload.run(),
         "fig_exec_mem": lambda: fig_exec_mem.run(),
@@ -32,6 +32,7 @@ def main() -> None:
         "cluster_sim": lambda: cluster_sim.run(),
         "policy_overhead": lambda: policy_overhead.run(),
         "policy_sweep": lambda: policy_sweep.run(),
+        "scaleout": lambda: scaleout.run(),
         "trace_gen": lambda: trace_gen.run(),
         "kernel_bench": lambda: kernel_bench.run(),
         "roofline": lambda: roofline.run(),

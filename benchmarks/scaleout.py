@@ -1,0 +1,187 @@
+"""Device-count scaling curve for the sharded sweep engine.
+
+The app axis is embarrassingly parallel (every app simulates
+independently), so ``EngineOptions(devices=...)`` partitions each chunk's
+app rows across a 1-D mesh via shard_map — results bit-identical to the
+single-device run (asserted here before any number is reported). This
+benchmark records how the 32-config hybrid sweep (the same grid as
+``benchmarks/policy_sweep``) scales with device count.
+
+XLA only honours ``--xla_force_host_platform_device_count`` when it is set
+before the first jax import, so the measurement runs in a child process
+(``--measure``) with ``XLA_FLAGS`` forced to 8 host devices; the parent
+parses the child's JSON and records ``BENCH_scaleout.json`` (repo root) on
+full runs.
+
+Read the curve with the host in mind: forced host devices on CPU are
+threads of the SAME physical machine sharing one XLA intra-op thread pool,
+so on a box with few physical cores the curve measures sharding overhead
+(it should stay flat near 1.0x), not parallel speedup. The per-device
+speedup claim transfers to real multi-device hosts (one accelerator per
+mesh slot); the bit-identity claim is host-independent.
+
+  PYTHONPATH=src python -m benchmarks.scaleout [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Anchored to the repo root (not the CWD) so re-records always update the
+# tracked file.
+JSON_PATH = os.environ.get(
+    "BENCH_SCALEOUT_JSON", os.path.join(REPO_ROOT, "BENCH_scaleout.json"))
+
+DEVICE_COUNTS = (1, 2, 4, 8)
+SENTINEL = "SCALEOUT-RESULT:"
+
+
+def measure(n_apps: int, days: float, max_events: int) -> dict:
+    """Child-process body: build the sweep once per device count, assert
+    bit-identity against the unsharded run, time warm repeats."""
+    import platform
+
+    import jax
+    import numpy as np
+
+    from benchmarks.policy_sweep import make_grid
+    from repro.core.experiment import EngineOptions, sweep
+    from repro.core.workload_spec import WorkloadSpec
+
+    assert jax.device_count() >= max(DEVICE_COUNTS), (
+        f"child expected forced host devices, found {jax.device_count()}")
+
+    grid = make_grid()
+    trace = WorkloadSpec.uniform(n_apps, days=days, seed=3,
+                                 max_events=max_events,
+                                 min_events=1).materialize()
+    trace.to_padded()             # shared trace construction out of the bill
+
+    def timed_warm(opts):
+        res = sweep(trace, grid, engine="fused", options=opts)   # cold
+        t0 = time.perf_counter()
+        sweep(trace, grid, engine="fused", options=opts)         # warm
+        return res, time.perf_counter() - t0
+
+    base, t_base = timed_warm(EngineOptions())
+    points = {}
+    for d in DEVICE_COUNTS:
+        res, t = timed_warm(EngineOptions(devices=d))
+        # bit-identity before any throughput number
+        np.testing.assert_array_equal(base.cold, res.cold)
+        np.testing.assert_array_equal(base.wasted_minutes,
+                                      res.wasted_minutes)
+        np.testing.assert_array_equal(base.final_prewarm, res.final_prewarm)
+        np.testing.assert_array_equal(base.final_keep_alive,
+                                      res.final_keep_alive)
+        points[d] = t
+
+    return {
+        "grid_size": len(grid),
+        "n_apps": n_apps, "days": days, "max_events": max_events,
+        "timing": "warm second call per device count (steady state)",
+        "unsharded_seconds": t_base,
+        "warm_seconds_by_devices": {str(d): points[d]
+                                    for d in DEVICE_COUNTS},
+        "speedup_vs_1_device": {str(d): points[1] / points[d]
+                                for d in DEVICE_COUNTS},
+        "bit_identical_to_unsharded": True,
+        "meta": {
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "physical_cpus": os.cpu_count(),
+            "platform": platform.platform(),
+            "jax": jax.__version__,
+            "recorded_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        },
+    }
+
+
+def _spawn_child(smoke: bool) -> dict:
+    env = dict(os.environ)
+    flags = [t for t in env.get("XLA_FLAGS", "").split()
+             if not t.startswith("--xla_force_host_platform_device_count")]
+    env["XLA_FLAGS"] = " ".join(
+        flags + [f"--xla_force_host_platform_device_count="
+                 f"{max(DEVICE_COUNTS)}"])
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(REPO_ROOT, "src"),
+         *filter(None, [env.get("PYTHONPATH")])])
+    cmd = [sys.executable, "-m", "benchmarks.scaleout", "--measure"]
+    if smoke:
+        cmd.append("--smoke")
+    out = subprocess.run(cmd, env=env, cwd=REPO_ROOT, capture_output=True,
+                         text=True)
+    if out.returncode != 0:
+        raise RuntimeError(f"scaleout child failed:\n{out.stdout}\n"
+                           f"{out.stderr}")
+    for line in out.stdout.splitlines():
+        if line.startswith(SENTINEL):
+            return json.loads(line[len(SENTINEL):])
+    raise RuntimeError(f"scaleout child printed no result:\n{out.stdout}")
+
+
+def run(smoke: bool = False):
+    record = _spawn_child(smoke)
+    points = record["warm_seconds_by_devices"]
+    speed = record["speedup_vs_1_device"]
+    rows = [(f"scaleout_warm_seconds_{d}dev", points[str(d)], "")
+            for d in DEVICE_COUNTS]
+    rows += [(f"scaleout_speedup_{d}dev_vs_1dev", speed[str(d)], "")
+             for d in DEVICE_COUNTS if d > 1]
+    rows.append(("scaleout_bit_identical",
+                 int(record["bit_identical_to_unsharded"]), ""))
+    # The honest reading of a forced-host-device curve (see module
+    # docstring): flat ≈ sharding costs nothing; >1 would need real cores.
+    record["note"] = (
+        "Forced host devices are threads of one machine "
+        f"(physical_cpus={record['meta']['physical_cpus']}), so this curve "
+        "measures sharding overhead, not parallel speedup: devices=1 "
+        "matching the unsharded time shows the shard_map machinery itself "
+        "costs ~nothing, while counts >1 contend for the same cores and "
+        "pay per-shard executable dispatch, so wall-clock stays flat or "
+        "degrades when forced devices outnumber physical cores. The "
+        "per-device win requires real multi-accelerator hosts (one "
+        "accelerator per mesh slot). Bit-identity to the unsharded run is "
+        "asserted before timing and is host-independent.")
+    if not smoke or "BENCH_SCALEOUT_JSON" in os.environ:
+        try:
+            with open(JSON_PATH, "w") as f:
+                json.dump(record, f, indent=2, sort_keys=True)
+                f.write("\n")
+        except OSError as e:
+            print(f"# WARNING: could not record {JSON_PATH}: {e}",
+                  file=sys.stderr)
+    else:
+        print(f"# smoke run: not recording {JSON_PATH}", file=sys.stderr)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trace (CI): exercises the paths, not the "
+                         "scaling claim")
+    ap.add_argument("--measure", action="store_true",
+                    help="internal: run the measurement in THIS process "
+                         "(expects forced host devices already in "
+                         "XLA_FLAGS)")
+    args = ap.parse_args()
+    if args.measure:
+        size = ((2_000, 2.0, 16) if args.smoke
+                else (100_000, 14.0, 64))
+        print(SENTINEL + json.dumps(measure(*size)))
+        return
+    for key, value, ref in run(smoke=args.smoke):
+        v = f"{value:.6g}" if isinstance(value, float) else value
+        print(f"{key},{v},{ref}")
+
+
+if __name__ == "__main__":
+    main()

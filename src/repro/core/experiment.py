@@ -221,6 +221,15 @@ class EngineOptions:
     #                                   scaled down by the config-axis size)
     tile_apps: int = 512              # Pallas kernel app-tile
     interpret: Optional[bool] = None  # Pallas interpret (None: off-TPU only)
+    devices: Union[None, int, str] = None   # shard the app axis: None (off),
+    #                                   an int device count (1 exercises the
+    #                                   sharded path), or "auto" (every
+    #                                   local device). Results stay
+    #                                   bit-identical — see
+    #                                   repro.distributed.scaleout. Applies
+    #                                   to the vectorized sweep engines and
+    #                                   the cluster policy-window scan;
+    #                                   "scalar"/"reference" ignore it.
     max_eviction_rounds: Optional[int] = None   # cluster cells only: cap
     #                                   the HBM-eviction fixed point; past
     #                                   it the cell falls back to the
@@ -365,7 +374,8 @@ def _sweep_one(trace: Trace, specs: Sequence, eng: str,
         # already oracle-exact, so "pallas"/"reference" alias it.
         out = _run_fixed_sweep(trace, [specs[s].keep_alive
                                        for s in window_idx],
-                               opts.include_trailing, padded=padded)
+                               opts.include_trailing, padded=padded,
+                               devices=opts.devices)
         fill(window_idx, out)
     if hybrid_idx:
         cfgs = [specs[s].to_config() for s in hybrid_idx]
@@ -378,7 +388,7 @@ def _sweep_one(trace: Trace, specs: Sequence, eng: str,
                 trace, cfgs, opts.include_trailing,
                 app_chunk=opts.app_chunk, use_pallas=(eng == "pallas"),
                 interpret=opts.interpret, tile_apps=opts.tile_apps,
-                padded=padded)
+                padded=padded, devices=opts.devices)
             fill(hybrid_idx, out)
     assert inv is not None  # every spec belongs to one of the two families
     return SweepResult(specs, eng, cold, inv, waste, pre, keep)
@@ -421,6 +431,8 @@ def sweep(trace=None, specs: Sequence = None, *, traces=None, clusters=None,
                              specs, clusters, engine=engine,
                              app_chunk=(options.app_chunk
                                         if options is not None else None),
+                             devices=(options.devices
+                                      if options is not None else None),
                              max_eviction_rounds=(
                                  options.max_eviction_rounds
                                  if options is not None else None))
@@ -448,6 +460,8 @@ def run(trace, spec, *, engine: str = "auto", cluster=None,
         return run_cluster(trace, spec, cluster, engine=engine,
                            app_chunk=(options.app_chunk
                                       if options is not None else None),
+                           devices=(options.devices
+                                    if options is not None else None),
                            max_eviction_rounds=(
                                options.max_eviction_rounds
                                if options is not None else None))

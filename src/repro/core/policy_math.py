@@ -627,9 +627,9 @@ class HybridSweepBlock(NamedTuple):
         cv_threshold, oob_threshold): the representativeness gate once per
         variant;
       * config layer ``[S, ...]`` — every config just *selects* its
-        (window, gate) pair; the only per-config scan state is cold counts
-        and waste (residency bounds are recomputed from group state, see
-        :func:`hybrid_sweep_decide`).
+        (window, gate) pair; the per-config scan state is cold counts,
+        waste, and the carried residency bounds (refreshed from group
+        state at each app's events, see :func:`hybrid_sweep_decide`).
 
     All index leaves are i32 arrays; knob leaves follow the same dtype
     discipline as :class:`HybridStepConfig`, with shapes ``[layer, 1]`` so
@@ -718,8 +718,9 @@ def hybrid_sweep_decide(gcum, goob, gcv_sum, gcv_sum_sq,
 
     Every decision input (cumulative counts, OOB, Welford accumulators)
     only changes when an app sees an event, so the windows an app carries
-    between events are a *pure function* of group state — the sweep never
-    materializes per-config window carries. Returns float32
+    between events are a *pure function* of group state — which is what
+    lets the sweep step carry them (refreshed only at events) and still
+    match a fresh decide from the same state. Returns float32
     (load_at, unload_at), each [S, n_apps] (decision-layer dtype; widening
     to the engine's time dtype is exact).
     """
@@ -736,21 +737,34 @@ def hybrid_sweep_decide(gcum, goob, gcv_sum, gcv_sum_sq,
 
 
 def fused_hybrid_sweep_step_math(t_now, prev_t, gcum, goob, gcv_sum,
-                                 gcv_sum_sq, cold, waste, *,
-                                 blk: HybridSweepBlock,
+                                 gcv_sum_sq, load_c, unload_c, cold,
+                                 waste, *, blk: HybridSweepBlock,
                                  ids: SweepIdentities = SweepIdentities()):
     """One sweep step: S configurations advance together over one trace
     column, sharing the time layer and the per-group histogram update.
 
     Shapes: ``t_now``/``prev_t`` [n]; group state [G, n(, n_bins)];
-    per-config state [S, n] — only cold counts and waste. The residency
-    bounds are recomputed from the PRE-update group state: exactly the
-    windows the single-config step decided (and carried) after each app's
-    previous event, because the state is untouched between an app's
-    events. Every value each config sees is, element for element, the same
-    primitive sequence the single-config step computes — the layers only
-    deduplicate and gather, so sweep rows are bit-identical to
-    single-config runs (asserted by ``tests/test_experiment_api.py``).
+    per-config state [S, n] — cold counts, waste, and the carried
+    residency bounds ``(load_c, unload_c)`` in the engine's time dtype.
+    The bounds are CARRIED, not recomputed at step start: the step
+    verdicts the closing gap under them, updates the group state, then
+    re-decides from the post-update state — the same carried-windows
+    dataflow as the single-config :func:`fused_hybrid_step_math`, which
+    lets XLA fuse the decision into the step that produced its state
+    instead of stranding it on the next verdict's critical path (this is
+    what restores the pre-sweep engine's S=1 step throughput, ROADMAP's
+    fused-run regression).
+
+    The carry is bit-identical to re-deriving ``hybrid_sweep_decide`` from
+    the pre-update state each step: group state only changes at an app's
+    events (the carry is refreshed exactly then, per app), and the init
+    carry must equal decide(zero state) — ``(0, standard_keep)``, the
+    ``use_histogram_gate`` total>0 fallback arm (float32 decision values
+    widen to the time dtype exactly). Every value each config sees is,
+    element for element, the same primitive sequence the single-config
+    step computes — the layers only deduplicate and gather, so sweep rows
+    are bit-identical to single-config runs (asserted by
+    ``tests/test_experiment_api.py``).
     """
     wdtype = t_now.dtype
     valid = jnp.isfinite(t_now)        # [n] — shared across the whole grid
@@ -758,13 +772,10 @@ def fused_hybrid_sweep_step_math(t_now, prev_t, gcum, goob, gcv_sum,
     it = t_now - prev_t
     account = valid & ~first           # gaps that actually closed
 
-    # Verdict for the gap that just closed, under the windows decided after
-    # each app's previous event (== decide(pre-update state)). The verdict
-    # math itself stays per-config [S, n]: on CPU the alternative (verdicts
-    # per variant + per-config gathers) loses — XLA gathers cost more than
-    # the elementwise compare/min/max they would save.
-    load_c, unload_c = hybrid_sweep_decide(gcum, goob, gcv_sum, gcv_sum_sq,
-                                           blk, ids)
+    # Verdict for the gap that just closed, under the carried windows. The
+    # verdict math itself stays per-config [S, n]: on CPU the alternative
+    # (verdicts per variant + per-config gathers) loses — XLA gathers cost
+    # more than the elementwise compare/min/max they would save.
     is_cold = valid & (first | ~warm_from_bounds(it, load_c, unload_c))
     gap_waste = jnp.where(account,
                           idle_from_bounds(it, load_c, unload_c),
@@ -778,6 +789,14 @@ def fused_hybrid_sweep_step_math(t_now, prev_t, gcum, goob, gcv_sum,
     new_goob = goob + oob_hit.astype(jnp.int32)
     gcv_sum, gcv_sum_sq = welford_update(gcv_sum, gcv_sum_sq, in_b, old)
 
+    # Windows governing the next gap, from the post-update state. Apps
+    # without an event this step keep their carried bounds — the state
+    # they would decide from is unchanged.
+    new_load, new_unload = hybrid_sweep_decide(new_gcum, new_goob, gcv_sum,
+                                               gcv_sum_sq, blk, ids)
+    load_c = jnp.where(valid, new_load.astype(wdtype), load_c)
+    unload_c = jnp.where(valid, new_unload.astype(wdtype), unload_c)
+
     prev_t = jnp.where(valid, t_now, prev_t)
-    return (prev_t, new_gcum, new_goob, gcv_sum, gcv_sum_sq,
-            cold + is_cold, waste + gap_waste)
+    return (prev_t, new_gcum, new_goob, gcv_sum, gcv_sum_sq, load_c,
+            unload_c, cold + is_cold, waste + gap_waste)

@@ -200,9 +200,25 @@ def _fixed_scan(times, keep_alive, duration, include_trailing: bool):
     return cold, waste
 
 
+@partial(jax.jit, static_argnums=(3, 4))
+def _fixed_scan_sharded(times, keep_alive, duration, include_trailing: bool,
+                        mesh):
+    """:func:`_fixed_scan` partitioned along the app axis of ``mesh``.
+
+    Per-shard programs are row slices of the single-device scan (no
+    collectives; keep-alive knobs and the duration replicate), so the
+    concatenated outputs are bit-identical. The mesh is a hashable static:
+    one compilation per (mesh, shapes), same as the unsharded path.
+    """
+    from ..distributed.scaleout import shard_along_apps
+    fn = lambda ts, ks, dur: _fixed_scan(ts, ks, dur, include_trailing)
+    return shard_along_apps(fn, mesh, (0, None, None), -1)(
+        times, keep_alive, duration)
+
+
 def _run_fixed_sweep(trace: Trace, keeps: Sequence[float],
                      include_trailing: bool = True, *,
-                     padded=None) -> dict:
+                     padded=None, devices=None) -> dict:
     """S fixed keep-alive configs in one pass (``inf`` == never unload).
 
     float64 time state: two-week traces (t ~ 2e4 minutes) lose the
@@ -211,19 +227,30 @@ def _run_fixed_sweep(trace: Trace, keeps: Sequence[float],
     ``padded`` is the trace's precomputed ``to_padded()`` pair — the
     experiment layer prepares each trace once and reuses it across every
     policy family and config (and, in a trace-axis sweep, the whole grid).
+    ``devices`` shards each bucket's app rows (see
+    :mod:`repro.distributed.scaleout`; results stay bit-identical).
     """
+    from ..distributed import scaleout
     times, counts = padded if padded is not None else trace.to_padded()
     S, n = len(keeps), trace.n_apps
+    mesh = scaleout.mesh_for(devices)
     cold = np.zeros((S, n), np.int64)
     waste = np.zeros((S, n), np.float64)
     with enable_x64():
         ks = jnp.asarray(np.asarray(keeps, np.float64)[:, None])
+        dur = jnp.float64(trace.duration_minutes)
         for sel, sub in _buckets(times, counts):
-            c, w = _fixed_scan(jnp.asarray(sub, jnp.float64), ks,
-                               jnp.float64(trace.duration_minutes),
-                               include_trailing)
-            cold[:, sel] = np.asarray(c)
-            waste[:, sel] = np.asarray(w)
+            sub = np.ascontiguousarray(sub, np.float64)
+            if mesh is None:
+                c, w = _fixed_scan(jnp.asarray(sub), ks, dur,
+                                   include_trailing)
+            else:
+                sub = scaleout.pad_app_rows(sub, mesh.devices.size)
+                dev = jax.device_put(sub, scaleout.app_sharding(mesh, 2))
+                c, w = _fixed_scan_sharded(dev, ks, dur, include_trailing,
+                                           mesh)
+            cold[:, sel] = np.asarray(c)[:, :len(sel)]
+            waste[:, sel] = np.asarray(w)[:, :len(sel)]
     keep = np.broadcast_to(np.asarray(keeps, np.float64)[:, None],
                            (S, n)).copy()
     return dict(cold=cold, invocations=counts.astype(np.int64),
@@ -387,9 +414,11 @@ def _hybrid_sweep_scan(times, blk: policy_math.HybridSweepBlock,
                        policy_math.SweepIdentities()):
     """One factored sweep scan over a [n, width] chunk; S configs in one
     pass, config knobs traced (a new grid point never recompiles). The
-    final residency bounds are recomputed from the final group state —
-    identical to the windows decided at each app's last event (the state
-    never changes between events)."""
+    residency bounds are carried through the scan (refreshed at each app's
+    events from the post-update group state — see
+    ``policy_math.fused_hybrid_sweep_step_math``), so the final bounds ARE
+    the windows decided at each app's last event; the init carry is
+    decide(zero state) = (0, standard_keep)."""
     n = times.shape[0]
     tdtype = times.dtype
     _check_scan_width(times.shape[1])
@@ -403,12 +432,15 @@ def _hybrid_sweep_scan(times, blk: policy_math.HybridSweepBlock,
         layer = lambda leaf: (leaf.shape[0],)
     gd = layer(blk.g_n_bins)
     sd = layer(blk.c_window)
+    std = blk.d_standard_keep if ids.c_std else blk.d_standard_keep[blk.c_std]
     init = (
         jnp.full((n,), -jnp.inf, tdtype),                  # shared clock
         jnp.zeros(gd + (n, n_bins), cum_dtype),
         jnp.zeros(gd + (n,), jnp.int32),
         jnp.zeros(gd + (n,), tdtype),                      # cv_sum
         jnp.zeros(gd + (n,), tdtype),                      # cv_sum_sq
+        jnp.zeros(sd + (n,), tdtype),                      # load bound
+        jnp.broadcast_to(std.astype(tdtype), sd + (n,)),   # unload bound
         jnp.zeros(sd + (n,), jnp.int32),                   # cold
         jnp.zeros(sd + (n,), tdtype),                      # waste
     )
@@ -416,9 +448,8 @@ def _hybrid_sweep_scan(times, blk: policy_math.HybridSweepBlock,
         policy_math.fused_hybrid_sweep_step_math(
             t, *carry, blk=blk, ids=ids), None)
     carry, _ = jax.lax.scan(step, init, times.T)
-    (last_t, gcum, goob, gcv_sum, gcv_sum_sq, cold, waste) = carry
-    prewarm, unload_at = policy_math.hybrid_sweep_decide(
-        gcum, goob, gcv_sum, gcv_sum_sq, blk, ids)
+    (last_t, gcum, goob, gcv_sum, gcv_sum_sq, prewarm, unload_at,
+     cold, waste) = carry
     gtotal = gcum[..., -1].astype(jnp.int32)
     sel_t = (lambda x: x) if ids.t else (lambda x: x[blk.t_group])
     oobh = policy_math.oob_heavy(sel_t(gtotal), sel_t(goob),
@@ -476,6 +507,40 @@ def _hybrid_sweep_scan_pallas(times, cfg_i32, cfg_f32, n_bins: int,
     return cold, waste, oob_heavy, prev_t[0], prewarm, unload_at
 
 
+@partial(jax.jit, static_argnums=(2, 3, 4, 5))
+def _hybrid_sweep_scan_sharded(times, blk: policy_math.HybridSweepBlock,
+                               cum_dtype, n_bins: int,
+                               ids: policy_math.SweepIdentities, mesh):
+    """:func:`_hybrid_sweep_scan` partitioned along the app axis of
+    ``mesh``.
+
+    The config block replicates; every output of the factored scan carries
+    apps on its LAST axis, so out_axes=-1 reassembles shards in fixed
+    device order — bit-identical to the unsharded scan (no collectives, no
+    cross-app math anywhere in the step). Callers pad rows to a multiple
+    of the mesh size (+inf rows are masked by the scan's own ``isfinite``
+    gate) and slice the outputs back.
+    """
+    from ..distributed.scaleout import shard_along_apps
+    fn = lambda ts, b: _hybrid_sweep_scan(ts, b, cum_dtype, n_bins, ids)
+    return shard_along_apps(fn, mesh, (0, None), -1)(times, blk)
+
+
+@partial(jax.jit, static_argnums=(3, 4, 5, 6))
+def _hybrid_sweep_scan_pallas_sharded(times, cfg_i32, cfg_f32, n_bins: int,
+                                      interpret: bool, tile_apps: int, mesh):
+    """:func:`_hybrid_sweep_scan_pallas` partitioned along the app axis.
+
+    Each shard pads its own rows to the kernel tile and slices them back,
+    so the assembled outputs keep the driver's row count; the SMEM config
+    blocks replicate."""
+    from ..distributed.scaleout import shard_along_apps
+    fn = lambda ts, ci, cf: _hybrid_sweep_scan_pallas(
+        ts, ci, cf, n_bins, interpret, tile_apps)
+    return shard_along_apps(fn, mesh, (0, None, None), -1)(
+        times, cfg_i32, cfg_f32)
+
+
 def _rebase_chunk(sub: np.ndarray):
     """Per-chunk time rebasing for the float32 engines.
 
@@ -515,7 +580,7 @@ def _run_hybrid_sweep(trace: Trace, hybrids: Sequence[HybridConfig],
                       use_pallas: Optional[bool] = None,
                       interpret: Optional[bool] = None,
                       tile_apps: int = 512,
-                      padded=None) -> dict:
+                      padded=None, devices=None) -> dict:
     """S hybrid configs over one bucketed/chunked/rebased trace pass.
 
     Configs are banded by bin count (so no config pays for another's wider
@@ -526,8 +591,18 @@ def _run_hybrid_sweep(trace: Trace, hybrids: Sequence[HybridConfig],
     sweep kernel, per-chunk time rebasing) and False elsewhere (float64 jnp
     sweep, always oracle-exact). The scalar ARIMA post-pass runs per config
     on its own OOB-heavy apps.
+
+    ``devices`` (None | int | "auto", see ``scaleout.mesh_for``) shards
+    each chunk's app rows across a 1-D mesh: chunks are padded to a
+    multiple of the mesh with masked +inf rows, ``device_put`` with a
+    row sharding turns the one-chunk lookahead into per-device double
+    buffering, and shard outputs concatenate in fixed device order —
+    results stay bit-identical to the single-device run.
     """
+    from ..distributed import scaleout
     S = len(hybrids)
+    mesh = scaleout.mesh_for(devices)
+    ndev = 1 if mesh is None else mesh.devices.size
     times, counts = padded if padded is not None else trace.to_padded()
     n = trace.n_apps
     cold = np.zeros((S, n), np.int64)
@@ -565,9 +640,14 @@ def _run_hybrid_sweep(trace: Trace, hybrids: Sequence[HybridConfig],
         cfgs = [hybrids[s] for s in idx]
         if use_pallas:
             ci, cf = _build_pallas_cfg(cfgs)
-            fn = partial(_hybrid_sweep_scan_pallas, cfg_i32=ci, cfg_f32=cf,
-                         n_bins=n_bins, interpret=interpret,
-                         tile_apps=tile_apps)
+            if mesh is None:
+                fn = partial(_hybrid_sweep_scan_pallas, cfg_i32=ci,
+                             cfg_f32=cf, n_bins=n_bins, interpret=interpret,
+                             tile_apps=tile_apps)
+            else:
+                fn = lambda cur, ci=ci, cf=cf, nb=n_bins: \
+                    _hybrid_sweep_scan_pallas_sharded(
+                        cur, ci, cf, nb, interpret, tile_apps, mesh)
         else:
             blk = _build_sweep_block(cfgs, np.float64)
             ids = _sweep_identities(blk)
@@ -576,8 +656,15 @@ def _run_hybrid_sweep(trace: Trace, hybrids: Sequence[HybridConfig],
                 # entirely (see _hybrid_sweep_scan)
                 blk = policy_math.HybridSweepBlock(
                     *(np.asarray(x).reshape(()) for x in blk))
-            fn = lambda cur, blk=blk, nb=n_bins, ids=ids: _hybrid_sweep_scan(
-                cur, blk, _cum_dtype_for(cur.shape[1]), nb, ids)
+            if mesh is None:
+                fn = lambda cur, blk=blk, nb=n_bins, ids=ids: \
+                    _hybrid_sweep_scan(
+                        cur, blk, _cum_dtype_for(cur.shape[1]), nb, ids)
+            else:
+                fn = lambda cur, blk=blk, nb=n_bins, ids=ids: \
+                    _hybrid_sweep_scan_sharded(
+                        cur, blk, _cum_dtype_for(cur.shape[1]), nb, ids,
+                        mesh)
         bands.append((np.asarray(idx), fn))
 
     run_dtype = np.float32 if use_pallas else np.float64
@@ -586,14 +673,20 @@ def _run_hybrid_sweep(trace: Trace, hybrids: Sequence[HybridConfig],
         # Streaming with a one-chunk lookahead: at most two chunk copies are
         # alive at once (the one scanning and the one whose host->device
         # transfer is enqueued ahead of blocking on the current result).
+        # With a mesh, the row-sharded device_put enqueues one transfer PER
+        # DEVICE, so the lookahead double-buffers per device.
         def prep(sel_sub):
             sel, sub = sel_sub
             if use_pallas:
                 sub, t0 = _rebase_chunk(sub)
             else:
                 t0 = np.zeros(len(sel), np.float64)
+            sub = np.ascontiguousarray(sub, run_dtype)
+            if mesh is None:
+                return sel, jax.device_put(sub), t0
+            sub = scaleout.pad_app_rows(sub, ndev)
             return sel, jax.device_put(
-                np.ascontiguousarray(sub, run_dtype)), t0
+                sub, scaleout.app_sharding(mesh, sub.ndim)), t0
 
         work = _chunked_buckets(times, counts, chunk)
         pending = next(work, None)
@@ -605,10 +698,13 @@ def _run_hybrid_sweep(trace: Trace, hybrids: Sequence[HybridConfig],
             nxt = next(work, None)
             pending = None if nxt is None else prep(nxt)
             for idx, fn in bands:
-                c, w, oobh, last_t, pw, ub = fn(cur)
+                # [..., :len(sel)] drops the masked mesh-padding rows (a
+                # no-op on the unsharded path).
+                c, w, oobh, last_t, pw, ub = (
+                    np.asarray(o)[..., :len(sel)] for o in fn(cur))
                 at = np.ix_(idx, sel)
-                cold[at] = np.asarray(c)
-                oob_flags[at] = np.asarray(oobh)
+                cold[at] = c
+                oob_flags[at] = oobh
                 waste[at], pre[at], keep[at] = _absolute_results(
                     w, last_t, pw, ub, t0, duration, include_trailing)
 

@@ -1,0 +1,136 @@
+"""Data-parallel scale-out of the app axis.
+
+The paper's fleet (§3, Fig. 5) spans eight orders of magnitude of per-app
+invocation rates, but every app's simulation is independent — the app axis
+is embarrassingly parallel. This module is the thin layer that lets the
+sweep engines (:mod:`repro.core.simulator`) and the cluster policy-window
+scan (:mod:`repro.serving.cluster_vector`) partition each device chunk's
+app rows across a 1-D ``("apps",)`` mesh via the version-portable
+:func:`repro.distributed.compat.shard_map`.
+
+Bit-identity contract (asserted by ``tests/test_scaleout_conformance.py``):
+
+  * the per-shard program is exactly the single-device program on a row
+    slice — no collectives, no cross-app reductions inside any engine scan
+    (per-config totals are accumulated host-side in float64, unchanged);
+  * shard outputs are concatenated in fixed device order (the mesh order),
+    so the assembled arrays are the single-device arrays element for
+    element;
+  * app counts not divisible by the device count are handled by
+    :func:`pad_app_rows`: padded rows carry ``+inf`` timestamps — the same
+    padding convention every scan already masks with ``isfinite`` — so
+    they provably contribute zero to every accumulator and are sliced off
+    the outputs.
+
+The knob rides on ``EngineOptions(devices=...)``: ``None`` keeps the
+engines exactly as they were, an int always routes through the sharded
+path (``devices=1`` exercises it on one device), ``"auto"`` shards over
+every local device. To emulate a multi-device host on CPU, set
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` in the environment
+*before the first jax import* (the recipe ``benchmarks/scaleout.py`` uses
+via a subprocess).
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import compat
+
+__all__ = ["APP_AXIS", "mesh_for", "pad_app_rows", "app_sharding",
+           "shard_along_apps"]
+
+#: The one mesh axis the reproduction engines shard over.
+APP_AXIS = "apps"
+
+
+def mesh_for(devices: Union[None, int, str]) -> Optional[Mesh]:
+    """Resolve an ``EngineOptions.devices`` knob into an app mesh (or None).
+
+    ``None`` (the default) keeps the single-device code paths untouched;
+    ``"auto"`` shards over every local device, collapsing to the
+    single-device path when only one exists; an int *always* builds a mesh
+    over that many devices — ``devices=1`` runs the full sharded machinery
+    on one device (how ordinary CI covers this layer) — and raises with the
+    forced-host-device recipe when more are requested than exist.
+    """
+    if devices is None:
+        return None
+    from ..launch.mesh import make_app_mesh
+    if isinstance(devices, str):
+        if devices != "auto":
+            raise ValueError(f"devices must be None, an int, or 'auto'; "
+                             f"got {devices!r}")
+        return make_app_mesh() if jax.device_count() > 1 else None
+    return make_app_mesh(int(devices))
+
+
+def pad_app_rows(arr: np.ndarray, multiple: int,
+                 fill: float = np.inf) -> np.ndarray:
+    """Pad the leading app axis up to a multiple of ``multiple``.
+
+    Padding rows are filled with ``+inf`` timestamps — never finite, so
+    every engine step's ``valid``/``isfinite`` mask excludes them and they
+    contribute exactly zero to every accumulator (cold counts, waste, OOB,
+    histogram state). Callers slice the rows back off the outputs.
+    """
+    pad = (-arr.shape[0]) % multiple
+    if not pad:
+        return arr
+    return np.concatenate(
+        [arr, np.full((pad,) + arr.shape[1:], fill, arr.dtype)])
+
+
+def app_sharding(mesh: Mesh, ndim: int) -> NamedSharding:
+    """Row sharding for a rank-``ndim`` array with apps on axis 0.
+
+    ``jax.device_put`` with this sharding enqueues one host→device transfer
+    per shard — which is what turns the engines' one-chunk-lookahead
+    transfer into *per-device* double buffering: every device overlaps its
+    next chunk slice's transfer with the current chunk's scan.
+    """
+    return NamedSharding(mesh, P(APP_AXIS, *([None] * (ndim - 1))))
+
+
+def shard_along_apps(fn, mesh: Mesh, in_axes, out_axes: int):
+    """Partition ``fn`` along the app axis of a 1-D mesh, vmap-style.
+
+    ``in_axes`` has one entry per positional argument — an int naming the
+    app axis of every array leaf of that argument, or ``None`` for
+    replicated arguments (config blocks, policy knobs, scalars).
+    ``out_axes`` is one int naming the app axis of every output leaf
+    (negative indices count from the back). Rank-0 leaves are always
+    replicated. Output shapes/specs come from ``jax.eval_shape``, so any
+    pytree-returning engine scan wraps without per-call bookkeeping.
+
+    There are no collectives inside the engines, so the old-API shim path
+    (full-manual shard_map) and the new ``jax.shard_map`` spelling compute
+    the same concatenated-in-device-order values — bit-identical to the
+    unsharded call on row counts divisible by the mesh (see
+    :func:`pad_app_rows` for the remainder).
+    """
+    axis = mesh.axis_names[0]
+
+    def spec_of(ax):
+        def leaf(x):
+            nd = np.ndim(x)
+            if ax is None or nd == 0:
+                return P()
+            return P(*([None] * (ax % nd) + [axis]))
+        return leaf
+
+    def call(*args):
+        if len(args) != len(in_axes):
+            raise ValueError(
+                f"shard_along_apps: {len(in_axes)} in_axes for "
+                f"{len(args)} arguments")
+        in_specs = tuple(jax.tree.map(spec_of(ax), arg)
+                         for arg, ax in zip(args, in_axes))
+        out_specs = jax.tree.map(spec_of(out_axes),
+                                 jax.eval_shape(fn, *args))
+        return compat.shard_map(fn, mesh, in_specs, out_specs)(*args)
+
+    return call

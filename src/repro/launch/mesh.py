@@ -34,6 +34,27 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     return Mesh(dev, axes)
 
 
+def make_app_mesh(n_devices: int = None) -> Mesh:
+    """1-D mesh over the first ``n_devices`` local devices, axis ``"apps"``.
+
+    The reproduction engines' data-parallel axis (see
+    :mod:`repro.distributed.scaleout`): apps are embarrassingly parallel, so
+    the only mesh the sweep engines ever need is this flat one. ``None``
+    takes every local device.
+    """
+    devices = jax.devices()
+    n = len(devices) if n_devices is None else int(n_devices)
+    if n < 1:
+        raise ValueError(f"an app mesh needs at least one device, got "
+                         f"n_devices={n_devices!r}")
+    if n > len(devices):
+        raise RuntimeError(
+            f"devices={n} requested but only {len(devices)} present; on CPU "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            f"before the first jax import to emulate an {n}-device host")
+    return Mesh(np.asarray(devices[:n]), ("apps",))
+
+
 def make_host_mesh(model_parallel: int = 1) -> Mesh:
     """Tiny mesh over the real host devices (tests / examples)."""
     devices = jax.devices()

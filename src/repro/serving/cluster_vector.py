@@ -177,8 +177,20 @@ def _hybrid_windows_scan(e_min, cfg: policy_math.HybridStepConfig):
     return load_seq.T, unload_seq.T, jnp.any(heavy_seq, axis=0)
 
 
+@partial(jax.jit, static_argnums=(1, 2))
+def _hybrid_windows_scan_sharded(e_min, cfg: policy_math.HybridStepConfig,
+                                 mesh):
+    """:func:`_hybrid_windows_scan` partitioned along the app axis of
+    ``mesh`` (outputs carry apps on axis 0; the config is a replicated
+    static). No collectives — shard outputs concatenate in fixed device
+    order, bit-identical to the unsharded scan."""
+    from ..distributed.scaleout import shard_along_apps
+    fn = lambda ts: _hybrid_windows_scan(ts, cfg)
+    return shard_along_apps(fn, mesh, (0,), 0)(e_min)
+
+
 def _policy_windows(table: AppTable, spec: PolicySpec, e_min2d: np.ndarray,
-                    counts: np.ndarray, app_chunk: int):
+                    counts: np.ndarray, app_chunk: int, devices=None):
     """(load_at, unload_at) bounds [n, M] decided after each event.
 
     Bounds are float64 minutes past the execution end — exactly the values
@@ -201,18 +213,29 @@ def _policy_windows(table: AppTable, spec: PolicySpec, e_min2d: np.ndarray,
             f"(Fixed/NoUnload/Hybrid), got {type(spec).__name__}; arbitrary "
             f"Policy objects run on engine='scalar'")
 
+    from ..distributed import scaleout
     hybrid = spec.to_config()
     cfg = _step_config_for(hybrid)
+    mesh = scaleout.mesh_for(devices)
     ua[:] = hybrid.standard_keep_alive       # zero-event rows: never read
     heavy = np.zeros(n, bool)
     with enable_x64():
         for sel, sub in _chunked_buckets(e_min2d, counts, app_chunk):
-            la_seq, ua_seq, flag = _hybrid_windows_scan(
-                jnp.asarray(sub, jnp.float64), cfg)
+            if mesh is None:
+                la_seq, ua_seq, flag = _hybrid_windows_scan(
+                    jnp.asarray(sub, jnp.float64), cfg)
+            else:
+                padded = scaleout.pad_app_rows(
+                    np.ascontiguousarray(sub, np.float64),
+                    mesh.devices.size)
+                la_seq, ua_seq, flag = _hybrid_windows_scan_sharded(
+                    jax.device_put(padded, scaleout.app_sharding(mesh, 2)),
+                    cfg, mesh)
+            k = len(sel)
             width = sub.shape[1]
-            la[sel, :width] = np.asarray(la_seq)
-            ua[sel, :width] = np.asarray(ua_seq)
-            heavy[sel] = np.asarray(flag)
+            la[sel, :width] = np.asarray(la_seq)[:k]
+            ua[sel, :width] = np.asarray(ua_seq)[:k]
+            heavy[sel] = np.asarray(flag)[:k]
 
     # ARIMA post-pass: the fused step carries no forecaster, so any app
     # whose OOB counter ever looked heavy (a superset of "the ARIMA branch
@@ -441,7 +464,7 @@ def _evict_worker(j_idx, budget, *, rows, rank, t_by_rank, wb, tie, cold,
 
 
 def _run_vector(table: AppTable, spec: PolicySpec, cluster: ClusterSpec,
-                app_chunk: int,
+                app_chunk: int, devices=None,
                 max_eviction_rounds: Optional[int] = None) -> ClusterResult:
     n = table.n_apps
     n_workers = cluster.n_workers
@@ -479,7 +502,8 @@ def _run_vector(table: AppTable, spec: PolicySpec, cluster: ClusterSpec,
     # ---- Phase B: policy windows per gap --------------------------------
     e_min2d = np.full((n, m_ev), np.inf)
     e_min2d[rows, cols] = e_min_flat
-    la2d, ua2d = _policy_windows(table, spec, e_min2d, counts, app_chunk)
+    la2d, ua2d = _policy_windows(table, spec, e_min2d, counts, app_chunk,
+                                 devices=devices)
     la = la2d[rows, cols]
     ua = ua2d[rows, cols]
     ka_sec = (ua - la) * MINUTE                 # == keep_alive * MINUTE
@@ -654,7 +678,7 @@ def _run_vector(table: AppTable, spec: PolicySpec, cluster: ClusterSpec,
 
 def run_cluster(workload, policy, cluster: Optional[ClusterSpec] = None, *,
                 engine: str = "auto", app_chunk: Optional[int] = None,
-                max_eviction_rounds: Optional[int] = None,
+                devices=None, max_eviction_rounds: Optional[int] = None,
                 exec_s=None, memory_mb=None,
                 weight_bytes=None) -> ClusterResult:
     """Run one workload x policy x cluster cell.
@@ -667,7 +691,9 @@ def run_cluster(workload, policy, cluster: Optional[ClusterSpec] = None, *,
     the same table. ``max_eviction_rounds`` (an ``EngineOptions``-style
     execution knob; default unlimited) caps the total fixed-point
     resolutions — past it the run falls back to the scalar oracle with a
-    warning instead of spinning.
+    warning instead of spinning. ``devices`` shards the policy-window
+    scan's app rows (see :mod:`repro.distributed.scaleout`; results stay
+    bit-identical).
     """
     if engine not in CLUSTER_ENGINES:
         raise ValueError(f"unknown cluster engine {engine!r}; expected one "
@@ -681,6 +707,7 @@ def run_cluster(workload, policy, cluster: Optional[ClusterSpec] = None, *,
         try:
             return _run_vector(table, spec, cluster,
                                app_chunk or DEFAULT_APP_CHUNK,
+                               devices=devices,
                                max_eviction_rounds=max_eviction_rounds)
         except EvictionRoundsExceeded as e:
             warnings.warn(
@@ -715,6 +742,7 @@ class ClusterSweep:
 def sweep_cluster(workloads: Union[Sequence, object], specs: Sequence,
                   clusters: Optional[Sequence[ClusterSpec]] = None, *,
                   engine: str = "auto", app_chunk: Optional[int] = None,
+                  devices=None,
                   max_eviction_rounds: Optional[int] = None) -> ClusterSweep:
     """Evaluate the full workload x policy x cluster grid.
 
@@ -730,6 +758,7 @@ def sweep_cluster(workloads: Union[Sequence, object], specs: Sequence,
                          "PolicySpec and one ClusterSpec")
     tables = [as_table(w) for w in workloads]
     results = [[[run_cluster(tab, s, c, engine=engine, app_chunk=app_chunk,
+                             devices=devices,
                              max_eviction_rounds=max_eviction_rounds)
                  for c in clusters] for s in specs] for tab in tables]
     return ClusterSweep(tables=tables, specs=specs, clusters=clusters,

@@ -47,7 +47,7 @@ PERTURBED = [
                                   hedge_after_factor=3.0, enabled=False),
                 checkpoint_at_minute=45.0, label="cl"),
     EngineOptions(include_trailing=False, app_chunk=3, tile_apps=128,
-                  interpret=True, max_eviction_rounds=2),
+                  interpret=True, devices=2, max_eviction_rounds=2),
 ]
 
 

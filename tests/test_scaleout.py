@@ -1,0 +1,224 @@
+"""Unit tests for the app-axis scale-out layer.
+
+Three contracts, each load-bearing for ``EngineOptions(devices=...)``:
+
+  * the ``distributed/compat.py`` shard_map shim translates to BOTH jax
+    spellings correctly (``jax.shard_map`` with ``check_vma``/``axis_names``
+    and ``jax.experimental.shard_map`` with ``check_rep``) — exercised via
+    monkeypatch so a jax upgrade cannot silently break the path not taken
+    by the installed version, plus a real execution on whichever the
+    installed jax provides;
+  * ``scaleout.shard_along_apps`` / ``pad_app_rows`` / ``mesh_for``
+    semantics (vmap-style axes, masked +inf padding, the devices knob);
+  * ``devices=1`` routes the engines through the full shard_map machinery
+    on a single device and stays bit-identical — which is how ordinary
+    (one-device) CI covers the sharded code path; multi-device bit-identity
+    lives in ``tests/test_scaleout_conformance.py``.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.experiment import (EngineOptions, FixedSpec, HybridSpec,
+                                   NoUnloadSpec, run, sweep)
+from repro.core.workload import Trace
+from repro.distributed import compat
+from repro.distributed.scaleout import (APP_AXIS, app_sharding, mesh_for,
+                                        pad_app_rows, shard_along_apps)
+from repro.launch.mesh import make_app_mesh
+
+from golden_traces import CFG48
+
+
+# --- compat.shard_map: both jax spellings, via monkeypatch -------------------
+
+
+class _Recorder:
+    """Stands in for a jax shard_map entry point and records its kwargs."""
+
+    def __init__(self):
+        self.f = None
+        self.kwargs = None
+
+    def __call__(self, f, **kwargs):
+        self.f = f
+        self.kwargs = kwargs
+        return lambda *args: ("wrapped", args)
+
+
+def test_compat_new_api_spelling(monkeypatch):
+    """With jax.shard_map present (newer jax), the shim must pass
+    check_vma and translate axis_names to a set."""
+    rec = _Recorder()
+    monkeypatch.setattr(jax, "shard_map", rec, raising=False)
+    f = lambda x: x
+    wrapped = compat.shard_map(f, "MESH", "IN", "OUT",
+                               axis_names=(APP_AXIS,), check=True)
+    assert rec.f is f
+    assert rec.kwargs == dict(mesh="MESH", in_specs="IN", out_specs="OUT",
+                              check_vma=True, axis_names={APP_AXIS})
+    assert wrapped(1, 2) == ("wrapped", (1, 2))
+
+
+def test_compat_new_api_omits_axis_names_when_none(monkeypatch):
+    rec = _Recorder()
+    monkeypatch.setattr(jax, "shard_map", rec, raising=False)
+    compat.shard_map(lambda x: x, "MESH", "IN", "OUT")
+    assert rec.kwargs == dict(mesh="MESH", in_specs="IN", out_specs="OUT",
+                              check_vma=False)
+
+
+def test_compat_old_api_spelling(monkeypatch):
+    """Without jax.shard_map (jax 0.4.x), the shim must call the
+    experimental spelling full-manual: check_rep only, no axis_names/auto
+    (partial-manual lowers through an SPMD path that is unimplemented on
+    some backends)."""
+    import jax.experimental.shard_map as sm_mod
+    monkeypatch.delattr(jax, "shard_map", raising=False)
+    rec = _Recorder()
+    monkeypatch.setattr(sm_mod, "shard_map", rec)
+    wrapped = compat.shard_map(lambda x: x, "MESH", "IN", "OUT",
+                               axis_names=(APP_AXIS,), check=True)
+    assert rec.kwargs == dict(mesh="MESH", in_specs="IN", out_specs="OUT",
+                              check_rep=True)
+    assert wrapped(3) == ("wrapped", (3,))
+
+
+def test_compat_executes_on_installed_jax():
+    """Whichever spelling the installed jax has, the shim must actually
+    partition a computation (any device count, including one)."""
+    mesh = make_app_mesh()
+    x = np.arange(4 * mesh.devices.size, dtype=np.float32).reshape(-1, 2)
+    f = lambda a: a * 2.0 + 1.0
+    got = compat.shard_map(f, mesh, (P(APP_AXIS, None),),
+                           (P(APP_AXIS, None)))(x)
+    np.testing.assert_array_equal(np.asarray(got), f(x))
+
+
+# --- scaleout primitives -----------------------------------------------------
+
+
+def test_mesh_for_semantics():
+    assert mesh_for(None) is None
+    m1 = mesh_for(1)
+    assert isinstance(m1, Mesh)
+    assert m1.axis_names == (APP_AXIS,) and m1.devices.size == 1
+    auto = mesh_for("auto")
+    if jax.device_count() == 1:
+        assert auto is None          # collapses to the single-device path
+    else:
+        assert auto.devices.size == jax.device_count()
+    with pytest.raises(ValueError, match="'auto'"):
+        mesh_for("fast")
+    with pytest.raises(RuntimeError,
+                       match="xla_force_host_platform_device_count"):
+        mesh_for(jax.device_count() + 1)
+    with pytest.raises(ValueError, match="at least one device"):
+        make_app_mesh(0)
+
+
+def test_pad_app_rows():
+    a = np.arange(12, dtype=np.float64).reshape(3, 4)
+    assert pad_app_rows(a, 1) is a
+    assert pad_app_rows(a, 3) is a                   # already a multiple
+    p = pad_app_rows(a, 8)
+    assert p.shape == (8, 4) and p.dtype == a.dtype
+    np.testing.assert_array_equal(p[:3], a)
+    assert np.all(np.isinf(p[3:])) and np.all(p[3:] > 0)
+
+
+def test_app_sharding_spec():
+    s = app_sharding(mesh_for(1), 2)
+    assert isinstance(s, NamedSharding)
+    assert s.spec == P(APP_AXIS, None)
+    assert app_sharding(mesh_for(1), 1).spec == P(APP_AXIS)
+
+
+def test_shard_along_apps_axes_and_replication():
+    """vmap-style axes: sharded arg rows, replicated knob pytrees, rank-0
+    leaves, negative out_axes — outputs equal the direct call."""
+    mesh = mesh_for(1)
+    times = np.arange(8, dtype=np.float64).reshape(4, 2)
+    knobs = (np.float64(2.0), np.arange(3, dtype=np.float64))
+
+    def fn(ts, kn):
+        scale, vec = kn
+        return dict(scaled=(ts * scale).T,            # apps on axis -1
+                    shifted=ts.T + vec.sum())         # apps on axis -1
+
+    got = shard_along_apps(fn, mesh, (0, None), -1)(times, knobs)
+    want = fn(times, knobs)
+    np.testing.assert_array_equal(np.asarray(got["scaled"]), want["scaled"])
+    np.testing.assert_array_equal(np.asarray(got["shifted"]), want["shifted"])
+
+    with pytest.raises(ValueError, match="in_axes"):
+        shard_along_apps(fn, mesh, (0,), -1)(times, knobs)
+
+
+def test_shard_along_apps_matches_unsharded_on_every_device():
+    """With >1 devices this is a real partition; with one it is the
+    degenerate mesh — either way the assembled output must equal the
+    plain call (fixed device order, no collectives)."""
+    mesh = mesh_for("auto") or mesh_for(1)
+    n = 3 * mesh.devices.size + 1                    # deliberately ragged
+    x = np.linspace(0.0, 1.0, n * 4).reshape(n, 4)
+    xp = pad_app_rows(x, mesh.devices.size, fill=7.5)
+    f = lambda a: jnp.cumsum(a, axis=-1)
+    got = np.asarray(shard_along_apps(f, mesh, (0,), 0)(xp))[:n]
+    np.testing.assert_array_equal(got, np.asarray(f(x)))
+
+
+# --- devices=1 through the engines (the always-on sharded-path coverage) -----
+
+
+def _ragged_trace():
+    """9 apps (indivisible by any mesh), one zero-event and one
+    single-event app, times on the 1/64-minute grid."""
+    rng = np.random.default_rng(7)
+    times = [np.cumsum(rng.integers(1, 64 * 90, 12)) / 64.0
+             for _ in range(9)]
+    times[3] = np.asarray([], np.float64)
+    times[6] = times[6][:1]
+    return Trace(specs=None, times=times, duration_minutes=4 * 1440.0)
+
+
+GRID = [FixedSpec(10.0), NoUnloadSpec(),
+        HybridSpec.from_config(CFG48),
+        HybridSpec(range_minutes=64.0, cv_threshold=0.5, use_arima=False)]
+
+
+@pytest.mark.parametrize("engine", ["fused", "pallas"])
+def test_devices_one_bit_identical(engine):
+    trace = _ragged_trace()
+    base = sweep(trace, GRID, engine=engine,
+                 options=EngineOptions(app_chunk=4))
+    res = sweep(trace, GRID, engine=engine,
+                options=EngineOptions(app_chunk=4, devices=1))
+    np.testing.assert_array_equal(base.cold, res.cold)
+    np.testing.assert_array_equal(base.invocations, res.invocations)
+    np.testing.assert_array_equal(base.wasted_minutes, res.wasted_minutes)
+    np.testing.assert_array_equal(base.final_prewarm, res.final_prewarm)
+    np.testing.assert_array_equal(base.final_keep_alive,
+                                  res.final_keep_alive)
+
+
+def test_devices_knob_is_execution_only():
+    """devices= must not change what run() computes — same SimResult
+    fields, and the scalar engine simply ignores the knob."""
+    trace = _ragged_trace()
+    spec = GRID[2]
+    one = run(trace, spec, options=EngineOptions(devices=1))
+    plain = run(trace, spec)
+    np.testing.assert_array_equal(one.cold, plain.cold)
+    np.testing.assert_array_equal(one.wasted_minutes, plain.wasted_minutes)
+    scal = run(trace, spec, engine="scalar",
+               options=EngineOptions(devices=1))
+    np.testing.assert_array_equal(scal.cold, plain.cold)
+
+
+def test_engine_options_devices_default():
+    assert EngineOptions().devices is None
+    assert EngineOptions(devices="auto").devices == "auto"

@@ -1,0 +1,182 @@
+"""Sharded-vs-single-device bit-identity for run()/sweep() and the cluster
+policy-window scan.
+
+The contract (``repro/distributed/scaleout.py``): partitioning a chunk's
+app rows across a 1-D device mesh changes nothing but wall-clock — cold
+counts, waste, final windows, and cluster outputs are bit-identical to the
+unsharded run, including app counts not divisible by the device count
+(masked +inf padding rows), zero-event apps, and the pinned golden traces.
+
+``devices=1`` cases always run (the degenerate mesh exercises the full
+shard_map machinery on any host). The 2- and 8-device cases need forced
+host devices — the scaleout CI leg runs this file under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``; on an ordinary
+one-device host they skip, and the subprocess smoke at the bottom keeps
+the real multi-device contract covered everywhere.
+"""
+import functools
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.experiment import (EngineOptions, FixedSpec, HybridSpec,
+                                   NoUnloadSpec, run, sweep)
+from repro.core.workload import Trace
+from repro.core.workload_spec import azure_like
+from repro.serving.cluster_vector import ClusterSpec
+
+from golden_traces import CFG48, CFG240, GOLDEN_TRACES, coarse_twoweek
+
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "golden")
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _needs(n):
+    return pytest.mark.skipif(
+        jax.device_count() < n,
+        reason=(f"needs {n} devices — run under "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count=8"))
+
+
+DEVICES = [pytest.param(1),
+           pytest.param(2, marks=_needs(2)),
+           pytest.param(8, marks=_needs(8))]
+
+# Mixed families, two histogram bands — the same shape of grid the
+# experiment-API conformance suite uses, so every factored sweep layer
+# goes through the sharded path.
+GRID = [FixedSpec(10.0), NoUnloadSpec(),
+        HybridSpec.from_config(CFG48),
+        HybridSpec(range_minutes=48.0, cv_threshold=0.5, use_arima=False),
+        HybridSpec.from_config(CFG240)]
+
+
+@functools.lru_cache(maxsize=None)
+def _trace():
+    """21 apps — indivisible by 2 and 8 — with a zero-event and a
+    single-event app spliced in (padding + masking edge cases)."""
+    base = coarse_twoweek(n_apps=21)
+    times = [np.asarray(base.events(i), np.float64)
+             for i in range(base.n_apps)]
+    times[5] = np.asarray([], np.float64)
+    times[13] = times[13][:1]
+    return Trace(specs=None, times=times,
+                 duration_minutes=base.duration_minutes)
+
+
+@functools.lru_cache(maxsize=None)
+def _baseline(engine):
+    return sweep(_trace(), GRID, engine=engine,
+                 options=EngineOptions(app_chunk=11))
+
+
+def _assert_rows_equal(base, res):
+    np.testing.assert_array_equal(base.cold, res.cold)
+    np.testing.assert_array_equal(base.invocations, res.invocations)
+    np.testing.assert_array_equal(base.wasted_minutes, res.wasted_minutes)
+    np.testing.assert_array_equal(base.final_prewarm, res.final_prewarm)
+    np.testing.assert_array_equal(base.final_keep_alive,
+                                  res.final_keep_alive)
+
+
+@pytest.mark.parametrize("devices", DEVICES)
+@pytest.mark.parametrize("engine", ["fused", "pallas"])
+def test_sweep_sharded_bit_identical(engine, devices):
+    res = sweep(_trace(), GRID, engine=engine,
+                options=EngineOptions(app_chunk=11, devices=devices))
+    _assert_rows_equal(_baseline(engine), res)
+
+
+@pytest.mark.parametrize("devices", DEVICES)
+def test_run_sharded_bit_identical(devices):
+    base = run(_trace(), GRID[2])
+    res = run(_trace(), GRID[2], options=EngineOptions(devices=devices))
+    np.testing.assert_array_equal(base.cold, res.cold)
+    np.testing.assert_array_equal(base.wasted_minutes, res.wasted_minutes)
+    np.testing.assert_array_equal(base.final_prewarm, res.final_prewarm)
+    np.testing.assert_array_equal(base.final_keep_alive,
+                                  res.final_keep_alive)
+
+
+@pytest.mark.parametrize("devices", DEVICES)
+@pytest.mark.parametrize("name", sorted(GOLDEN_TRACES))
+def test_golden_traces_sharded(name, devices):
+    """The sharded sweep reproduces the checked-in float64 oracle records
+    on the pinned golden traces — not just self-consistency."""
+    make_trace, cfg = GOLDEN_TRACES[name]
+    with open(os.path.join(GOLDEN_DIR, f"{name}.json")) as f:
+        want = json.load(f)
+    res = sweep(make_trace(), [HybridSpec.from_config(cfg)], engine="fused",
+                options=EngineOptions(devices=devices))
+    np.testing.assert_array_equal(res.cold[0], np.asarray(want["cold"]))
+    np.testing.assert_array_equal(res.final_prewarm[0],
+                                  np.asarray(want["final_prewarm"]))
+    np.testing.assert_array_equal(res.final_keep_alive[0],
+                                  np.asarray(want["final_keep_alive"]))
+    np.testing.assert_allclose(res.wasted_minutes[0],
+                               np.asarray(want["wasted_minutes"]),
+                               rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("devices", DEVICES)
+def test_cluster_windows_sharded(devices):
+    """The fleet simulator's policy-window scan shards the same way: a 91
+    app fleet (indivisible by 2 and 8) produces identical placement,
+    latency, and waste outputs."""
+    wl = azure_like(91, days=1.5, seed=5)
+    spec = HybridSpec.from_config(CFG48)
+    base = run(wl, spec, cluster=ClusterSpec())
+    res = run(wl, spec, cluster=ClusterSpec(),
+              options=EngineOptions(devices=devices))
+    np.testing.assert_array_equal(base.cold_pct_per_app,
+                                  res.cold_pct_per_app)
+    np.testing.assert_array_equal(base.latencies_s, res.latencies_s)
+    np.testing.assert_array_equal(base.wasted_gb_minutes,
+                                  res.wasted_gb_minutes)
+
+
+_CHILD = r"""
+import numpy as np, jax
+assert jax.device_count() == 8, jax.device_count()
+from repro.core.experiment import EngineOptions, FixedSpec, HybridSpec, sweep
+from repro.core.workload import Trace
+rng = np.random.default_rng(11)
+times = [np.cumsum(rng.integers(1, 64 * 120, 10)) / 64.0 for _ in range(13)]
+times[2] = np.asarray([], np.float64)
+trace = Trace(specs=None, times=times, duration_minutes=2 * 1440.0)
+grid = [FixedSpec(10.0),
+        HybridSpec(range_minutes=48.0, cv_threshold=2.0, use_arima=False)]
+base = sweep(trace, grid, engine="fused", options=EngineOptions(app_chunk=5))
+res = sweep(trace, grid, engine="fused",
+            options=EngineOptions(app_chunk=5, devices=8))
+for f in ("cold", "wasted_minutes", "final_prewarm", "final_keep_alive"):
+    np.testing.assert_array_equal(getattr(base, f), getattr(res, f))
+print("SCALEOUT-OK")
+"""
+
+
+def test_subprocess_forced_host_devices():
+    """Always-on multi-device coverage: a child process forces 8 host
+    devices (XLA_FLAGS must be set before the first jax import, hence the
+    subprocess) and asserts devices=8 bit-identity on a tiny sweep."""
+    env = dict(os.environ)
+    flags = [t for t in env.get("XLA_FLAGS", "").split()
+             if not t.startswith("--xla_force_host_platform_device_count")]
+    env["XLA_FLAGS"] = " ".join(
+        flags + ["--xla_force_host_platform_device_count=8"])
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(REPO_ROOT, "src"),
+         *filter(None, [env.get("PYTHONPATH")])])
+    out = subprocess.run([sys.executable, "-c", _CHILD], env=env,
+                         cwd=REPO_ROOT, capture_output=True, text=True,
+                         timeout=600)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "SCALEOUT-OK" in out.stdout
