@@ -1,0 +1,219 @@
+"""Batched ARIMA fit throughput vs the legacy per-app scipy loop.
+
+The paper (Sec. 5.2) reports ~27 ms for the initial pmdarima fit of one
+application. The legacy post-pass paid that price app-by-app in a Python
+loop; the batched grid fit (``repro.forecast.arima_batched``) runs the
+whole OOB cohort through one vmapped program. This benchmark:
+
+  * first asserts the *conformance gate*: on a long-period-timer trace
+    (every IT beyond the histogram range, so the ARIMA path governs),
+    the fused engine's cold counts and final windows are bit-identical
+    to the scalar per-event oracle — throughput claims mean nothing if
+    the batched path drifted;
+  * then times ``fit_arima_grid`` on ~10k OOB-app windows (steady-state,
+    after one warm-up call on the same bucket shapes) against the scalar
+    scipy auto-fit loop, sampled and extrapolated (17 Nelder-Mead fits
+    per app makes the full 10k-loop a half-hour affair — exactly the
+    point). The acceptance bar is a >= 10x speedup.
+
+scipy is optional (dev-only dependency): without it the baseline rows
+are skipped and only the batched throughput is recorded.
+
+Results go to ``BENCH_forecast.json`` (repo root). ``--smoke`` runs the
+conformance gate plus a tiny timing pass and never clobbers the record.
+
+  PYTHONPATH=src python -m benchmarks.forecast [--smoke] [--apps N]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import platform
+import sys
+import time
+
+import numpy as np
+
+from repro.core.experiment import HybridSpec, run as run_experiment
+from repro.core.policy import HybridConfig, HybridHistogramPolicy
+from repro.core.simulator import simulate_scalar
+from repro.core.workload import Trace
+from repro.forecast import MAX_OBS, ORDER_GRID, fit_arima_grid
+
+JSON_PATH = os.environ.get(
+    "BENCH_FORECAST_JSON",
+    os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                 "BENCH_forecast.json"))
+
+FULL_APPS = 10_240
+SCIPY_SAMPLE = 24
+
+
+def _oob_timer_trace(n_apps=40, days=3, seed=5):
+    """Long-period timers: periods past the 240-minute histogram range,
+    so every inter-arrival is OOB and the hybrid's ARIMA path governs."""
+    rng = np.random.default_rng(seed)
+    duration = days * 24 * 60.0
+    periods = rng.uniform(280.0, 420.0, n_apps)
+    times = []
+    for i in range(n_apps):
+        phase = rng.uniform(0.0, periods[i])
+        t = np.arange(phase, duration, periods[i])
+        t = t + rng.normal(0.0, 0.5, t.shape)
+        times.append(np.sort(np.clip(t, 0.0, duration - 1e-6)))
+    return Trace(specs=None, times=times, duration_minutes=duration)
+
+
+def _parity_gate():
+    """Cold counts and windows bit-identical, fused vs scalar oracle, on
+    the ARIMA-governed trace. Raises on any drift."""
+    trace = _oob_timer_trace()
+    spec = HybridSpec(use_arima=True)
+    oracle = simulate_scalar(
+        trace, HybridHistogramPolicy(HybridConfig(use_arima=True)))
+    got = run_experiment(trace, spec, engine="fused")
+    np.testing.assert_array_equal(got.cold, oracle.cold)
+    np.testing.assert_array_equal(got.final_prewarm, oracle.final_prewarm)
+    np.testing.assert_array_equal(got.final_keep_alive,
+                                  oracle.final_keep_alive)
+    cold_pct = 100.0 * got.cold.sum() / max(int(got.invocations.sum()), 1)
+    return float(cold_pct)
+
+
+def _oob_windows(n_apps: int, seed=11):
+    """Synthetic OOB-app observation windows: noisy timer periods with
+    ragged lengths — the shape the hybrid replay hands the grid fit."""
+    rng = np.random.default_rng(seed)
+    rows = np.zeros((n_apps, MAX_OBS), np.float32)
+    lens = np.zeros(n_apps, np.int32)
+    for i in range(n_apps):
+        n = int(rng.integers(8, MAX_OBS + 1))
+        period = rng.uniform(250.0, 450.0)
+        rows[i, :n] = period + rng.normal(0.0, period * 0.02, n)
+        lens[i] = n
+    return rows, lens
+
+
+def _scipy_auto_fit(y):
+    """The legacy per-app cost: one Nelder-Mead CSS fit per grid order
+    (what ``repro.core.arima.auto_arima`` used to run in the post-pass)."""
+    from scipy import optimize
+
+    y = np.asarray(y, float)
+    best = math.inf
+    for p, d, q in ORDER_GRID:
+        w = np.diff(y, n=d) if d else y
+        m = len(w)
+        if len(y) < d + max(p, q) + 2 or m < p + q + 1:
+            continue
+        wc = w - np.mean(w)
+
+        def objective(theta):
+            if np.any(np.abs(theta) > 1.5):
+                return 1e12
+            a = np.concatenate([theta[:p], np.zeros(2 - p)])
+            b = np.concatenate([theta[p:p + q], np.zeros(2 - q)])
+            e = np.zeros(m)
+            w1 = w2 = e1 = e2 = 0.0
+            for t in range(m):
+                e[t] = wc[t] - (a[0] * w1 + a[1] * w2 + b[0] * e1
+                                + b[1] * e2)
+                w1, w2 = wc[t], w1
+                e1, e2 = e[t], e1
+            return float(np.sum(e * e))
+
+        theta = np.zeros(p + q)
+        if p + q:
+            theta = optimize.minimize(
+                objective, theta, method="Nelder-Mead",
+                options={"maxiter": 300 * (p + q),
+                         "xatol": 1e-5, "fatol": 1e-8}).x
+        sse = max(objective(theta), 1e-12)
+        best = min(best, m * math.log(sse / m) + 2 * (p + q + 1))
+    return best
+
+
+def run(n_apps: int = FULL_APPS, smoke: bool = False):
+    if smoke:
+        n_apps = 64
+    full_scale = n_apps >= FULL_APPS
+    rows_out = []
+    record = {"host": platform.processor() or platform.machine(),
+              "n_apps": n_apps}
+
+    cold_pct = _parity_gate()
+    rows_out.append(("forecast_parity_gate_cold_pct", cold_pct, ""))
+    record["parity_gate_cold_pct"] = cold_pct
+
+    rows, lens = _oob_windows(n_apps)
+    fit_arima_grid(rows, lens)           # warm-up: compile bucket shapes
+    t0 = time.perf_counter()
+    fit = fit_arima_grid(rows, lens)
+    t_batched = time.perf_counter() - t0
+    assert fit.valid.any(axis=1).all(), "unusable fits in the benchmark bank"
+    batched_rate = n_apps / t_batched
+    rows_out += [
+        ("forecast_batched_seconds", t_batched, ""),
+        ("forecast_batched_apps_per_sec", batched_rate, ""),
+        ("forecast_batched_us_per_app", 1e6 * t_batched / n_apps, ""),
+    ]
+    record.update(batched_seconds=t_batched,
+                  batched_apps_per_sec=batched_rate)
+
+    try:
+        import scipy  # noqa: F401
+        have_scipy = True
+    except ImportError:
+        have_scipy = False
+        print("# scipy unavailable: skipping the scalar-loop baseline",
+              file=sys.stderr)
+    if have_scipy:
+        sample = min(SCIPY_SAMPLE if not smoke else 4, n_apps)
+        t0 = time.perf_counter()
+        for i in range(sample):
+            _scipy_auto_fit(rows[i, :lens[i]])
+        t_scipy = time.perf_counter() - t0
+        scipy_rate = sample / t_scipy
+        speedup = batched_rate / scipy_rate
+        rows_out += [
+            # paper: ~27 ms initial pmdarima fit per app (Sec. 5.2)
+            ("forecast_scipy_ms_per_app", 1e3 * t_scipy / sample, "27"),
+            ("forecast_scipy_apps_per_sec_est", scipy_rate, ""),
+            ("forecast_speedup_vs_scipy", speedup, ""),
+        ]
+        record.update(scipy_sampled_apps=sample, scipy_seconds=t_scipy,
+                      scipy_apps_per_sec_est=scipy_rate, speedup=speedup)
+        if full_scale:
+            assert speedup >= 10.0, \
+                f"batched fit only {speedup:.1f}x the scipy loop " \
+                f"(acceptance bar: 10x)"
+
+    if full_scale or "BENCH_FORECAST_JSON" in os.environ:
+        try:
+            with open(JSON_PATH, "w") as f:
+                json.dump(record, f, indent=2, sort_keys=True)
+                f.write("\n")
+        except OSError as e:
+            print(f"# WARNING: could not record {JSON_PATH}: {e}",
+                  file=sys.stderr)
+    else:
+        print(f"# reduced run: not recording {JSON_PATH}", file=sys.stderr)
+    return rows_out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="conformance gate + tiny timing pass (CI); does "
+                         "not record the tracked JSON")
+    ap.add_argument("--apps", type=int, default=FULL_APPS)
+    args = ap.parse_args()
+    for key, value, ref in run(n_apps=args.apps, smoke=args.smoke):
+        v = f"{value:.6g}" if isinstance(value, float) else value
+        print(f"{key},{v},{ref}")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,8 +22,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (cluster_sim, fig_cluster, fig_exec_mem, fig_policy,
-                   fig_workload, kernel_bench, policy_overhead, policy_sweep,
-                   roofline, scaleout, trace_gen)
+                   fig_workload, forecast, kernel_bench, policy_overhead,
+                   policy_sweep, roofline, scaleout, trace_gen)
     modules = {
         "fig_workload": lambda: fig_workload.run(),
         "fig_exec_mem": lambda: fig_exec_mem.run(),
@@ -34,6 +34,7 @@ def main() -> None:
         "policy_sweep": lambda: policy_sweep.run(),
         "scaleout": lambda: scaleout.run(),
         "trace_gen": lambda: trace_gen.run(),
+        "forecast": lambda: forecast.run(),
         "kernel_bench": lambda: kernel_bench.run(),
         "roofline": lambda: roofline.run(),
     }

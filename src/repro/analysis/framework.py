@@ -102,7 +102,8 @@ class LintConfig:
         r"(?:^|_)(?:t|ts|time|times|timestamp|timestamps)(?:64|_abs|_min)?$"
     # determinism: packages whose outputs must be seed-deterministic.
     determinism_scopes: Tuple[str, ...] = (
-        "repro/core/", "repro/serving/", "repro/kernels/")
+        "repro/core/", "repro/serving/", "repro/kernels/",
+        "repro/forecast/")
     # determinism: np.random attributes that are fine (counter/seeded RNG
     # construction rather than global-state draws).
     rng_allowed: Tuple[str, ...] = (
@@ -121,6 +122,18 @@ class LintConfig:
     )
     # pytree-completeness: the registration helper every spec family uses.
     register_helpers: Tuple[str, ...] = ("_register_pytree",)
+    # conformance-coverage: per-module public entry points that must appear
+    # (as calls) in some conformance test file.
+    conformance_entry_points: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
+        ("repro/core/experiment.py", ("run", "sweep")),
+        ("repro/serving/cluster_vector.py", ("run_cluster",
+                                             "sweep_cluster")),
+        ("repro/forecast/arima_batched.py", ("fit_arima_grid",)),
+    )
+    # conformance-coverage: test tree location (resolved by walking up from
+    # the linted file; absolute paths are honored as-is) and file pattern.
+    conformance_test_dir: str = "tests"
+    conformance_test_glob: str = "test_*conformance*.py"
 
 
 @dataclasses.dataclass

@@ -4,6 +4,7 @@ from __future__ import annotations
 from typing import Dict, List
 
 from ..framework import Rule
+from .conformance import ConformanceCoverage
 from .decision_math import SingleSourceDecisionMath
 from .deprecations import DeprecationHygiene
 from .determinism import Nondeterminism
@@ -20,6 +21,7 @@ ALL_RULES: List[Rule] = [
     Nondeterminism(),
     PytreeCompleteness(),
     DeprecationHygiene(),
+    ConformanceCoverage(),
 ]
 
 _BY_NAME: Dict[str, Rule] = {r.name: r for r in ALL_RULES}

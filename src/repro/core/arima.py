@@ -1,195 +1,165 @@
-"""ARIMA(p, d, q) modeling for idle-time forecasting.
+"""Deprecation shims over :mod:`repro.forecast` (the batched ARIMA engine).
 
-The paper uses ``pmdarima.auto_arima`` to forecast the next idle time of
-applications whose ITs are mostly out of histogram bounds (very infrequently
-invoked). pmdarima is not available offline, so this is a self-contained
-implementation:
+This module used to hold the scalar scipy CSS ARIMA implementation the
+hybrid policy's out-of-bounds fallback was built on. That implementation
+is gone: fitting now runs through the vectorized grid fit in
+:mod:`repro.forecast.arima_batched` (one compiled program, ``vmap``-ed over
+apps and orders), and the streaming front-end lives in
+:mod:`repro.forecast.forecaster`. The scipy reference fit survives only as
+a test oracle (``tests/arima_oracle.py``) and a benchmark baseline
+(``benchmarks/forecast.py``); scipy itself is a dev-only dependency and is
+never imported from library code.
 
-  * differencing of order ``d``;
-  * ARMA(p, q) fitting by conditional sum of squares (CSS) — residuals are
-    computed recursively with zero pre-sample values and the squared-error
-    objective is minimized with a damped Gauss–Newton/Nelder–Mead hybrid
-    (scipy.optimize);
-  * auto-order search over a small grid (p, q <= 2, d <= 1) scored by AIC;
-  * one-step-ahead forecasting with un-differencing.
+Every public name here is a :class:`DeprecationWarning` shim:
 
-The paper notes the initial fit takes ~27 ms and updates ~5 ms; our refit is
-similar in spirit (full CSS refit after every observation, which is fine
-because ARIMA apps see invocations hours apart and the fit is off the
-critical path).
+  * :func:`fit_arima` / :func:`auto_arima` fit through the batched grid
+    (trailing ``MAX_OBS``-observation window, like the forecaster) and
+    re-package the selected order as a legacy :class:`ArimaModel`;
+  * :class:`ArimaForecaster` is an alias of
+    :class:`repro.forecast.forecaster.ArimaForecaster`.
+
+They will be removed after one deprecation cycle, exactly like the
+``simulate*`` entry points that ``repro.core.simulator`` tombstoned in
+PR 5 — import from :mod:`repro.forecast` instead.
 """
 from __future__ import annotations
 
-import itertools
 import math
-from typing import List, Optional, Sequence, Tuple
+import warnings
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
-from scipy import optimize
 
 __all__ = ["fit_arima", "ArimaModel", "ArimaForecaster", "auto_arima"]
 
-_MAX_OBS = 64  # rolling window — these apps have hours-long ITs; keep it small
+_MAX_OBS = 64  # re-exported legacy constant (== repro.forecast.MAX_OBS)
+
+_DEPRECATED = {
+    "fit_arima": "repro.forecast.fit_arima_grid",
+    "auto_arima": "repro.forecast.fit_window + select_order_step",
+    "ArimaModel": "repro.forecast.GridFit",
+    "ArimaForecaster": "repro.forecast.ArimaForecaster",
+}
 
 
-def _css_residuals(y: np.ndarray, ar: np.ndarray, ma: np.ndarray, c: float) -> np.ndarray:
-    """Conditional-sum-of-squares residuals for an ARMA(p,q) with intercept."""
-    p, q = len(ar), len(ma)
-    n = len(y)
-    e = np.zeros(n)
-    for t in range(n):
-        pred = c
-        for i in range(p):
-            if t - 1 - i >= 0:
-                pred += ar[i] * y[t - 1 - i]
-        for j in range(q):
-            if t - 1 - j >= 0:
-                pred += ma[j] * e[t - 1 - j]
-        e[t] = y[t] - pred
-    return e
+class _ArimaModel:
+    """Legacy fitted-model container (deprecated; see module docstring).
 
+    Reconstructed from one row/order of the batched :class:`GridFit`:
+    coefficients are the triangle-projected Gauss-Newton optimum, the
+    intercept keeps the legacy ``c = mu * (1 - sum(ar))`` convention, and
+    :meth:`forecast` replays the zero-pre-sample CSS recursion with the
+    stored coefficients on whatever series it is handed.
+    """
 
-class ArimaModel:
-    def __init__(self, order: Tuple[int, int, int], ar: np.ndarray, ma: np.ndarray,
-                 c: float, sigma2: float, aic: float):
+    def __init__(self, order: Tuple[int, int, int], ar: np.ndarray,
+                 ma: np.ndarray, c: float, sigma2: float, aic: float,
+                 mu: float = 0.0):
         self.order = order
         self.ar = ar
         self.ma = ma
         self.c = c
         self.sigma2 = sigma2
         self.aic = aic
+        self.mu = mu
 
     def forecast(self, y_orig: Sequence[float]) -> float:
-        """One-step-ahead forecast given the original (undifferenced) series."""
+        """One-step-ahead forecast given the original (undifferenced)
+        series — the centered-series recursion the batched fit uses."""
         p, d, q = self.order
-        y = np.asarray(y_orig, float)
+        if d > 1:
+            raise NotImplementedError("d > 1 not supported")
+        y = np.asarray(y_orig, float)[-_MAX_OBS:]
         w = np.diff(y, n=d) if d > 0 else y
-        e = _css_residuals(w, self.ar, self.ma, self.c)
-        pred = self.c
-        for i in range(p):
-            if len(w) - 1 - i >= 0:
-                pred += self.ar[i] * w[len(w) - 1 - i]
-        for j in range(q):
-            if len(e) - 1 - j >= 0:
-                pred += self.ma[j] * e[len(e) - 1 - j]
-        # Un-difference: forecast of y_{n+1} = pred + sum of last values.
-        if d == 0:
-            return float(pred)
-        if d == 1:
-            return float(y[-1] + pred)
-        # general d via cumulative reconstruction
-        tail = y.copy()
-        for _ in range(d):
-            tail = np.diff(tail)
-        raise NotImplementedError("d > 1 not supported")
+        wc = w - self.mu
+        ar = np.zeros(2)
+        ar[:len(self.ar)] = self.ar
+        ma = np.zeros(2)
+        ma[:len(self.ma)] = self.ma
+        w1 = w2 = e1 = e2 = 0.0
+        for x in wc:
+            e = x - (ar[0] * w1 + ar[1] * w2 + ma[0] * e1 + ma[1] * e2)
+            w1, w2 = x, w1
+            e1, e2 = e, e1
+        pred_w = self.mu + ar[0] * w1 + ar[1] * w2 + ma[0] * e1 + ma[1] * e2
+        return float(y[-1] + pred_w) if d == 1 else float(pred_w)
 
 
-def fit_arima(y: Sequence[float], order: Tuple[int, int, int]) -> Optional[ArimaModel]:
-    """CSS fit of ARIMA(p,d,q); returns None if the series is too short."""
-    p, d, q = order
-    y = np.asarray(y, float)
-    if len(y) < d + max(p, q) + 2:
+def _model_from_fit(fit, row: int, idx: int) -> Optional[_ArimaModel]:
+    from ..forecast.arima_batched import ORDER_GRID
+
+    if not bool(fit.valid[row, idx]):
         return None
-    w = np.diff(y, n=d) if d > 0 else y.copy()
-    n = len(w)
-    if n < p + q + 1:
-        return None
-
-    # Fit on the centered series (CSS is far better conditioned this way);
-    # the intercept is then c = mean * (1 - sum(ar)).
-    mu = float(np.mean(w))
-    wc = w - mu
-
-    def unpack(theta):
-        return theta[:p], theta[p:p + q]
-
-    def objective(theta):
-        ar, ma = unpack(theta)
-        # soft stationarity/invertibility guard
-        if np.any(np.abs(ar) > 1.5) or np.any(np.abs(ma) > 1.5):
-            return 1e12
-        e = _css_residuals(wc, ar, ma, 0.0)
-        return float(np.sum(e * e))
-
-    x0 = np.zeros(p + q)
-    if p + q > 0:
-        res = optimize.minimize(objective, x0, method="Nelder-Mead",
-                                options={"maxiter": 300 * (p + q),
-                                         "xatol": 1e-5, "fatol": 1e-8})
-        theta = res.x
-    else:
-        theta = x0
-    ar, ma = unpack(theta)
-    c = mu * (1.0 - float(np.sum(ar)))
-    sse = objective(theta)
-    sse = max(sse, 1e-12)
-    sigma2 = sse / n
-    k = p + q + 1
-    aic = n * math.log(sigma2) + 2 * k
-    return ArimaModel(order, np.asarray(ar), np.asarray(ma), float(c), sigma2, aic)
+    p, d, q = ORDER_GRID[idx]
+    coef = np.asarray(fit.coef[row, idx], float)
+    ar = coef[:2][:p]
+    ma = coef[2:][:q]
+    mu = float(fit.mu[row, idx])
+    aic = float(fit.aic[row, idx])
+    return _ArimaModel((p, d, q), ar, ma, mu * (1.0 - float(np.sum(ar))),
+                       math.nan, aic, mu=mu)
 
 
-def auto_arima(y: Sequence[float], max_p: int = 2, max_d: int = 1,
-               max_q: int = 2) -> Optional[ArimaModel]:
-    """Small-grid AIC search mirroring pmdarima.auto_arima's role."""
-    best: Optional[ArimaModel] = None
-    for p, d, q in itertools.product(range(max_p + 1), range(max_d + 1), range(max_q + 1)):
-        if p == 0 and q == 0 and d == 0:
-            continue
-        m = fit_arima(y, (p, d, q))
-        if m is None or not math.isfinite(m.aic):
-            continue
-        if best is None or m.aic < best.aic:
-            best = m
-    return best
+def _fit_arima(y: Sequence[float],
+               order: Tuple[int, int, int]) -> Optional[_ArimaModel]:
+    """CSS fit of one ARIMA(p,d,q) order via the batched grid (deprecated).
 
-
-class ArimaForecaster:
-    """Rolling per-app forecaster: observe ITs, forecast the next one.
-
-    Refits (auto-order every ``refit_every`` observations, otherwise reuse the
-    last order) — mirroring the paper's 'build once (~27 ms), update (~5 ms)'
-    split.
+    Fits the trailing ``MAX_OBS`` observations — the same window contract
+    as the streaming forecaster. Returns ``None`` when the batched fit
+    marks the (series, order) pair unusable (too short, non-finite input,
+    zero variance).
     """
+    from ..forecast.arima_batched import ORDER_GRID, fit_window
 
-    def __init__(self, refit_every: int = 8):
-        self._obs: List[float] = []
-        self._model: Optional[ArimaModel] = None
-        self._refit_every = refit_every
-        self._since_auto = 0
+    p, d, q = (int(v) for v in order)
+    try:
+        idx = ORDER_GRID.index((p, d, q))
+    except ValueError:
+        raise ValueError(f"order {(p, d, q)} outside the supported grid "
+                         f"(p <= 2, d <= 1, q <= 2, not all zero)")
+    y = np.asarray(y, float)
+    fit = fit_window(y)
+    m = _model_from_fit(fit, 0, idx)
+    if m is not None:
+        # Invert the AIC definition for the legacy sigma2 field
+        # (aic = n*log(sigma2) + 2k over the differenced length).
+        n = min(len(y), _MAX_OBS) - d
+        m.sigma2 = math.exp((m.aic - 2.0 * (p + q + 1)) / max(n, 1))
+    return m
 
-    @property
-    def n_obs(self) -> int:
-        return len(self._obs)
 
-    def observe(self, it_minutes: float) -> None:
-        self._obs.append(float(it_minutes))
-        if len(self._obs) > _MAX_OBS:
-            self._obs = self._obs[-_MAX_OBS:]
-        self._model = None  # lazily refit on next forecast
+def _auto_arima(y: Sequence[float], max_p: int = 2, max_d: int = 1,
+                max_q: int = 2) -> Optional[_ArimaModel]:
+    """Small-grid AIC search via one batched grid fit (deprecated).
 
-    def forecast(self) -> Optional[float]:
-        if len(self._obs) < 3:
-            return None
-        if self._model is None:
-            self._since_auto += 1
-            if self._since_auto >= self._refit_every or self._model is None:
-                self._model = auto_arima(self._obs)
-                self._since_auto = 0
-        if self._model is None:
-            return None
-        try:
-            pred = self._model.forecast(self._obs)
-        except Exception:
-            return None
-        if not math.isfinite(pred):
-            return None
-        # An IT forecast below zero is meaningless; clamp to a small positive.
-        return max(pred, 0.5)
+    First-wins argmin over the valid grid entries within the requested
+    order bounds — the same tie-breaking as the shared
+    :func:`repro.forecast.select_order_step`.
+    """
+    from ..forecast.arima_batched import ORDER_GRID, fit_window
 
-    def state_dict(self) -> dict:
-        return {"obs": list(self._obs)}
+    fit = fit_window(np.asarray(y, float))
+    best: Optional[int] = None
+    best_aic = math.inf
+    for i, (p, d, q) in enumerate(ORDER_GRID):
+        if p > max_p or d > max_d or q > max_q:
+            continue
+        if bool(fit.valid[0, i]) and float(fit.aic[0, i]) < best_aic:
+            best = i
+            best_aic = float(fit.aic[0, i])
+    return None if best is None else _model_from_fit(fit, 0, best)
 
-    def load_state_dict(self, state: dict) -> None:
-        self._obs = [float(x) for x in state["obs"]][-_MAX_OBS:]
-        self._model = None
+
+def __getattr__(name: str):
+    if name in _DEPRECATED:
+        warnings.warn(
+            f"repro.core.arima.{name} is deprecated; use "
+            f"{_DEPRECATED[name]} (repro.core.arima is now a shim over "
+            f"the batched forecast subsystem and will be removed)",
+            DeprecationWarning, stacklevel=2)
+        if name == "ArimaForecaster":
+            from ..forecast.forecaster import ArimaForecaster
+            return ArimaForecaster
+        return {"fit_arima": _fit_arima, "auto_arima": _auto_arima,
+                "ArimaModel": _ArimaModel}[name]
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -70,16 +70,17 @@ import numpy as np
 
 from .histogram import HistogramConfig
 from .policy import (FixedKeepAlivePolicy, HybridConfig, HybridHistogramPolicy,
-                     NoUnloadingPolicy, Policy)
+                     NoUnloadingPolicy, Policy, SpesConfig, SpesPolicy)
 from .simulator import (SimResult, _run_fixed_sweep, _run_hybrid_sweep,
-                        _simulate_hybrid_batch_reference, simulate_scalar)
+                        _run_spes_sweep, _simulate_hybrid_batch_reference,
+                        simulate_scalar)
 from .workload import Trace
 from .workload_spec import WorkloadSpec, _register_pytree
 
 __all__ = [
     "ENGINES", "PolicySpec", "FixedSpec", "NoUnloadSpec", "HybridSpec",
-    "EngineOptions", "SweepResult", "SweepGrid", "as_spec", "as_trace",
-    "run", "sweep",
+    "SpesSpec", "EngineOptions", "SweepResult", "SweepGrid", "as_spec",
+    "as_trace", "run", "sweep",
 ]
 
 ENGINES = ("auto", "scalar", "fused", "pallas", "reference")
@@ -180,12 +181,53 @@ class HybridSpec:
         return HybridHistogramPolicy(self.to_config())
 
 
+@dataclasses.dataclass(frozen=True)
+class SpesSpec:
+    """SPES-style next-idle predictor policy, flattened to its knobs.
+
+    A pure forecast policy (no histogram): a streaming exponentially-
+    weighted point forecast of each app's next idle interval, with a
+    confidence band that widens with the forecast residual variance —
+    mapped to (prewarm, keep-alive) windows through the same
+    ``policy_math`` bound helpers as every other family. Mirrors
+    :class:`repro.core.policy.SpesConfig` field-for-field.
+    """
+    alpha: float = 0.3               # EW smoothing weight per observation
+    band_margin: float = 0.10        # relative half-band around the forecast
+    band_sigma: float = 1.0          # residual-std multiplier for the band
+    min_samples: int = 4             # ITs before the forecast governs
+    standard_keep_alive: float = 240.0   # fallback until warmed up
+    label: Optional[str] = None
+
+    @property
+    def name(self) -> str:
+        return self.label or f"spes-{self.alpha:g}"
+
+    def to_config(self) -> SpesConfig:
+        return SpesConfig(
+            alpha=float(self.alpha), band_margin=float(self.band_margin),
+            band_sigma=float(self.band_sigma),
+            min_samples=int(self.min_samples),
+            standard_keep_alive=float(self.standard_keep_alive))
+
+    @classmethod
+    def from_config(cls, cfg: SpesConfig,
+                    label: Optional[str] = None) -> "SpesSpec":
+        return cls(alpha=cfg.alpha, band_margin=cfg.band_margin,
+                   band_sigma=cfg.band_sigma, min_samples=cfg.min_samples,
+                   standard_keep_alive=cfg.standard_keep_alive, label=label)
+
+    def build(self) -> SpesPolicy:
+        return SpesPolicy(self.to_config())
+
+
 _register_pytree(FixedSpec, meta=("label",))
 _register_pytree(NoUnloadSpec, meta=("label",))
 _register_pytree(HybridSpec, meta=("use_arima", "label"))
+_register_pytree(SpesSpec, meta=("label",))
 
-PolicySpec = Union[FixedSpec, NoUnloadSpec, HybridSpec]
-_SPEC_TYPES = (FixedSpec, NoUnloadSpec, HybridSpec)
+PolicySpec = Union[FixedSpec, NoUnloadSpec, HybridSpec, SpesSpec]
+_SPEC_TYPES = (FixedSpec, NoUnloadSpec, HybridSpec, SpesSpec)
 
 
 def as_spec(obj) -> PolicySpec:
@@ -202,14 +244,18 @@ def as_spec(obj) -> PolicySpec:
         return HybridSpec.from_config(obj)
     if isinstance(obj, HybridHistogramPolicy):
         return HybridSpec.from_config(obj.cfg)
+    if isinstance(obj, SpesConfig):
+        return SpesSpec.from_config(obj)
+    if isinstance(obj, SpesPolicy):
+        return SpesSpec.from_config(obj.cfg)
     if isinstance(obj, FixedKeepAlivePolicy):
         return FixedSpec(obj.keep_alive)
     if isinstance(obj, NoUnloadingPolicy):
         return NoUnloadSpec()
     raise TypeError(
         f"cannot express {type(obj).__name__} as a PolicySpec; build a "
-        f"FixedSpec/NoUnloadSpec/HybridSpec, or use simulate_scalar for "
-        f"arbitrary Policy objects")
+        f"FixedSpec/NoUnloadSpec/HybridSpec/SpesSpec, or use "
+        f"simulate_scalar for arbitrary Policy objects")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -365,6 +411,8 @@ def _sweep_one(trace: Trace, specs: Sequence, eng: str,
                   if isinstance(sp, (FixedSpec, NoUnloadSpec))]
     hybrid_idx = [s for s, sp in enumerate(specs)
                   if isinstance(sp, HybridSpec)]
+    spes_idx = [s for s, sp in enumerate(specs)
+                if isinstance(sp, SpesSpec)]
 
     # The trace is padded ONCE for every family and config (list-backed
     # traces rebuild the padded arrays on each to_padded call).
@@ -390,7 +438,15 @@ def _sweep_one(trace: Trace, specs: Sequence, eng: str,
                 interpret=opts.interpret, tile_apps=opts.tile_apps,
                 padded=padded, devices=opts.devices)
             fill(hybrid_idx, out)
-    assert inv is not None  # every spec belongs to one of the two families
+    if spes_idx:
+        # Like the fixed family: no per-bin state, and the float64 fused
+        # scan is already oracle-exact, so "pallas"/"reference" alias it.
+        out = _run_spes_sweep(
+            trace, [specs[s].to_config() for s in spes_idx],
+            opts.include_trailing, app_chunk=opts.app_chunk,
+            padded=padded, devices=opts.devices)
+        fill(spes_idx, out)
+    assert inv is not None  # every spec belongs to one of the families
     return SweepResult(specs, eng, cold, inv, waste, pre, keep)
 
 

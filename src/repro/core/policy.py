@@ -42,7 +42,7 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from . import policy_math
-from .arima import ArimaForecaster
+from ..forecast.forecaster import ArimaForecaster
 from .histogram import AppHistogram, HistogramConfig
 
 __all__ = [
@@ -52,6 +52,8 @@ __all__ = [
     "NoUnloadingPolicy",
     "HybridConfig",
     "HybridHistogramPolicy",
+    "SpesConfig",
+    "SpesPolicy",
     "is_warm",
     "loaded_idle_time",
 ]
@@ -129,6 +131,91 @@ class HybridConfig:
     def standard_keep_alive(self) -> float:
         # Paper: fall back to prewarm=0, keep-alive = histogram range.
         return self.histogram.range_minutes
+
+
+@dataclasses.dataclass(frozen=True)
+class SpesConfig:
+    """Knobs of the SPES-style next-idle predictor policy.
+
+    A streaming point forecast of each app's next idle interval
+    (exponentially-weighted mean of observed ITs) with a confidence band
+    that widens with the EW residual variance — the paper's §4.3 idea of
+    pre-warming just before the predicted arrival, without the histogram
+    machinery: regular apps earn tight (prewarm, keep-alive) windows,
+    erratic apps keep a wide net.
+    """
+    alpha: float = 0.3               # EW smoothing weight per observation
+    band_margin: float = 0.10        # relative half-band around the forecast
+    band_sigma: float = 1.0          # residual-std multiplier for the band
+    min_samples: int = 4             # ITs before the forecast governs
+    standard_keep_alive: float = 240.0   # fallback until warmed up
+
+
+class SpesPolicy(Policy):
+    """SPES-style next-idle predictor (scalar control-plane path).
+
+    State per app is the float32 triple ``(mean, var, n_obs)`` maintained
+    by :func:`repro.core.policy_math.spes_update`; windows come from
+    :func:`repro.core.policy_math.spes_window_from_counts` — the same
+    single-source helpers the vectorized sweep engines scan, so verdicts
+    are bit-identical across engines.
+    """
+
+    def __init__(self, cfg: SpesConfig = SpesConfig()):
+        self.cfg = cfg
+        self.name = f"spes-{cfg.alpha:g}"
+        self._knobs = policy_math.SpesStepConfig.from_host(
+            alpha=cfg.alpha, band_margin=cfg.band_margin,
+            band_sigma=cfg.band_sigma, min_samples=cfg.min_samples,
+            standard_keep=cfg.standard_keep_alive)
+        self._state: Dict[str, Tuple[np.float32, np.float32, int]] = {}
+        self._windows: Dict[str, PolicyWindows] = {}
+
+    def _standard(self) -> PolicyWindows:
+        return PolicyWindows(0.0, float(self.cfg.standard_keep_alive))
+
+    def windows(self, app_id: str) -> PolicyWindows:
+        w = self._windows.get(app_id)
+        return w if w is not None else self._standard()
+
+    def on_invocation(self, app_id: str, idle_time: Optional[float]) -> PolicyWindows:
+        k = self._knobs
+        mean, var, n_obs = self._state.get(
+            app_id, (np.float32(0.0), np.float32(0.0), 0))
+        if idle_time is not None and idle_time >= 0:
+            mean, var, n_obs = policy_math.spes_update(
+                # repro-lint: ignore[x64-discipline] -- idle_time is an
+                # inter-arrival gap, not an absolute clock; the single f32
+                # quantization IS the cross-engine decision contract
+                mean, var, n_obs, np.float32(idle_time), True,
+                k.alpha, k.om_alpha)
+            self._state[app_id] = (np.float32(mean), np.float32(var),
+                                   int(n_obs))
+        lo, hi = policy_math.spes_window_from_counts(
+            mean, var, n_obs, k.min_samples, k.band_margin, k.band_sigma,
+            k.standard_keep)
+        # keep-alive as the float64 bound difference — exactly how the
+        # engines' _absolute_results recovers it.
+        w = PolicyWindows(float(lo), float(hi) - float(lo))
+        self._windows[app_id] = w
+        return w
+
+    # -- checkpointing -------------------------------------------------------
+
+    def state_dict(self) -> dict:
+        return {
+            "cfg": dataclasses.asdict(self.cfg),
+            "state": {k: (float(m), float(v), int(n))
+                      for k, (m, v, n) in self._state.items()},
+            "windows": {k: (w.prewarm, w.keep_alive)
+                        for k, w in self._windows.items()},
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        for k, (m, v, n) in state.get("state", {}).items():
+            self._state[k] = (np.float32(m), np.float32(v), int(n))
+        for k, (p, ka) in state.get("windows", {}).items():
+            self._windows[k] = PolicyWindows(p, ka)
 
 
 class HybridHistogramPolicy(Policy):

@@ -107,6 +107,10 @@ __all__ = [
     "use_histogram_gate_from_cv",
     "oob_heavy",
     "arima_window",
+    "SpesStepConfig",
+    "spes_update",
+    "spes_window_from_counts",
+    "fused_spes_step_math",
     "HybridStepConfig",
     "HybridSweepBlock",
     "SweepIdentities",
@@ -152,6 +156,14 @@ def _i32(x):
     if isinstance(x, (jax.Array, jax.core.Tracer)):
         return x.astype(jnp.int32)
     return np.int32(x)
+
+
+def _f64(x):
+    """float64 view of a value, host or traced (traced callers run under
+    x64 — every float64 engine scan does)."""
+    if isinstance(x, (jax.Array, jax.core.Tracer)):
+        return x.astype(jnp.float64)
+    return np.float64(x)
 
 
 # --------------------------------------------------------------------------
@@ -498,6 +510,129 @@ def arima_window(predicted_it: float, margin: float) -> Tuple[float, float]:
     """§4.3: (prewarm, keep_alive) around a forecast idle time — pre-warm
     just before the prediction, keep alive across a 2-margin band."""
     return predicted_it * (1.0 - margin), 2.0 * margin * predicted_it
+
+
+# --------------------------------------------------------------------------
+# SPES-style next-idle predictor (the PolicySpec predictor family)
+# --------------------------------------------------------------------------
+
+
+class SpesStepConfig(NamedTuple):
+    """One SPES-predictor configuration in the dtypes the decision layer
+    consumes. Leaves may be host scalars (the scalar policy) or traced
+    ``[S, 1]`` arrays broadcast against the app axis (the sweep config
+    axis), like :class:`HybridStepConfig`."""
+    alpha: object          # f32 — exponential smoothing weight
+    om_alpha: object       # f32 — (1 - alpha), rounded once on the host
+    band_margin: object    # f32 — relative half-band around the forecast
+    band_sigma: object     # f32 — residual-std multiplier widening the band
+    min_samples: object    # i32 — observed ITs before the forecast governs
+    standard_keep: object  # f32 — fallback keep-alive until warmed up
+
+    @classmethod
+    def from_host(cls, *, alpha: float, band_margin: float,
+                  band_sigma: float, min_samples: int,
+                  standard_keep: float) -> "SpesStepConfig":
+        return cls(alpha=np.float32(alpha), om_alpha=np.float32(1.0 - alpha),
+                   band_margin=np.float32(band_margin),
+                   band_sigma=np.float32(band_sigma),
+                   min_samples=np.int32(min_samples),
+                   standard_keep=np.float32(standard_keep))
+
+
+def spes_update(mean, var, n_obs, it32, active, alpha, om_alpha):
+    """One exponentially-weighted update of the next-idle forecast state.
+
+    State is ``(mean, var, n_obs)``: EW mean of the observed inter-arrival
+    times, EW variance of the one-step forecast residuals (West's update:
+    ``var' = (1 - a) * (var + a * err^2)``), and the observation count.
+    The carried state is always float32 — like the histogram decision
+    layer, the predictor state is a *decision* input, so every engine (the
+    float64 fused scan, the scalar control-plane policy) holds identical
+    values. The update itself is computed in float64 and rounded ONCE to
+    float32: a float32 op-by-op pipeline is not engine-invariant (XLA
+    freely contracts mul+add into FMA, numpy never does), while one wide
+    computation with a single final rounding agrees across fusion choices
+    except on the measure-zero float32 rounding boundary. The first
+    observation seeds ``mean`` directly with zero variance; ``active``
+    masks padding/first-event columns.
+    """
+    xp = _ns(mean, it32, active)
+    first = n_obs == 0
+    m, v = _f64(mean), _f64(var)
+    err = _f64(it32) - m
+    incr = _f64(alpha) * err
+    upd_mean = xp.where(first, _f64(it32), m + incr)
+    upd_var = xp.where(first, np.float64(0.0),
+                       _f64(om_alpha) * (v + err * incr))
+    new_mean = _f32(xp.where(active, upd_mean, m))
+    new_var = _f32(xp.where(active, upd_var, v))
+    return new_mean, new_var, n_obs + active
+
+
+def spes_window_from_counts(mean, var, n_obs, min_samples, band_margin,
+                            band_sigma, standard_keep):
+    """(load_at, unload_at) residency bounds from the forecast state.
+
+    The point forecast of the next idle time is the EW ``mean``; the
+    confidence band around it is a relative margin plus ``band_sigma``
+    residual standard deviations, so a perfectly regular app (var -> 0)
+    converges to a tight window while an erratic one keeps a wide net.
+    Below ``min_samples`` observations the standard keep-alive governs.
+    Computed in float64 from the float32 state and rounded once to float32
+    (the same FMA-invariance rationale as :func:`spes_update`); the
+    returned float32 bounds widen to float64 exactly, so verdicts agree
+    across engines.
+    """
+    xp = _ns(mean, var, n_obs)
+    m = _f64(mean)
+    half = _f64(band_margin) * m + _f64(band_sigma) * xp.sqrt(_f64(var))
+    load = xp.maximum(m - half, np.float64(0.0))
+    unload = xp.maximum(m + half, load)
+    ready = n_obs >= _i32(min_samples)
+    std_load, std_unload = standard_window_bounds(standard_keep)
+    return (xp.where(ready, _f32(load), std_load),
+            xp.where(ready, _f32(unload), std_unload))
+
+
+def fused_spes_step_math(t_now, prev_t, mean, var, n_obs, load_at,
+                         unload_at, cold, waste, *, cfg: SpesStepConfig):
+    """One fused SPES-predictor step: warm/cold + waste verdict under the
+    previously decided bounds, the EW forecast-state update, and the
+    banded window decision for the next gap.
+
+    Mirrors :func:`fused_hybrid_step_math`'s carry discipline: residency
+    *bounds* are carried in the engine's time dtype, the forecast state
+    stays float32, and the shared clock/observation count are
+    config-independent (``mean``/``var``/bounds broadcast against a
+    ``[S, 1]``-leaved ``cfg`` for the sweep engines).
+    """
+    wdtype = t_now.dtype
+    valid = jnp.isfinite(t_now)
+    first = ~jnp.isfinite(prev_t)
+    it = t_now - prev_t
+
+    # Verdict for the gap that just closed.
+    is_cold = valid & (first | ~warm_from_bounds(it, load_at, unload_at))
+    gap_waste = jnp.where(valid & ~first,
+                          idle_from_bounds(it, load_at, unload_at),
+                          jnp.zeros((), wdtype))
+
+    # Forecast-state update (float32 decision layer).
+    rec = valid & ~first
+    mean, var, n_obs = spes_update(mean, var, n_obs,
+                                   it.astype(jnp.float32), rec,
+                                   cfg.alpha, cfg.om_alpha)
+    new_load, new_unload = spes_window_from_counts(
+        mean, var, n_obs, cfg.min_samples, cfg.band_margin, cfg.band_sigma,
+        cfg.standard_keep)
+
+    # Windows decided now govern the next gap of apps that saw an event.
+    load_at = jnp.where(valid, new_load.astype(wdtype), load_at)
+    unload_at = jnp.where(valid, new_unload.astype(wdtype), unload_at)
+    prev_t = jnp.where(valid, t_now, prev_t)
+    return (prev_t, mean, var, n_obs, load_at, unload_at,
+            cold + is_cold, waste + gap_waste)
 
 
 # --------------------------------------------------------------------------

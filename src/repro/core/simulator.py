@@ -258,6 +258,127 @@ def _run_fixed_sweep(trace: Trace, keeps: Sequence[float],
                 final_keep_alive=keep)
 
 
+# --------------------------------------------------------------------------
+# Vectorized JAX engines — SPES predictor family
+# --------------------------------------------------------------------------
+
+
+def _spes_knobs(cfgs) -> policy_math.SpesStepConfig:
+    """Stack S predictor configs into traced [S, 1] knob columns.
+
+    Each config goes through ``SpesStepConfig.from_host`` first, so host
+    rounding (e.g. ``1 - alpha``) happens exactly once and the traced knobs
+    equal the scalar policy's by construction.
+    """
+    ks = [policy_math.SpesStepConfig.from_host(
+        alpha=c.alpha, band_margin=c.band_margin, band_sigma=c.band_sigma,
+        min_samples=c.min_samples, standard_keep=c.standard_keep_alive)
+        for c in cfgs]
+    col = lambda xs, dt: jnp.asarray(np.asarray(xs, dt)[:, None])
+    return policy_math.SpesStepConfig(
+        alpha=col([k.alpha for k in ks], np.float32),
+        om_alpha=col([k.om_alpha for k in ks], np.float32),
+        band_margin=col([k.band_margin for k in ks], np.float32),
+        band_sigma=col([k.band_sigma for k in ks], np.float32),
+        min_samples=col([k.min_samples for k in ks], np.int32),
+        standard_keep=col([k.standard_keep for k in ks], np.float32))
+
+
+@jax.jit
+def _spes_scan(times, knobs: policy_math.SpesStepConfig):
+    """Scan one event-count bucket for S stacked predictor configs.
+
+    times: [n, width]; knob leaves: [S, 1] (traced — a new grid point never
+    retraces). The forecast state is float32 regardless of the time dtype
+    (see ``policy_math.spes_update``); the clock and observation count are
+    config-independent. Trailing waste is left to the host
+    (``_absolute_results``), so the float32 rebased path shares this
+    program. Returns (cold [S,n], waste [S,n], last_t [n], load [S,n],
+    unload [S,n]).
+    """
+    n = times.shape[0]
+    S = knobs.alpha.shape[0]
+    tdtype = times.dtype
+    init = (
+        jnp.full((n,), -jnp.inf, tdtype),                  # shared clock
+        jnp.zeros((S, n), jnp.float32),                    # EW mean
+        jnp.zeros((S, n), jnp.float32),                    # EW residual var
+        jnp.zeros((n,), jnp.int32),                        # observations
+        jnp.zeros((S, n), tdtype),                         # load bound
+        jnp.broadcast_to(knobs.standard_keep.astype(tdtype), (S, n)),
+        jnp.zeros((S, n), jnp.int32),                      # cold
+        jnp.zeros((S, n), tdtype),                         # waste
+    )
+    step = lambda carry, t: (
+        policy_math.fused_spes_step_math(t, *carry, cfg=knobs), None)
+    carry, _ = jax.lax.scan(step, init, times.T)
+    (last_t, _, _, _, load, unload, cold, waste) = carry
+    return cold, waste, last_t, load, unload
+
+
+@partial(jax.jit, static_argnums=(2,))
+def _spes_scan_sharded(times, knobs: policy_math.SpesStepConfig, mesh):
+    """:func:`_spes_scan` partitioned along the app axis of ``mesh``.
+
+    The knob columns replicate; every output carries apps on its last
+    axis, so shard outputs concatenate in fixed device order —
+    bit-identical to the unsharded scan (no cross-app math in the step).
+    """
+    from ..distributed.scaleout import shard_along_apps
+    fn = lambda ts, ks: _spes_scan(ts, ks)
+    return shard_along_apps(fn, mesh, (0, None), -1)(times, knobs)
+
+
+def _run_spes_sweep(trace: Trace, cfgs, include_trailing: bool = True, *,
+                    app_chunk: Optional[int] = None,
+                    padded=None, devices=None) -> dict:
+    """S SPES predictor configs over one bucketed/chunked trace pass.
+
+    Always the float64 fused path (under x64): like the fixed family, this
+    family has no per-bin state, and the float32 decision layer
+    (``policy_math.spes_update`` rounds once from a float64 computation)
+    makes the scan oracle-exact — so the "pallas"/"reference" engines
+    alias it. ``devices`` shards each chunk's app rows like the other
+    sweep engines.
+    """
+    from ..distributed import scaleout
+    times, counts = padded if padded is not None else trace.to_padded()
+    S, n = len(cfgs), trace.n_apps
+    mesh = scaleout.mesh_for(devices)
+    ndev = 1 if mesh is None else mesh.devices.size
+    knobs = _spes_knobs(cfgs)
+    cold = np.zeros((S, n), np.int64)
+    waste = np.zeros((S, n), np.float64)
+    pre = np.zeros((S, n), np.float64)
+    keep = np.empty((S, n), np.float64)
+    for s, c in enumerate(cfgs):
+        keep[s, :] = c.standard_keep_alive   # zero-event rows: never scanned
+    duration = float(trace.duration_minutes)
+    if app_chunk is None:
+        chunk = max(DEFAULT_APP_CHUNK // max(S, 1), _MIN_AUTO_CHUNK)
+    else:
+        chunk = int(app_chunk)
+    with enable_x64():
+        for sel, sub in _chunked_buckets(times, counts, chunk):
+            sub = np.ascontiguousarray(sub, np.float64)
+            if mesh is None:
+                c, w, last_t, lo, ub = _spes_scan(jax.device_put(sub), knobs)
+            else:
+                sub = scaleout.pad_app_rows(sub, ndev)
+                dev = jax.device_put(sub, scaleout.app_sharding(mesh, 2))
+                c, w, last_t, lo, ub = _spes_scan_sharded(dev, knobs, mesh)
+            k = len(sel)
+            c, w, lo, ub = (np.asarray(x)[..., :k] for x in (c, w, lo, ub))
+            last_t = np.asarray(last_t)[:k]
+            t0 = np.zeros(k, np.float64)
+            cold[:, sel] = c
+            waste[:, sel], pre[:, sel], keep[:, sel] = _absolute_results(
+                w, last_t, lo, ub, t0, duration, include_trailing)
+    return dict(cold=cold, invocations=counts.astype(np.int64),
+                wasted_minutes=waste, final_prewarm=pre,
+                final_keep_alive=keep)
+
+
 def _buckets(times: np.ndarray, counts: np.ndarray):
     """Yield (app_index_array, trimmed_times) grouped by event count."""
     lo = 0
@@ -714,17 +835,21 @@ def _run_hybrid_sweep(trace: Trace, hybrids: Sequence[HybridConfig],
         with enable_x64():
             run_all()
 
-    # ARIMA post-pass: re-simulate each config's OOB-heavy apps with the
-    # full scalar policy (the time-series path cannot run inside a scan).
+    # Forecast post-pass: a forecaster cannot run inside the scan, so each
+    # config's OOB-heavy apps replay through the batched forecasting
+    # subsystem (one fused-step rescan + one grid ARIMA fit over every
+    # flagged (app, event) window — bit-identical to the scalar policy,
+    # see repro.forecast.replay).
     for s, h in enumerate(hybrids):
         if h.use_arima and oob_flags[s].any():
-            policy = HybridHistogramPolicy(h)
+            from ..forecast.replay import replay_oob_apps
             aidx = np.where(oob_flags[s])[0]
-            scalar = simulate_scalar(trace, policy, include_trailing, aidx)
-            cold[s, aidx] = scalar.cold[aidx]
-            waste[s, aidx] = scalar.wasted_minutes[aidx]
-            pre[s, aidx] = scalar.final_prewarm[aidx]
-            keep[s, aidx] = scalar.final_keep_alive[aidx]
+            out = replay_oob_apps(times, counts, duration, h, aidx,
+                                  include_trailing)
+            cold[s, aidx] = out["cold"]
+            waste[s, aidx] = out["wasted_minutes"]
+            pre[s, aidx] = out["final_prewarm"]
+            keep[s, aidx] = out["final_keep_alive"]
     return dict(cold=cold, invocations=counts.astype(np.int64),
                 wasted_minutes=waste, final_prewarm=pre,
                 final_keep_alive=keep)
@@ -839,13 +964,14 @@ def _simulate_hybrid_batch_reference(trace: Trace, hybrid: HybridConfig,
     result = SimResult(cold_parts, counts.astype(np.int64), waste_parts,
                        pre_parts, keep_parts)
     if hybrid.use_arima and oob_flags.any():
-        policy = HybridHistogramPolicy(hybrid)
+        from ..forecast.replay import replay_oob_apps
         arima_idx = np.where(oob_flags)[0]
-        scalar = simulate_scalar(trace, policy, include_trailing, arima_idx)
-        result.cold[arima_idx] = scalar.cold[arima_idx]
-        result.wasted_minutes[arima_idx] = scalar.wasted_minutes[arima_idx]
-        result.final_prewarm[arima_idx] = scalar.final_prewarm[arima_idx]
-        result.final_keep_alive[arima_idx] = scalar.final_keep_alive[arima_idx]
+        out = replay_oob_apps(times, counts, duration, hybrid, arima_idx,
+                              include_trailing)
+        result.cold[arima_idx] = out["cold"]
+        result.wasted_minutes[arima_idx] = out["wasted_minutes"]
+        result.final_prewarm[arima_idx] = out["final_prewarm"]
+        result.final_keep_alive[arima_idx] = out["final_keep_alive"]
     return result
 
 

@@ -1,0 +1,22 @@
+"""Batched time-series forecasting subsystem (PR 10).
+
+Layout:
+
+* :mod:`repro.forecast.arima_batched` — the vectorized fixed-order CSS
+  ARIMA fit: vmapped Levenberg/Gauss-Newton over (task, order-grid), AIC
+  scored in parallel, float32 everywhere.
+* :mod:`repro.forecast.forecaster` — the scalar streaming front-end
+  (:class:`ArimaForecaster`) plus the shared order-selection/cadence step.
+* :mod:`repro.forecast.replay` — vectorized replay of the hybrid policy's
+  per-event residency bounds with ARIMA overrides for OOB-heavy apps: the
+  batched replacement for the engines' per-app scipy post-pass.
+"""
+from .arima_batched import (GridFit, MAX_OBS, ORDER_GRID, fit_arima_grid,
+                            fit_window)
+from .forecaster import (ArimaForecaster, DEFAULT_REFIT_EVERY,
+                         select_order_step)
+
+__all__ = [
+    "ArimaForecaster", "DEFAULT_REFIT_EVERY", "GridFit", "MAX_OBS",
+    "ORDER_GRID", "fit_arima_grid", "fit_window", "select_order_step",
+]

@@ -1,0 +1,314 @@
+"""Batched fixed-order CSS ARIMA fitting (the vectorized forecast engine).
+
+The paper's hybrid policy falls back to an ARIMA forecast of the next idle
+time for apps whose ITs are mostly out of histogram bounds. The legacy
+implementation (``repro.core.arima``, now a deprecation shim) fit one app at
+a time with scipy's Nelder-Mead — the single remaining per-app Python loop
+in the pipeline. This module replaces it with a batched fit:
+
+  * every (series, order) pair is fit **independently and in parallel**: a
+    damped Gauss-Newton (Levenberg-Marquardt) minimization of the
+    conditional-sum-of-squares objective, ``vmap``-ed over a static
+    (p, d, q) order grid and again over the task axis;
+  * the residual recursion is a ``lax.scan`` over a fixed ``MAX_OBS``-wide
+    window with masked lag updates, so ragged series lengths ride one
+    compiled program;
+  * orders are scored by AIC in the same pass; order *selection* (and the
+    refit cadence) happens on the host — see
+    :func:`repro.forecast.forecaster.select_order_step` — so the scalar
+    oracle and the batched replay share one selection routine.
+
+Everything is computed in float32 regardless of the x64 regime: forecasts
+are *decisions*, and float32 keeps them bit-identical between the float64
+scalar oracle and the float32-capable engines (the same contract as
+``repro.core.policy_math``). The scalar path fits a [1, MAX_OBS] batch and
+the replay fits [chunk, MAX_OBS] batches through the same per-row program
+(``vmap`` adds a batch axis without changing per-row math);
+``tests/test_forecast.py`` pins the batch-size invariance and
+``tests/test_forecast_conformance.py`` pins the fit against the scipy
+test oracle.
+
+Stationarity/invertibility: after every Gauss-Newton step the AR and MA
+coefficient pairs are projected into the (slightly shrunken) stationary /
+invertible triangle ``{|c2| < 1, |c1| < 1 - c2}`` — unlike the legacy
+soft ``|coef| <= 1.5`` guard, fitted AR roots are guaranteed stable
+(property-tested in ``tests/test_forecast_property.py``).
+"""
+from __future__ import annotations
+
+import itertools
+from functools import partial
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "MAX_OBS", "ORDER_GRID", "GridFit", "fit_arima_grid", "fit_window",
+]
+
+#: Rolling observation window — ARIMA apps see invocations hours apart, so a
+#: small window tracks regime changes (same value as the legacy forecaster).
+MAX_OBS = 64
+
+#: The static order grid, in the legacy ``auto_arima`` enumeration order
+#: (AIC ties resolve to the earliest grid entry, like the old first-wins
+#: strict-improvement loop).
+ORDER_GRID: Tuple[Tuple[int, int, int], ...] = tuple(
+    (p, d, q)
+    for p, d, q in itertools.product(range(3), range(2), range(3))
+    if (p, d, q) != (0, 0, 0))
+
+_N_ORDERS = len(ORDER_GRID)
+_GN_ITERS = 24          # Levenberg-Marquardt iterations (fixed, branchless)
+_COEF_BOUND = 0.98      # stationarity/invertibility triangle shrink factor
+_SSE_FLOOR = 1e-12      # matches the legacy sigma2 floor
+
+# Host-side order-grid columns, reused by every jitted fit.
+_ORD_P = np.asarray([o[0] for o in ORDER_GRID], np.int32)
+_ORD_D = np.asarray([o[1] for o in ORDER_GRID], np.int32)
+_ORD_Q = np.asarray([o[2] for o in ORDER_GRID], np.int32)
+
+#: Batch rows are padded up to the smallest of these shapes so the expensive
+#: fit program compiles a handful of times, not once per ragged batch.
+_BATCH_BUCKETS = (1, 32, 256, 2048)
+_FIT_CHUNK = _BATCH_BUCKETS[-1]
+
+
+class GridFit(NamedTuple):
+    """Per-(task, order) fit results, host numpy.
+
+    ``aic``/``pred`` are float32 [B, n_orders]; ``valid`` marks fits that
+    are usable (long enough series, finite inputs, non-degenerate variance,
+    finite forecast). Invalid entries carry ``aic = +inf``. ``coef`` is
+    float32 [B, n_orders, 4] holding the projected ``(ar1, ar2, ma1, ma2)``
+    vector (inactive lags are exactly 0) and ``mu`` [B, n_orders] the mean
+    of the differenced series — together they reconstruct the fitted model
+    (the deprecation shim and the stationarity property tests read them).
+    """
+    aic: np.ndarray
+    pred: np.ndarray
+    valid: np.ndarray
+    coef: np.ndarray
+    mu: np.ndarray
+
+
+def _project_triangle(c1, c2):
+    """Project a (lag-1, lag-2) coefficient pair into the stationary (AR) /
+    invertible (MA) region ``{|c2| < 1, c2 + c1 < 1, c2 - c1 < 1}``,
+    shrunk by ``_COEF_BOUND`` so roots stay strictly outside the unit
+    circle."""
+    b = jnp.float32(_COEF_BOUND)
+    c2 = jnp.clip(c2, -b, b)
+    lim = b * (jnp.float32(1.0) - c2)
+    return jnp.clip(c1, -lim, lim), c2
+
+
+def _css_scan(wc, mask, theta):
+    """CSS residuals of an ARMA(<=2, <=2) on the centered series ``wc``.
+
+    Zero pre-sample convention (exactly the legacy recursion): lag values
+    before the first observation are 0. ``mask`` gates both the residual
+    and the lag shift, so after the scan the carry holds the *last valid*
+    (w, e) lags — the state the one-step forecast reads.
+    Returns (residuals [L], (w1, w2, e1, e2)).
+    """
+    ar1, ar2, ma1, ma2 = theta[0], theta[1], theta[2], theta[3]
+
+    def step(carry, x):
+        w1, w2, e1, e2 = carry
+        wct, mt = x
+        fit = ar1 * w1 + ar2 * w2 + ma1 * e1 + ma2 * e2
+        e = jnp.where(mt, wct - fit, jnp.float32(0.0))
+        new = (jnp.where(mt, wct, w1), jnp.where(mt, w1, w2),
+               jnp.where(mt, e, e1), jnp.where(mt, e1, e2))
+        return new, e
+
+    zero = jnp.float32(0.0)
+    carry, es = jax.lax.scan(step, (zero, zero, zero, zero), (wc, mask))
+    return es, carry
+
+
+def _fit_one(y, n, p, d, q):
+    """Fit one (series, order) pair; returns (aic, pred, valid) scalars.
+
+    ``y`` is [MAX_OBS] float32 (observations left-aligned, garbage beyond
+    ``n``); ``p``/``d``/``q`` are traced int32 scalars from the order grid,
+    expressed as coefficient masks so one program serves every order.
+    """
+    L = y.shape[0]
+    idx = jnp.arange(L, dtype=jnp.int32)
+    obs_mask = idx < n
+    y = jnp.where(obs_mask, y, jnp.float32(0.0))
+    finite_in = jnp.all(jnp.where(obs_mask, jnp.isfinite(y), True))
+
+    # Difference (d <= 1): w_t = y_{t+1} - y_t, valid length m = n - d.
+    use_diff = d == 1
+    w = jnp.where(use_diff, jnp.roll(y, -1) - y, y)
+    m = n - d
+    mask = idx < m
+    w = jnp.where(mask, w, jnp.float32(0.0))
+    mf = jnp.maximum(m.astype(jnp.float32), jnp.float32(1.0))
+    mu = jnp.sum(w) / mf
+    wc = jnp.where(mask, w - mu, jnp.float32(0.0))
+    sse0 = jnp.sum(wc * wc)
+
+    # Active-coefficient mask: theta = (ar1, ar2, ma1, ma2).
+    pmask = jnp.stack([p >= 1, p >= 2, q >= 1, q >= 2]).astype(jnp.float32)
+
+    def residuals(theta):
+        th = theta * pmask
+        a1, a2 = _project_triangle(th[0], th[1])
+        b1, b2 = _project_triangle(th[2], th[3])
+        return _css_scan(wc, mask, (a1, a2, b1, b2))
+
+    def sse_of(theta):
+        es, _ = residuals(theta)
+        return jnp.sum(es * es)
+
+    def lm_step(_, state):
+        theta, best_sse, lam = state
+        es, _ = residuals(theta)
+        jac = jax.jacfwd(lambda th: residuals(th)[0])(theta) * pmask[None, :]
+        g = jac.T @ es
+        h = jac.T @ jac
+        damp = lam * (jnp.diag(h) + jnp.float32(1e-6))
+        # Inactive coefficients get identity rows: delta stays 0 there.
+        a = h + jnp.diag(damp) + jnp.diag(jnp.float32(1.0) - pmask)
+        delta = jnp.linalg.solve(a, g)
+        cand = theta - delta
+        new_sse = sse_of(cand)
+        better = new_sse < best_sse
+        theta = jnp.where(better, cand, theta)
+        best_sse = jnp.where(better, new_sse, best_sse)
+        lam = jnp.where(better, lam * jnp.float32(0.3),
+                        lam * jnp.float32(4.0))
+        return theta, best_sse, jnp.clip(lam, 1e-8, 1e8)
+
+    # Two deterministic starts: zeros, and the lag-1 autocorrelation of the
+    # centered series (the standard moment init — CSS in the MA direction
+    # is flat around zero, so a zero start alone stalls on MA-heavy
+    # orders). Best SSE wins; both run branchlessly in one program.
+    r1_num = jnp.sum(wc * jnp.roll(wc, 1) * mask * jnp.roll(mask, 1))
+    r1 = jnp.clip(r1_num / jnp.maximum(sse0, jnp.float32(_SSE_FLOOR)),
+                  -0.9, 0.9)
+    zero = jnp.float32(0.0)
+    half = jnp.float32(0.5)
+    theta, sse = jnp.zeros(4, jnp.float32), sse0
+    for start in (jnp.zeros(4, jnp.float32),
+                  jnp.stack([r1, zero, r1, zero]),
+                  # Opposed-sign AR/MA pairs: mixed ARMA objectives have a
+                  # near-cancellation valley along ar ~ -ma that a single
+                  # start cannot cross.
+                  jnp.stack([half, zero, -half, zero]),
+                  jnp.stack([-half, zero, half, zero])):
+        th_s, sse_s, _ = jax.lax.fori_loop(
+            0, _GN_ITERS, lm_step, (start, sse_of(start),
+                                    jnp.float32(1e-2)))
+        take = sse_s < sse
+        theta = jnp.where(take, th_s, theta)
+        sse = jnp.where(take, sse_s, sse)
+
+    es, (w1, w2, e1, e2) = residuals(theta)
+    th = theta * pmask
+    a1, a2 = _project_triangle(th[0], th[1])
+    b1, b2 = _project_triangle(th[2], th[3])
+    coef = jnp.stack([a1, a2, b1, b2]) * pmask
+    pred_w = mu + a1 * w1 + a2 * w2 + b1 * e1 + b2 * e2
+    # Un-difference: the d=1 forecast predicts y_{n} = y_{n-1} + pred_w.
+    last = jnp.take(y, jnp.maximum(n - 1, 0))
+    pred = jnp.where(use_diff, last + pred_w, pred_w)
+
+    sse = jnp.maximum(sse, jnp.float32(_SSE_FLOOR))
+    k = (p + q + 1).astype(jnp.float32)
+    aic = mf * jnp.log(sse / mf) + jnp.float32(2.0) * k
+
+    long_enough = (n >= d + jnp.maximum(p, q) + 2) & (m >= p + q + 1)
+    # Zero variance (a constant series — the perfectly-periodic timer
+    # case) is not a failure: the SSE floor keeps the AIC finite and the
+    # forecast collapses to the window mean, exactly the legacy contract.
+    # Only too-short or non-finite inputs fall back to the standard
+    # keep-alive verdict.
+    valid = (long_enough & finite_in
+             & jnp.isfinite(pred) & jnp.isfinite(aic))
+    aic = jnp.where(valid, aic, jnp.float32(jnp.inf))
+    return aic, pred, valid, coef, mu
+
+
+@partial(jax.jit, static_argnums=())
+def _fit_grid(series, lengths):
+    """[B, MAX_OBS] x order grid -> (aic, pred, valid, coef, mu), batched
+    as [B, n_orders(, 4)]."""
+    over_orders = jax.vmap(_fit_one, in_axes=(None, None, 0, 0, 0))
+    over_tasks = jax.vmap(over_orders, in_axes=(0, 0, None, None, None))
+    return over_tasks(series, lengths,
+                      jnp.asarray(_ORD_P), jnp.asarray(_ORD_D),
+                      jnp.asarray(_ORD_Q))
+
+
+def _bucket(b: int) -> int:
+    for size in _BATCH_BUCKETS:
+        if b <= size:
+            return size
+    return _FIT_CHUNK
+
+
+def _as_rows(series, lengths) -> Tuple[np.ndarray, np.ndarray]:
+    rows = np.asarray(series, np.float32)
+    if rows.ndim != 2:
+        raise ValueError(f"series must be [batch, obs], got shape "
+                         f"{rows.shape}")
+    lens = np.asarray(lengths, np.int32)
+    if lens.shape != (rows.shape[0],):
+        raise ValueError("lengths must be one int per series row")
+    if rows.shape[1] > MAX_OBS:
+        raise ValueError(f"series wider than MAX_OBS={MAX_OBS}; pass the "
+                         f"trailing window")
+    if rows.shape[1] < MAX_OBS:
+        rows = np.pad(rows, ((0, 0), (0, MAX_OBS - rows.shape[1])))
+    return rows, np.minimum(lens, rows.shape[1])
+
+
+def fit_arima_grid(series, lengths) -> GridFit:
+    """Fit every series against the whole order grid, batched on device.
+
+    ``series`` is [B, <=MAX_OBS] float-like (rows left-aligned, anything
+    past ``lengths[b]`` ignored); returns a :class:`GridFit`. Batches are
+    chunked to ``_FIT_CHUNK`` rows and padded to a small set of bucket
+    shapes, so arbitrary batch sizes reuse a handful of compilations; rows
+    are computed independently, so results are bit-identical regardless of
+    batch size or padding.
+    """
+    rows, lens = _as_rows(series, lengths)
+    B = rows.shape[0]
+    aic = np.empty((B, _N_ORDERS), np.float32)
+    pred = np.empty((B, _N_ORDERS), np.float32)
+    valid = np.empty((B, _N_ORDERS), bool)
+    coef = np.empty((B, _N_ORDERS, 4), np.float32)
+    mu = np.empty((B, _N_ORDERS), np.float32)
+    for lo in range(0, B, _FIT_CHUNK):
+        chunk_rows = rows[lo:lo + _FIT_CHUNK]
+        chunk_lens = lens[lo:lo + _FIT_CHUNK]
+        bc = chunk_rows.shape[0]
+        pad = _bucket(bc) - bc
+        if pad:
+            chunk_rows = np.pad(chunk_rows, ((0, pad), (0, 0)))
+            chunk_lens = np.pad(chunk_lens, (0, pad))
+        a, p, v, c, m = _fit_grid(jnp.asarray(chunk_rows),
+                                  jnp.asarray(chunk_lens))
+        aic[lo:lo + bc] = np.asarray(a)[:bc]
+        pred[lo:lo + bc] = np.asarray(p)[:bc]
+        valid[lo:lo + bc] = np.asarray(v)[:bc]
+        coef[lo:lo + bc] = np.asarray(c)[:bc]
+        mu[lo:lo + bc] = np.asarray(m)[:bc]
+    return GridFit(aic=aic, pred=pred, valid=valid, coef=coef, mu=mu)
+
+
+def fit_window(obs: Sequence[float]) -> GridFit:
+    """Grid-fit one observation window (the scalar forecaster's call path —
+    the same program the batched replay runs, at batch size 1)."""
+    window = list(obs)[-MAX_OBS:]
+    row = np.zeros((1, MAX_OBS), np.float32)
+    row[0, :len(window)] = window
+    return fit_arima_grid(row, [len(window)])

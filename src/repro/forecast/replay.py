@@ -1,0 +1,263 @@
+"""Vectorized replay of the hybrid policy for OOB-heavy apps.
+
+The fused hybrid engines cannot run a forecaster inside their ``lax.scan``;
+historically any app whose out-of-bounds counter ever crossed the threshold
+was re-simulated through the *scalar* policy — a per-app, per-event Python
+loop with a scipy ARIMA refit at every step. This module is the batched
+replacement:
+
+  1. one chunked ``lax.scan`` of the shared fused hybrid step
+     (:func:`repro.core.policy_math.fused_hybrid_step_math`, float64)
+     yields every event's residency bounds *and* a per-event flag for
+     "the scalar policy would consult the forecaster here";
+  2. the flagged (app, event) observation windows are stacked into a single
+     batched grid fit (:func:`repro.forecast.arima_batched.fit_arima_grid`);
+  3. the forecaster's order-selection cadence is replayed per app on the
+     host (:func:`repro.forecast.forecaster.select_order_step` — the same
+     function the scalar :class:`~repro.forecast.forecaster.ArimaForecaster`
+     steps through), and accepted forecasts override the scanned bounds
+     through the same ``policy_math.arima_window`` / ``window_bounds``
+     helpers the scalar policy calls;
+  4. cold/waste/final-window verdicts are recomputed vectorized in float64
+     under the per-event bounds.
+
+Equivalence to the scalar oracle is structural, not numerical luck: at
+every event where the scalar policy does *not* take the ARIMA branch, its
+windows are exactly the fused step's windows (the PR 2 conformance
+contract), and at every event where it does, both sides run the identical
+fit + selection + window code. ``tests/test_forecast_conformance.py`` pins
+it anyway.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from ..core import policy_math
+from ..core.policy import HybridConfig
+from .arima_batched import MAX_OBS, fit_arima_grid
+from .forecaster import (DEFAULT_REFIT_EVERY, MIN_FORECAST_OBS,
+                         select_order_step)
+
+__all__ = ["hybrid_window_sequences", "replay_oob_apps"]
+
+
+@partial(jax.jit, static_argnums=(1,))
+def _branch_scan(times, cfg: policy_math.HybridStepConfig):
+    """Scan one chunk's event columns through the fused hybrid step.
+
+    Returns per-event (load, unload) residency bounds plus the per-event
+    "forecaster consulted" flag: enough recorded samples AND the OOB
+    counter heavy — the exact guard ``HybridHistogramPolicy._decide``
+    evaluates after its histogram update.
+    """
+    n = times.shape[0]
+    dt = times.dtype
+    init = (
+        jnp.full((n,), -jnp.inf, dt),
+        jnp.zeros((n, cfg.n_bins), jnp.int32),
+        jnp.zeros((n,), jnp.int32),
+        jnp.zeros((n,), dt),
+        jnp.zeros((n,), dt),
+        jnp.zeros((n,), dt),
+        jnp.full((n,), jnp.asarray(cfg.standard_keep, dt)),
+        jnp.zeros((n,), jnp.int32),
+        jnp.zeros((n,), dt),
+    )
+
+    def body(carry, t_col):
+        out = policy_math.fused_hybrid_step_math(
+            t_col, *carry, cfg=cfg, gather=True)
+        total = out[1][:, -1].astype(jnp.int32)
+        heavy = policy_math.oob_heavy(total, out[2], cfg.oob_threshold)
+        seen = (total + out[2]) >= cfg.min_samples
+        return out, (out[5], out[6], heavy & seen)
+
+    _, (load_seq, unload_seq, branch_seq) = jax.lax.scan(body, init, times.T)
+    return load_seq.T, unload_seq.T, branch_seq.T
+
+
+def _scan_window_sequences(times2d: np.ndarray, counts: np.ndarray,
+                           hybrid: HybridConfig, app_chunk: Optional[int]
+                           ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Fused-step (load, unload) bounds and branch flags for every event."""
+    from ..core.simulator import (DEFAULT_APP_CHUNK, _chunked_buckets,
+                                  _step_config_for)
+    n, m_ev = times2d.shape
+    la = np.zeros((n, m_ev))
+    ua = np.full((n, m_ev), float(hybrid.standard_keep_alive))
+    branch = np.zeros((n, m_ev), bool)
+    cfg = _step_config_for(hybrid)
+    chunk = DEFAULT_APP_CHUNK if app_chunk is None else int(app_chunk)
+    with enable_x64():
+        for sel, sub in _chunked_buckets(times2d, counts, chunk):
+            l_seq, u_seq, b_seq = _branch_scan(
+                jnp.asarray(sub, jnp.float64), cfg)
+            width = sub.shape[1]
+            la[sel, :width] = np.asarray(l_seq)
+            ua[sel, :width] = np.asarray(u_seq)
+            branch[sel, :width] = np.asarray(b_seq)
+    return la, ua, branch
+
+
+def _apply_forecast_overrides(times2d: np.ndarray, counts: np.ndarray,
+                              hybrid: HybridConfig, la: np.ndarray,
+                              ua: np.ndarray, branch: np.ndarray
+                              ) -> np.ndarray:
+    """Batched-ARIMA overrides of the scanned bounds, in place.
+
+    Returns ``last_keep`` [n]: the keep-alive of each app's final decided
+    window when that decision came from the forecaster, else NaN (final
+    keep-alives of non-override windows are the float64 bound difference,
+    exactly like every engine).
+    """
+    n = times2d.shape[0]
+    last_keep = np.full(n, np.nan)
+    if not hybrid.use_arima or not branch.any():
+        return last_keep
+    min_fit_obs = max(int(hybrid.arima_min_samples), MIN_FORECAST_OBS)
+
+    # Stage 1: stack every (app, event) forecaster-call window. The scalar
+    # forecaster sees the last MAX_OBS inter-arrival times *before* the
+    # decision event, i.e. the diffs of t[0..k] trimmed to the window.
+    rows: List[int] = []
+    events: List[List[int]] = []
+    windows: List[np.ndarray] = []
+    lens: List[int] = []
+    for r in np.nonzero(branch.any(axis=1))[0]:
+        m = int(counts[r])
+        its = np.diff(times2d[r, :m].astype(np.float64))
+        ks = [k for k in range(1, m)
+              if branch[r, k] and min(k, MAX_OBS) >= min_fit_obs]
+        if not ks:
+            continue
+        rows.append(int(r))
+        events.append(ks)
+        for k in ks:
+            w = its[max(0, k - MAX_OBS):k]
+            lens.append(len(w))
+            windows.append(w)
+    if not windows:
+        return last_keep
+
+    stacked = np.zeros((len(windows), MAX_OBS), np.float32)
+    for i, w in enumerate(windows):
+        stacked[i, :len(w)] = w
+    fit = fit_arima_grid(stacked, lens)
+
+    # Stage 2: replay each app's selection cadence over its call sequence
+    # (host-side and cheap — the device work happened once, above).
+    task = 0
+    for r, ks in zip(rows, events):
+        state = (None, 0)
+        last_event = int(counts[r]) - 1
+        for k in ks:
+            state, pred = select_order_step(
+                state, fit.aic[task], fit.valid[task], fit.pred[task],
+                DEFAULT_REFIT_EVERY)
+            task += 1
+            if pred is None or not (math.isfinite(pred) and pred > 0):
+                continue  # scanned standard bounds already in place
+            pw, ka = policy_math.arima_window(pred, hybrid.arima_margin)
+            lo, hi = policy_math.window_bounds(pw, ka)
+            la[r, k] = lo
+            ua[r, k] = hi
+            if k == last_event:
+                last_keep[r] = ka
+    return last_keep
+
+
+def hybrid_window_sequences(times2d: np.ndarray, counts: np.ndarray,
+                            hybrid: HybridConfig, *,
+                            app_chunk: Optional[int] = None
+                            ) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-event (load_at, unload_at) bounds for the given apps, float64.
+
+    ``times2d`` is a padded [n, M] event-time matrix (+inf padding, like
+    ``Trace.to_padded``); row k's bounds are the windows decided *at* event
+    k (they govern the following gap). This is the batched equivalent of
+    stepping ``HybridHistogramPolicy.on_invocation`` through every event —
+    forecaster path included — and is what the cluster engine's window
+    phase consumes for its OOB-heavy rows.
+    """
+    la, ua, branch = _scan_window_sequences(times2d, counts, hybrid,
+                                            app_chunk)
+    _apply_forecast_overrides(times2d, counts, hybrid, la, ua, branch)
+    return la, ua
+
+
+def replay_oob_apps(times2d: np.ndarray, counts: np.ndarray,
+                    duration: float, hybrid: HybridConfig,
+                    app_indices: np.ndarray, include_trailing: bool, *,
+                    app_chunk: Optional[int] = None) -> Dict[str, np.ndarray]:
+    """Re-simulate the flagged apps under the full (forecaster-capable)
+    hybrid policy, vectorized — the batched replacement for the engines'
+    per-app ``simulate_scalar`` ARIMA post-pass.
+
+    Returns per-app arrays aligned with ``app_indices``: cold counts,
+    wasted minutes, final prewarm, final keep-alive — bit-identical to
+    ``simulate_scalar(trace, HybridHistogramPolicy(hybrid), ...)`` on those
+    apps.
+    """
+    aidx = np.asarray(app_indices)
+    sub_t = times2d[aidx]
+    sub_c = counts[aidx].astype(np.int64)
+    la, ua, branch = _scan_window_sequences(sub_t, sub_c, hybrid, app_chunk)
+    last_keep = _apply_forecast_overrides(sub_t, sub_c, hybrid, la, ua,
+                                          branch)
+
+    k, m_ev = sub_t.shape
+    t64 = sub_t.astype(np.float64)
+    col = np.arange(m_ev)[None, :]
+    valid = col < sub_c[:, None]
+    has_events = sub_c > 0
+
+    # Verdict for the gap closing at event j uses the bounds decided at
+    # event j-1 (float64 throughout — identical IEEE ops to the scalar
+    # loop's python floats).
+    gap_valid = valid[:, 1:]
+    with np.errstate(invalid="ignore"):   # inf - inf on padding columns
+        it = t64[:, 1:] - t64[:, :-1]
+    it = np.where(gap_valid, it, 0.0)
+    prev_la, prev_ua = la[:, :-1], ua[:, :-1]
+    warm = policy_math.warm_from_bounds(it, prev_la, prev_ua)
+    cold = has_events.astype(np.int64) + np.sum(gap_valid & ~warm, axis=1)
+    contrib = np.where(gap_valid,
+                       policy_math.idle_from_bounds(it, prev_la, prev_ua),
+                       0.0)
+    # Accumulate in event order (a column loop, apps vectorized): float64
+    # addition is order-sensitive at the last ulp and the scalar oracle
+    # sums per event.
+    waste = np.zeros(k)
+    for j in range(contrib.shape[1]):
+        waste += contrib[:, j]
+
+    last = np.maximum(sub_c - 1, 0)
+    rows = np.arange(k)
+    final_la = np.where(has_events, la[rows, last], 0.0)
+    final_ua = np.where(has_events, ua[rows, last],
+                        float(hybrid.standard_keep_alive))
+    if include_trailing:
+        t_last = np.where(has_events, t64[rows, last], np.inf)
+        tail = duration - t_last
+        waste = waste + np.where(
+            has_events & (tail > 0),
+            policy_math.idle_from_bounds(np.where(np.isfinite(tail), tail,
+                                                  0.0),
+                                         final_la, final_ua),
+            0.0)
+    # Final windows: prewarm == load bound (all window families emit
+    # non-negative prewarm); keep-alive is the float64 bound difference,
+    # except when the last decision was a forecast — the scalar policy
+    # reports that keep-alive directly, and (pw + ka) - pw need not round
+    # back to ka.
+    final_keep = np.where(np.isnan(last_keep), final_ua - final_la,
+                          last_keep)
+    return dict(cold=cold, wasted_minutes=waste, final_prewarm=final_la,
+                final_keep_alive=final_keep)

@@ -66,8 +66,7 @@ from jax.experimental import enable_x64
 
 from ..core import policy_math
 from ..core.experiment import (FixedSpec, HybridSpec, NoUnloadSpec,
-                               PolicySpec, as_spec)
-from ..core.policy import HybridHistogramPolicy
+                               PolicySpec, SpesSpec, as_spec)
 from ..core.simulator import (DEFAULT_APP_CHUNK, _chunked_buckets,
                               _step_config_for)
 from ..core.workload import Trace
@@ -189,6 +188,42 @@ def _hybrid_windows_scan_sharded(e_min, cfg: policy_math.HybridStepConfig,
     return shard_along_apps(fn, mesh, (0,), 0)(e_min)
 
 
+@jax.jit
+def _spes_windows_scan(e_min, knobs: policy_math.SpesStepConfig):
+    """Scan the fused SPES-predictor step over one chunk's end-time
+    columns, emitting the residency bounds decided *at* each event (knob
+    leaves are [1, 1] columns; the config axis is squeezed away)."""
+    n = e_min.shape[0]
+    dt = e_min.dtype
+    init = (
+        jnp.full((n,), -jnp.inf, dt),                       # prev end time
+        jnp.zeros((1, n), jnp.float32),                     # EW mean
+        jnp.zeros((1, n), jnp.float32),                     # EW residual var
+        jnp.zeros((n,), jnp.int32),                         # observations
+        jnp.zeros((1, n), dt),                              # load bound
+        jnp.broadcast_to(knobs.standard_keep.astype(dt), (1, n)),
+        jnp.zeros((1, n), jnp.int32),                       # cold (unused)
+        jnp.zeros((1, n), dt),                              # waste (unused)
+    )
+
+    def body(carry, t_col):
+        out = policy_math.fused_spes_step_math(t_col, *carry, cfg=knobs)
+        return out, (out[4][0], out[5][0])
+
+    _, (load_seq, unload_seq) = jax.lax.scan(body, init, e_min.T)
+    return load_seq.T, unload_seq.T
+
+
+@partial(jax.jit, static_argnums=(2,))
+def _spes_windows_scan_sharded(e_min, knobs: policy_math.SpesStepConfig,
+                               mesh):
+    """:func:`_spes_windows_scan` partitioned along the app axis of
+    ``mesh`` (knobs replicate; outputs carry apps on axis 0)."""
+    from ..distributed.scaleout import shard_along_apps
+    fn = lambda ts, ks: _spes_windows_scan(ts, ks)
+    return shard_along_apps(fn, mesh, (0, None), 0)(e_min, knobs)
+
+
 def _policy_windows(table: AppTable, spec: PolicySpec, e_min2d: np.ndarray,
                     counts: np.ndarray, app_chunk: int, devices=None):
     """(load_at, unload_at) bounds [n, M] decided after each event.
@@ -207,11 +242,36 @@ def _policy_windows(table: AppTable, spec: PolicySpec, e_min2d: np.ndarray,
     if isinstance(spec, FixedSpec):
         ua[:] = float(spec.keep_alive)
         return la, ua
+    if isinstance(spec, SpesSpec):
+        from ..core.simulator import _spes_knobs
+        from ..distributed import scaleout
+        cfg = spec.to_config()
+        knobs = _spes_knobs([cfg])
+        mesh = scaleout.mesh_for(devices)
+        ua[:] = cfg.standard_keep_alive   # zero-event rows: never read
+        with enable_x64():
+            for sel, sub in _chunked_buckets(e_min2d, counts, app_chunk):
+                if mesh is None:
+                    la_seq, ua_seq = _spes_windows_scan(
+                        jnp.asarray(sub, jnp.float64), knobs)
+                else:
+                    padded = scaleout.pad_app_rows(
+                        np.ascontiguousarray(sub, np.float64),
+                        mesh.devices.size)
+                    la_seq, ua_seq = _spes_windows_scan_sharded(
+                        jax.device_put(padded,
+                                       scaleout.app_sharding(mesh, 2)),
+                        knobs, mesh)
+                k = len(sel)
+                width = sub.shape[1]
+                la[sel, :width] = np.asarray(la_seq)[:k]
+                ua[sel, :width] = np.asarray(ua_seq)[:k]
+        return la, ua
     if not isinstance(spec, HybridSpec):
         raise TypeError(
             f"the vectorized cluster engine needs a declarative PolicySpec "
-            f"(Fixed/NoUnload/Hybrid), got {type(spec).__name__}; arbitrary "
-            f"Policy objects run on engine='scalar'")
+            f"(Fixed/NoUnload/Hybrid/Spes), got {type(spec).__name__}; "
+            f"arbitrary Policy objects run on engine='scalar'")
 
     from ..distributed import scaleout
     hybrid = spec.to_config()
@@ -237,22 +297,20 @@ def _policy_windows(table: AppTable, spec: PolicySpec, e_min2d: np.ndarray,
             ua[sel, :width] = np.asarray(ua_seq)[:k]
             heavy[sel] = np.asarray(flag)[:k]
 
-    # ARIMA post-pass: the fused step carries no forecaster, so any app
+    # Forecast post-pass: the fused step carries no forecaster, so any app
     # whose OOB counter ever looked heavy (a superset of "the ARIMA branch
-    # was ever consulted") replays through the stateful scalar policy.
+    # was ever consulted") replays through the batched forecasting
+    # subsystem — one rescan plus one grid ARIMA fit over every flagged
+    # (app, event) window, bit-identical to stepping the stateful scalar
+    # policy through each event.
     if hybrid.use_arima and heavy.any():
-        pol = HybridHistogramPolicy(hybrid)
-        for i in np.nonzero(heavy)[0]:
-            app_id = table.app_id(int(i))
-            prev = None
-            for k in range(int(counts[i])):
-                e_k = float(e_min2d[i, k])
-                w = pol.on_invocation(app_id,
-                                      None if prev is None else e_k - prev)
-                lo, hi = policy_math.window_bounds(w.prewarm, w.keep_alive)
-                la[i, k] = lo
-                ua[i, k] = hi
-                prev = e_k
+        from ..forecast.replay import hybrid_window_sequences
+        rows = np.nonzero(heavy)[0]
+        la_r, ua_r = hybrid_window_sequences(
+            e_min2d[rows], counts[rows].astype(np.int64), hybrid,
+            app_chunk=app_chunk)
+        la[rows] = la_r
+        ua[rows] = ua_r
     return la, ua
 
 

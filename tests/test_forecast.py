@@ -1,0 +1,215 @@
+"""Unit tests for the batched forecasting subsystem (`repro.forecast`).
+
+Covers the batch-size/padding bit-invariance contract of the grid fit,
+the streaming forecaster front-end (including the ``state_dict``
+round-trip regression: the legacy class silently dropped the refit
+cadence), and the ``repro.core.arima`` deprecation shims.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.forecast import (ArimaForecaster, DEFAULT_REFIT_EVERY, MAX_OBS,
+                            ORDER_GRID, fit_arima_grid, fit_window)
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+
+
+def _series_bank(n=8, seed=7):
+    """Deterministic mix of AR(1), trends, periodic and noisy rows with
+    ragged lengths."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        length = int(rng.integers(4, MAX_OBS + 1))
+        kind = i % 4
+        if kind == 0:
+            y = [10.0]
+            for _ in range(length - 1):
+                y.append(0.7 * y[-1] + 3.0 + rng.normal(0, 0.5))
+            y = np.asarray(y)
+        elif kind == 1:
+            y = np.arange(length) * 2.5 + 5.0 + rng.normal(0, 0.1, length)
+        elif kind == 2:
+            y = 60.0 + 10.0 * np.sin(np.arange(length) * 0.7) \
+                + rng.normal(0, 1.0, length)
+        else:
+            y = rng.uniform(1.0, 500.0, length)
+        out.append(y.astype(np.float32))
+    return out
+
+
+def _pad_rows(series, width=MAX_OBS):
+    rows = np.zeros((len(series), width), np.float32)
+    lens = np.zeros(len(series), np.int32)
+    for i, y in enumerate(series):
+        rows[i, :len(y)] = y
+        lens[i] = len(y)
+    return rows, lens
+
+
+# --------------------------------------------------------------------------
+# Grid fit: batch-size / padding bit-invariance
+# --------------------------------------------------------------------------
+
+
+def test_fit_is_batch_size_invariant():
+    """Rows are fit independently: a [8, 64] batch and eight [1, 64]
+    batches produce bit-identical results across every GridFit field."""
+    series = _series_bank()
+    rows, lens = _pad_rows(series)
+    full = fit_arima_grid(rows, lens)
+    for i in range(len(series)):
+        single = fit_arima_grid(rows[i:i + 1], lens[i:i + 1])
+        for field in full._fields:
+            np.testing.assert_array_equal(
+                getattr(full, field)[i], getattr(single, field)[0],
+                err_msg=f"row {i} field {field}")
+
+
+def test_fit_is_padding_invariant():
+    """Narrow input rows pad to MAX_OBS internally: passing a [B, 40]
+    array equals passing the pre-padded [B, 64] array."""
+    series = [y[:40] for y in _series_bank(n=4, seed=11)]
+    narrow_rows, lens = _pad_rows(series, width=40)
+    wide_rows, _ = _pad_rows(series, width=MAX_OBS)
+    a = fit_arima_grid(narrow_rows, lens)
+    b = fit_arima_grid(wide_rows, lens)
+    for field in a._fields:
+        np.testing.assert_array_equal(getattr(a, field), getattr(b, field),
+                                      err_msg=field)
+
+
+def test_fit_input_validation():
+    with pytest.raises(ValueError, match="batch, obs"):
+        fit_arima_grid(np.zeros(8, np.float32), [8])
+    with pytest.raises(ValueError, match="one int per series row"):
+        fit_arima_grid(np.zeros((2, 8), np.float32), [8])
+    with pytest.raises(ValueError, match="MAX_OBS"):
+        fit_arima_grid(np.zeros((1, MAX_OBS + 1), np.float32), [MAX_OBS + 1])
+
+
+def test_fit_window_truncates_to_trailing_window():
+    long = list(np.linspace(1.0, 400.0, MAX_OBS + 20, dtype=np.float32))
+    a = fit_window(long)
+    b = fit_window(long[-MAX_OBS:])
+    np.testing.assert_array_equal(a.aic, b.aic)
+    np.testing.assert_array_equal(a.pred, b.pred)
+
+
+def test_grid_matches_legacy_enumeration():
+    assert len(ORDER_GRID) == 17
+    assert (0, 0, 0) not in ORDER_GRID
+    assert ORDER_GRID[0] == (0, 0, 1)
+    assert all(p <= 2 and d <= 1 and q <= 2 for p, d, q in ORDER_GRID)
+
+
+# --------------------------------------------------------------------------
+# Streaming forecaster
+# --------------------------------------------------------------------------
+
+
+def test_forecaster_abstains_below_min_obs():
+    f = ArimaForecaster()
+    assert f.forecast() is None
+    f.observe(100.0)
+    f.observe(101.0)
+    assert f.forecast() is None
+
+
+def test_forecaster_constant_series_predicts_the_constant():
+    f = ArimaForecaster()
+    for _ in range(12):
+        f.observe(300.0)
+    assert f.forecast() == pytest.approx(300.0, rel=0.01)
+
+
+def test_forecaster_rolls_obs_window():
+    f = ArimaForecaster()
+    for i in range(MAX_OBS + 10):
+        f.observe(float(i))
+    assert f.n_obs == MAX_OBS
+
+
+def test_state_dict_roundtrip_preserves_cadence():
+    """Regression: the legacy state_dict dropped everything but the
+    observations, so a restored forecaster re-selected its order on the
+    next call regardless of where the refit cadence stood. The restored
+    forecaster must now produce the *identical* forecast sequence."""
+    rng = np.random.default_rng(3)
+    a = ArimaForecaster(refit_every=3)
+    preds = []
+    for _ in range(7):
+        a.observe(float(rng.uniform(100.0, 400.0)))
+        preds.append(a.forecast())
+
+    state = a.state_dict()
+    assert state["refit_every"] == 3
+    assert state["since_auto"] == a._since_auto
+    assert state["order"] == a._order
+
+    b = ArimaForecaster()           # default cadence, then restored over
+    b.load_state_dict(state)
+    assert b._refit_every == 3
+
+    future = [float(rng.uniform(100.0, 400.0)) for _ in range(9)]
+    seq_a, seq_b = [], []
+    for x in future:
+        a.observe(x)
+        seq_a.append(a.forecast())
+        b.observe(x)
+        seq_b.append(b.forecast())
+    assert seq_a == seq_b
+
+
+def test_state_dict_accepts_legacy_obs_only_checkpoints():
+    f = ArimaForecaster(refit_every=5)
+    f.load_state_dict({"obs": [10.0, 20.0, 30.0, 40.0]})
+    assert f.n_obs == 4
+    assert f._refit_every == DEFAULT_REFIT_EVERY
+    assert f.forecast() is not None
+
+
+# --------------------------------------------------------------------------
+# repro.core.arima deprecation shims
+# --------------------------------------------------------------------------
+
+
+def test_core_arima_names_warn_and_still_work():
+    import repro.core.arima as legacy
+    with pytest.warns(DeprecationWarning, match="repro.forecast"):
+        fit_arima = legacy.fit_arima
+    with pytest.warns(DeprecationWarning, match="repro.forecast"):
+        auto_arima = legacy.auto_arima
+    with pytest.warns(DeprecationWarning, match="repro.forecast"):
+        forecaster_cls = legacy.ArimaForecaster
+    assert forecaster_cls is ArimaForecaster
+
+    y = np.arange(20, dtype=float) * 2.0 + 5.0
+    m = auto_arima(y)
+    assert m is not None
+    assert m.forecast(y) == pytest.approx(45.0, abs=3.0)
+    m1 = fit_arima(y, (1, 0, 0))
+    assert m1 is not None and len(m1.ar) == 1
+    with pytest.raises(ValueError, match="outside the supported grid"):
+        fit_arima(y, (5, 0, 0))
+    with pytest.raises(AttributeError, match="no attribute"):
+        legacy.not_a_thing
+
+
+def test_library_import_does_not_pull_scipy():
+    """scipy is a dev-only dependency: importing the policy stack, the
+    forecast subsystem, and even the deprecation shim module must not
+    import it (only the test oracle and the benchmark baseline may)."""
+    code = ("import sys; "
+            "import repro.forecast, repro.core.policy, repro.core.arima, "
+            "repro.core.experiment; "
+            "sys.exit(1 if 'scipy' in sys.modules else 0)")
+    env = dict(os.environ, PYTHONPATH=SRC)
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr

@@ -310,6 +310,86 @@ class TestDeprecations:
 
 
 # ---------------------------------------------------------------------------
+# Pass 7: conformance coverage
+# ---------------------------------------------------------------------------
+
+
+class TestConformanceCoverage:
+    RULE = "conformance-coverage"
+    ENTRY = ("def helper():\n"
+             "    pass\n"
+             "def launch(trace, spec):\n"
+             "    return helper()\n")
+
+    def config(self, tmp_path, names=("launch",)):
+        return LintConfig(
+            conformance_entry_points=(
+                ("repro/core/engine.py", tuple(names)),),
+            conformance_test_dir=str(tmp_path))
+
+    def test_uncovered_entry_point_flagged(self, tmp_path):
+        (tmp_path / "test_other_conformance.py").write_text(
+            "def test_something():\n    helper()\n")
+        found = lint(self.ENTRY, path="src/repro/core/engine.py",
+                     rules=[rule_by_name(self.RULE)],
+                     config=self.config(tmp_path))
+        assert rules_of(found) == [self.RULE]
+        assert "launch()" in found[0].message
+        # anchored at the def, not the module head
+        assert found[0].line == 3
+
+    def test_covered_entry_point_ok(self, tmp_path):
+        (tmp_path / "test_engine_conformance.py").write_text(
+            "def test_launch_matches_oracle():\n"
+            "    launch(trace, spec)\n")
+        assert lint(self.ENTRY, path="src/repro/core/engine.py",
+                    rules=[rule_by_name(self.RULE)],
+                    config=self.config(tmp_path)) == []
+
+    def test_mention_outside_conformance_glob_does_not_count(self, tmp_path):
+        (tmp_path / "test_engine.py").write_text("launch(trace, spec)\n")
+        found = lint(self.ENTRY, path="src/repro/core/engine.py",
+                     rules=[rule_by_name(self.RULE)],
+                     config=self.config(tmp_path))
+        assert rules_of(found) == [self.RULE]
+
+    def test_bare_name_without_call_does_not_count(self, tmp_path):
+        (tmp_path / "test_x_conformance.py").write_text(
+            "from repro.core.engine import launch\n")
+        found = lint(self.ENTRY, path="src/repro/core/engine.py",
+                     rules=[rule_by_name(self.RULE)],
+                     config=self.config(tmp_path))
+        assert rules_of(found) == [self.RULE]
+
+    def test_missing_test_dir_is_its_own_finding(self, tmp_path):
+        cfg = LintConfig(
+            conformance_entry_points=(
+                ("repro/core/engine.py", ("launch",)),),
+            conformance_test_dir=str(tmp_path / "nope"))
+        found = lint(self.ENTRY, path="src/repro/core/engine.py",
+                     rules=[rule_by_name(self.RULE)], config=cfg)
+        assert rules_of(found) == [self.RULE]
+        assert "cannot verify" in found[0].message
+
+    def test_other_modules_out_of_scope(self, tmp_path):
+        assert lint("def launch():\n    pass\n",
+                    path="src/repro/core/other.py",
+                    rules=[rule_by_name(self.RULE)],
+                    config=self.config(tmp_path)) == []
+
+    def test_default_entry_points_resolve_in_repo(self):
+        """The shipped defaults point at real files whose conformance
+        coverage the dogfood test enforces — catch table rot here."""
+        cfg = LintConfig()
+        for relkey, names in cfg.conformance_entry_points:
+            fp = os.path.join(SRC, *relkey.split("/"))
+            assert os.path.isfile(fp), relkey
+            src = open(fp, encoding="utf-8").read()
+            for name in names:
+                assert f"def {name}(" in src, (relkey, name)
+
+
+# ---------------------------------------------------------------------------
 # Framework semantics
 # ---------------------------------------------------------------------------
 
@@ -364,10 +444,11 @@ class TestFramework:
         assert rules_of(findings) == ["parse-error"]
 
     def test_rule_registry(self):
-        assert len(ALL_RULES) == 6
+        assert len(ALL_RULES) == 7
         assert {r.name for r in ALL_RULES} == {
             "single-source-decision-math", "x64-discipline", "tracer-leak",
-            "nondeterminism", "pytree-completeness", "deprecation-hygiene"}
+            "nondeterminism", "pytree-completeness", "deprecation-hygiene",
+            "conformance-coverage"}
         with pytest.raises(KeyError):
             rule_by_name("nope")
 
